@@ -1,0 +1,45 @@
+"""Table I benchmark: format conversions over the zoo — correctness of each
+lowering + conversion wall time + graph size deltas."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import execute, transforms
+from repro.core.formats import (UnsupportedLowering, qcdq_to_qonnx,
+                                qonnx_to_qcdq, qonnx_to_quantized_op)
+from repro.models import zoo
+
+
+def _maxdiff(g1, g2, shape):
+    x = np.random.RandomState(0).randn(*shape).astype(np.float32)
+    o1 = execute(g1, {"x": x})[g1.output_names[0]]
+    o2 = execute(g2, {g2.input_names[0]: x})[g2.output_names[0]]
+    return float(np.max(np.abs(np.asarray(o1) - np.asarray(o2))))
+
+
+def run() -> list[str]:
+    rows = []
+    for name in ["TFC-w2a2", "CNV-w2a2", "TFC-w1a1"]:
+        g = transforms.cleanup(zoo.ZOO[name]())
+        shape = (1, 784) if "TFC" in name else (1, 3, 32, 32)
+        for fmt, conv in [("qcdq", qonnx_to_qcdq),
+                          ("quantized_op", qonnx_to_quantized_op)]:
+            t0 = time.perf_counter()
+            try:
+                g2 = conv(g)
+                us = (time.perf_counter() - t0) * 1e6
+                diff = _maxdiff(g, g2, shape)
+                rows.append(f"formats/{name}->{fmt},{us:.0f},"
+                            f"maxdiff={diff:.2e};nodes={len(g2.nodes)}")
+                if fmt == "qcdq":
+                    g3 = qcdq_to_qonnx(g2)
+                    diff_rt = _maxdiff(g, g3, shape)
+                    rows.append(f"formats/{name}->qcdq->qonnx,0,"
+                                f"roundtrip_maxdiff={diff_rt:.2e}")
+            except UnsupportedLowering as e:
+                us = (time.perf_counter() - t0) * 1e6
+                rows.append(f"formats/{name}->{fmt},{us:.0f},"
+                            f"unsupported(TableI)={str(e)[:60]!r}")
+    return rows

@@ -1,0 +1,50 @@
+"""Kernel benchmarks: Pallas (interpret) vs jnp oracle, plus the analytic
+TPU-side byte-traffic derivation that feeds §Perf (int4 halves weight HBM)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, n=5):
+    fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn(*args).block_until_ready()
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def run() -> list[str]:
+    rows = []
+    m, k, n = 128, 1024, 1024
+    x = jax.random.normal(jax.random.PRNGKey(0), (m, k))
+    w8, s8 = ops.quantize_weights_int8(
+        jax.random.normal(jax.random.PRNGKey(1), (k, n)))
+    w4, s4 = ops.quantize_weights_int4(
+        jax.random.normal(jax.random.PRNGKey(1), (k, n)))
+
+    us_ref = _time(jax.jit(ref.quant_matmul_ref), x, w8, s8)
+    rows.append(f"kernels/quant_matmul_ref_jnp,{us_ref:.0f},m={m};k={k};n={n}")
+    us_k = _time(lambda *a: ops.quant_matmul(*a), x, w8, s8, n=2)
+    rows.append(f"kernels/quant_matmul_pallas_interpret,{us_k:.0f},"
+                "note=interpret-mode-python-loop;correctness-only")
+    us4 = _time(jax.jit(ref.quant_matmul_int4_ref), x, w4, s4)
+    rows.append(f"kernels/quant_matmul_int4_ref_jnp,{us4:.0f},"
+                f"hbm_weight_bytes_int8={k * n};hbm_weight_bytes_int4={k * n // 2}")
+
+    xq = jax.random.normal(jax.random.PRNGKey(2), (512, 1024))
+    us_q = _time(jax.jit(lambda a: ref.quant_dequant_ref(a, 0.05, 0.0, 8)), xq)
+    rows.append(f"kernels/quant_dequant_ref_jnp,{us_q:.0f},shape=512x1024")
+
+    # analytic decode-weight-traffic table (TPU v5e, per layer matmul)
+    for bits, div in (("bf16", 1), ("int8", 2), ("int4", 4)):
+        bytes_w = 2 * k * n // div
+        t_mem_us = bytes_w / 819e9 * 1e6
+        rows.append(f"kernels/decode_weight_traffic_{bits},{t_mem_us:.3f},"
+                    f"bytes={bytes_w};v5e_hbm=819GBps")
+    return rows

@@ -1,0 +1,36 @@
+"""Table III / Fig. 5 benchmark: model zoo cost accounting + execution."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import bops, execute, transforms
+from repro.models import zoo
+
+
+def run() -> list[str]:
+    rows = []
+    for name, build in zoo.ZOO.items():
+        g = transforms.infer_shapes(build())
+        c = bops.graph_cost(g)
+        first_conv = next((l for l in c.layers if "Conv" in l.name), None)
+        conv_net = "CNV" in name or "MobileNet" in name
+        macs = c.macs - (first_conv.macs if conv_net else 0)
+        # µs/call of the node-level executor (the paper's "slow but
+        # verifiable" engine) on a single input
+        shape = ((1, 784) if "TFC" in name else
+                 (1, 3, 32, 32) if "CNV" in name else (1, 3, 224, 224))
+        x = np.random.RandomState(0).randn(*shape).astype(np.float32)
+        execute(g, {"x": x})                       # warm
+        t0 = time.perf_counter()
+        n = 3 if "MobileNet" in name else 10
+        for _ in range(n):
+            execute(g, {"x": x})
+        us = (time.perf_counter() - t0) / n * 1e6
+        ref = zoo.TABLE3[name]
+        rows.append(
+            f"zoo/{name},{us:.0f},macs={macs};weights={c.weights};"
+            f"wbits={int(c.total_weight_bits)};bops_eq5={c.bops:.3g};"
+            f"table3_macs={ref[0]};match={abs(macs - ref[0]) / ref[0] < 2e-3}")
+    return rows

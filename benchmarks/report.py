@@ -1,0 +1,72 @@
+"""Regenerate the EXPERIMENTS.md data tables from experiments/dryrun/*.json.
+
+  PYTHONPATH=src python -m benchmarks.report            # print all tables
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks import roofline
+
+DRYRUN_DIR = roofline.DRYRUN_DIR
+
+
+def dryrun_table(quant="w8a8") -> str:
+    """§Dry-run: compile status + memory per device for every cell/mesh."""
+    rows = {}
+    for p in sorted(DRYRUN_DIR.glob(f"*_{quant}.json")):
+        rec = json.loads(p.read_text())
+        if rec.get("tag"):
+            continue
+        key = (rec["arch"], rec["shape"])
+        rows.setdefault(key, {})[rec["mesh"]] = rec
+    lines = ["| arch | shape | single-pod 16x16 | multi-pod 2x16x16 | "
+             "bytes/device (single) | collective bytes/step (single) |",
+             "|---|---|---|---|---|---|"]
+    for (arch, shape), d in sorted(rows.items()):
+        cells = []
+        for mesh in ("single", "multi"):
+            r = d.get(mesh)
+            if r is None:
+                cells.append("—")
+            elif r["status"] == "ok":
+                cells.append(f"ok ({r.get('compile_s', 0):.0f}s)")
+            elif r["status"] == "skipped":
+                cells.append("skip")
+            else:
+                cells.append("FAIL")
+        r = d.get("single", {})
+        ma = r.get("memory_analysis", {})
+        mem = ma.get("argument_size_in_bytes", 0) + ma.get(
+            "temp_size_in_bytes", 0)
+        coll = r.get("collectives", {}).get("total_bytes", 0)
+        lines.append(f"| {arch} | {shape} | {cells[0]} | {cells[1]} | "
+                     f"{mem / 1e9:.2f} GB | {coll / 1e9:.2f} GB |")
+    return "\n".join(lines)
+
+
+def failures(quant="w8a8") -> list[str]:
+    out = []
+    for p in sorted(DRYRUN_DIR.glob("*.json")):
+        rec = json.loads(p.read_text())
+        if rec["status"] == "failed":
+            out.append(f"{p.name}: {rec.get('error', '?')}")
+    return out
+
+
+def main():
+    print("## Dry-run table\n")
+    print(dryrun_table())
+    print("\n## Roofline table (paper-faithful baseline)\n")
+    print(roofline.markdown_table(tag="roofline"))
+    print("\n## Roofline table (optimized: --shard-acts, beyond-paper)\n")
+    print(roofline.markdown_table(tag="opt"))
+    f = failures()
+    print(f"\nfailures: {len(f)}")
+    for line in f:
+        print("  ", line)
+
+
+if __name__ == "__main__":
+    main()

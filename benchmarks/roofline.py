@@ -1,0 +1,131 @@
+"""Roofline analysis (assignment deliverable g).
+
+Reads experiments/dryrun/*.json (written by repro.launch.dryrun) and derives
+the three roofline terms per (arch x shape x mesh):
+
+    compute    = HLO_FLOPs_per_chip / 197e12      (TPU v5e bf16 peak)
+    memory     = HLO_bytes_per_chip / 819e9       (HBM bandwidth)
+    collective = collective_bytes_per_chip / 50e9 (ICI per link)
+
+cost_analysis() of the SPMD-partitioned module is already per chip, so no
+further division by chip count is needed.  MODEL_FLOPS uses 6*N*D for
+training (3 matmul passes), 2*N*D for prefill/decode (forward only), with
+N_active for MoE.  The ratio MODEL_FLOPS/HLO_FLOPs exposes remat/dispatch
+overhead (values < 1 mean the compiled program does extra work: remat
+recompute, quant ops, attention, dispatch scatter...).
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+DRYRUN_DIR = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def _chips(mesh: str) -> int:
+    return 512 if mesh == "multi" else 256
+
+
+def model_flops_per_chip(rec: dict) -> float:
+    """6ND train / 2ND inference, N(_active), D = tokens processed."""
+    from repro.configs import get_config
+    from repro.models import api
+    cfg = get_config(rec["arch"])
+    sh = api.SHAPES[rec["shape"]]
+    n_params = cfg.active_param_count() if cfg.family == "moe" else \
+        cfg.param_count()
+    kind = sh["kind"]
+    tokens = sh["global_batch"] * (sh["seq_len"] if kind != "decode" else 1)
+    if cfg.family == "vlm" and kind != "decode":
+        tokens += sh["global_batch"] * cfg.n_patches
+    factor = 6 if kind == "train" else 2
+    return factor * n_params * tokens / _chips(rec["mesh"])
+
+
+def analyze(rec: dict) -> dict:
+    ca = rec.get("cost_analysis", {})
+    flops = ca.get("flops", 0.0)
+    bytes_ = ca.get("bytes accessed", 0.0)
+    coll = rec.get("collectives", {}).get("total_bytes", 0)
+    t_c = flops / PEAK_FLOPS
+    t_m = bytes_ / HBM_BW
+    t_x = coll / ICI_BW
+    dominant = max((("compute", t_c), ("memory", t_m), ("collective", t_x)),
+                   key=lambda kv: kv[1])[0]
+    mf = model_flops_per_chip(rec)
+    bound = max(t_c, t_m, t_x)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "t_compute_s": t_c, "t_memory_s": t_m, "t_collective_s": t_x,
+        "dominant": dominant,
+        "model_flops_per_chip": mf,
+        "hlo_flops_per_chip": flops,
+        "useful_ratio": (mf / flops) if flops else 0.0,
+        "roofline_fraction": (mf / PEAK_FLOPS) / bound if bound else 0.0,
+        "status": rec["status"],
+    }
+
+
+def load_records(mesh="single", quant="w8a8", tag="roofline"):
+    """Roofline terms come from the unrolled-scan ("roofline"-tagged)
+    lowerings; the untagged records are the production dry-run proof."""
+    recs = []
+    suffix = f"_{tag}" if tag else ""
+    for p in sorted(DRYRUN_DIR.glob(f"*_{mesh}_{quant}{suffix}.json")):
+        rec = json.loads(p.read_text())
+        if (rec.get("tag") or "") != tag:
+            continue
+        recs.append(rec)
+    return recs
+
+
+def run() -> list[str]:
+    rows = []
+    for tag, label in (("roofline", "baseline"), ("opt", "optimized")):
+        for rec in load_records("single", tag=tag):
+            name = f"roofline-{label}/{rec['arch']}/{rec['shape']}"
+            if rec["status"] == "skipped":
+                rows.append(f"{name},0,skipped")
+                continue
+            if rec["status"] != "ok":
+                rows.append(f"{name},0,FAILED")
+                continue
+            a = analyze(rec)
+            bound_us = max(a["t_compute_s"], a["t_memory_s"],
+                           a["t_collective_s"]) * 1e6
+            rows.append(
+                f"{name},{bound_us:.1f},"
+                f"tc={a['t_compute_s']:.2e};tm={a['t_memory_s']:.2e};"
+                f"tx={a['t_collective_s']:.2e};dom={a['dominant']};"
+                f"useful={a['useful_ratio']:.2f};"
+                f"roofline_frac={a['roofline_fraction']:.2f}")
+    return rows
+
+
+def markdown_table(mesh="single", quant="w8a8", tag="roofline") -> str:
+    lines = ["| arch | shape | t_compute | t_memory | t_collective | "
+             "dominant | useful (6ND/HLO) | roofline frac |",
+             "|---|---|---|---|---|---|---|---|"]
+    for rec in load_records(mesh, quant, tag):
+        if rec["status"] == "skipped":
+            lines.append(f"| {rec['arch']} | {rec['shape']} | — | — | — | "
+                         f"skipped (sub-quadratic req.) | — | — |")
+            continue
+        if rec["status"] != "ok":
+            lines.append(f"| {rec['arch']} | {rec['shape']} | FAILED |||||||")
+            continue
+        a = analyze(rec)
+        lines.append(
+            f"| {a['arch']} | {a['shape']} | {a['t_compute_s']:.2e}s | "
+            f"{a['t_memory_s']:.2e}s | {a['t_collective_s']:.2e}s | "
+            f"**{a['dominant']}** | {a['useful_ratio']:.2f} | "
+            f"{a['roofline_fraction']:.2f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(markdown_table())

@@ -1,0 +1,32 @@
+"""Benchmark harness — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  * bench_zoo     — Table III (+ Fig. 5 data): MACs/weights/bits/BOPs
+  * bench_formats — Table I: lowering correctness + expressiveness gaps
+  * bench_kernels — Pallas kernel oracles + TPU byte-traffic analytics
+  * roofline      — assignment §Roofline (reads the dry-run artifacts)
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import bench_formats, bench_kernels, bench_zoo, roofline
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod in (bench_zoo, bench_formats, bench_kernels, roofline):
+        try:
+            for row in mod.run():
+                print(row, flush=True)
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"{mod.__name__},0,ERROR", flush=True)
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

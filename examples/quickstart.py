@@ -1,0 +1,65 @@
+"""Quickstart: the QONNX dialect in five minutes.
+
+  1. the Quant / BipolarQuant / Trunc operators (Eqs. 1-4)
+  2. building a quantized graph, running the node-level executor
+  3. the §V cleanup transforms
+  4. lowering to QCDQ / quantized-op (Table I) and back
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (GraphBuilder, bipolar_quant, execute, quant,
+                        transforms, trunc)
+from repro.core.formats import qcdq_to_qonnx, qonnx_to_qcdq
+
+
+def main():
+    # -- 1. operators ------------------------------------------------------
+    x = jnp.linspace(-2, 2, 9)
+    print("Quant 4b s=0.25      :", np.asarray(quant(x, 0.25, 0.0, 4)))
+    print("Quant 3b FLOOR       :", np.asarray(
+        quant(x, 0.25, 0.0, 3, rounding_mode="FLOOR")))
+    print("Quant fractional 2.5b:", np.asarray(quant(x, 0.25, 0.0, 2.5)))
+    print("BipolarQuant         :", np.asarray(bipolar_quant(x, 1.0)))
+    q8 = quant(x, 0.1, 0.0, 8)
+    print("Trunc 8b->5b         :", np.asarray(trunc(q8, 0.1, 0.0, 8, 5)))
+
+    # channel-wise via broadcasting (§V: no explicit granularity attribute)
+    xm = jnp.ones((2, 3)) * jnp.asarray([1.0, 2.0, 4.0])
+    s = jnp.asarray([0.5, 1.0, 2.0])
+    print("channel-wise          :", np.asarray(quant(xm, s, 0.0, 8))[0])
+
+    # -- 2. a quantized graph ---------------------------------------------
+    b = GraphBuilder("demo")
+    xi = b.add_input("x", (1, 8))
+    h = b.quant(xi, 0.05, 0.0, 8)                      # activation quant
+    w = b.add_initializer("w", np.random.RandomState(0)
+                          .randn(8, 4).astype(np.float32))
+    qw = b.quant(w, 0.02, 0.0, 4, narrow=True)         # 4-bit weights
+    (h,) = b.add_node("MatMul", [h, qw], 1)
+    (h,) = b.add_node("Relu", [h], 1)
+    b.mark_output(h)
+    g = b.build()
+    xv = np.random.RandomState(1).randn(1, 8).astype(np.float32)
+    out = execute(g, {"x": xv})[g.output_names[0]]
+    print("\ngraph nodes          :", [n.op_type for n in g.nodes])
+    print("executor output      :", np.asarray(out))
+
+    # -- 3. cleanup (Fig. 2) ----------------------------------------------
+    gc = transforms.cleanup(g)
+    print("after cleanup        :", [n.op_type for n in gc.nodes],
+          "(weight Quant folded)")
+
+    # -- 4. format lowering (Table I / §IV) ---------------------------------
+    qcdq = qonnx_to_qcdq(g)
+    print("QCDQ nodes           :", [n.op_type for n in qcdq.nodes])
+    out2 = execute(qcdq, {"x": xv})[qcdq.output_names[0]]
+    print("QCDQ == QONNX        :", bool(np.allclose(out, out2, atol=1e-5)))
+    back = qcdq_to_qonnx(qcdq)
+    print("re-ingested          :", [n.op_type for n in back.nodes])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Serving example: PTQ-calibrated, KV-quantized batched generation.
+
+  1. init a small LM, calibrate activation ranges on sample batches (PTQ)
+  2. serve a batch of requests with the GenerationEngine (float baseline)
+  3. re-serve with W8A8 + int8 KV cache (QONNX recipe) and compare outputs
+  4. offline weight quantization to int8/int4 via the Pallas quantizers
+     (the packed-int4 path is what halves decode HBM traffic on TPU)
+
+Run:  PYTHONPATH=src python examples/serve_quantized.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.kernels import ops
+from repro.models import api
+from repro.quantize import calibrate
+from repro.quantize.config import QuantRecipe, TensorQuant
+from repro.serve import GenerationEngine, greedy_generate
+
+
+def main():
+    cfg = get_smoke_config("qwen2-1.5b").replace(d_model=128, d_ff=256,
+                                                 n_layers=4)
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+
+    # -- 1. PTQ calibration -------------------------------------------------
+    samples = [jax.random.normal(jax.random.PRNGKey(i), (64,)) * 1.5
+               for i in range(8)]
+    tq = TensorQuant(bit_width=8)
+    s_mm, _ = calibrate.calibrate_minmax(samples, tq)
+    s_pct, _ = calibrate.calibrate_percentile(samples, tq, pct=99.9)
+    s_mse = calibrate.calibrate_mse(samples, tq)[0]
+    print(f"calibration scales: minmax={float(s_mm):.4f} "
+          f"pct99.9={float(s_pct):.4f} mse={float(s_mse):.4f}")
+
+    # -- 2. float serving ---------------------------------------------------
+    eng = GenerationEngine(params, cfg, max_batch=4)
+    reqs = [eng.submit(np.arange(1, 6 + i), max_new_tokens=8)
+            for i in range(4)]
+    t0 = time.time()
+    eng.run_pending()
+    print(f"float serving: {len(reqs)} reqs in {time.time() - t0:.1f}s")
+    for i, r in enumerate(reqs[:2]):
+        print(f"  req{i}: {np.asarray(r.result)}")
+
+    # -- 3. quantized serving (W8A8 + int8 KV) ------------------------------
+    cfg_q = cfg.replace(quant=QuantRecipe.w_a(8, 8, kv_cache_bits=8))
+    batch = {"tokens": jnp.asarray([[1, 2, 3, 4, 5]], jnp.int32)}
+    out_f = greedy_generate(params, cfg, batch, n_steps=8)
+    out_q = greedy_generate(params, cfg_q, batch, n_steps=8)
+    agree = float((out_f == out_q).mean())
+    print(f"W8A8+KV8 vs float: token agreement = {agree:.2f}")
+
+    # -- 4. offline weight quantization (serving storage path) --------------
+    w = params["layers"]["ffn"]["w_up"][0]             # (d, f)
+    w8, s8 = ops.quantize_weights_int8(w)
+    w4, s4 = ops.quantize_weights_int4(w)
+    x = jax.random.normal(jax.random.PRNGKey(9), (4, w.shape[0]))
+    y_ref = x @ w
+    y8 = ops.quant_matmul(x, w8, s8)
+    y4 = ops.quant_matmul_int4(x, w4, s4)
+    rel8 = float(jnp.linalg.norm(y8 - y_ref) / jnp.linalg.norm(y_ref))
+    rel4 = float(jnp.linalg.norm(y4 - y_ref) / jnp.linalg.norm(y_ref))
+    print(f"weight-only matmul rel-err: int8={rel8:.4f} int4={rel4:.4f}; "
+          f"HBM bytes/weight: bf16=2.0 int8=1.0 int4=0.5")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""repro.ckpt — atomic, mesh-independent checkpointing."""
+from .manager import CheckpointManager  # noqa: F401

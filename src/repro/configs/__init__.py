@@ -1,0 +1,42 @@
+"""Architecture registry: ``--arch <id>`` resolves here.
+
+Each module defines CONFIG (the exact assigned configuration) and SMOKE
+(a reduced same-family config for CPU tests).
+"""
+from __future__ import annotations
+
+import importlib
+
+ARCH_IDS = [
+    "qwen2_1_5b",
+    "starcoder2_7b",
+    "olmo_1b",
+    "starcoder2_3b",
+    "whisper_base",
+    "recurrentgemma_2b",
+    "deepseek_moe_16b",
+    "moonshot_v1_16b_a3b",
+    "rwkv6_7b",
+    "llava_next_34b",
+]
+
+# canonical dashed ids (as listed in the assignment) -> module names
+ALIASES = {i.replace("_", "-"): i for i in ARCH_IDS}
+ALIASES.update({"qwen2-1.5b": "qwen2_1_5b",
+                "moonshot-v1-16b-a3b": "moonshot_v1_16b_a3b"})
+
+
+def get_config(arch: str):
+    name = ALIASES.get(arch, arch).replace("-", "_").replace(".", "_")
+    mod = importlib.import_module(f"repro.configs.{name}")
+    return mod.CONFIG
+
+
+def get_smoke_config(arch: str):
+    name = ALIASES.get(arch, arch).replace("-", "_").replace(".", "_")
+    mod = importlib.import_module(f"repro.configs.{name}")
+    return mod.SMOKE
+
+
+def all_archs():
+    return list(ARCH_IDS)

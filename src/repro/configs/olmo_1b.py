@@ -1,0 +1,14 @@
+"""olmo-1b [dense]: 16L d_model=2048 16H (kv=16) d_ff=8192 vocab=50304
+— non-parametric LN [arXiv:2402.00838; hf]."""
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="olmo-1b", family="dense",
+    n_layers=16, d_model=2048, n_heads=16, n_kv_heads=16, d_ff=8192,
+    vocab=50304, norm="nonparam", ffn="swiglu", pos="rope",
+    tie_embeddings=True,
+)
+
+SMOKE = CONFIG.replace(
+    name="olmo-smoke", n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+    d_ff=128, vocab=256, dtype="float32")

@@ -1,0 +1,14 @@
+"""starcoder2-3b [dense]: 30L d_model=3072 24H (GQA kv=2) d_ff=12288
+vocab=49152 — GQA, RoPE [arXiv:2402.19173; hf]."""
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="starcoder2-3b", family="dense",
+    n_layers=30, d_model=3072, n_heads=24, n_kv_heads=2, d_ff=12288,
+    vocab=49152, head_dim=128, qkv_bias=False, norm="layernorm", ffn="gelu",
+    pos="rope", rope_theta=1_000_000.0,
+)
+
+SMOKE = CONFIG.replace(
+    name="starcoder2-3b-smoke", n_layers=2, d_model=64, n_heads=4,
+    n_kv_heads=2, head_dim=16, d_ff=128, vocab=256, dtype="float32")

@@ -1,0 +1,14 @@
+"""starcoder2-7b [dense]: 32L d_model=4608 36H (GQA kv=4) d_ff=18432
+vocab=49152 — GQA, RoPE [arXiv:2402.19173; hf]."""
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="starcoder2-7b", family="dense",
+    n_layers=32, d_model=4608, n_heads=36, n_kv_heads=4, d_ff=18432,
+    vocab=49152, head_dim=128, qkv_bias=False, norm="layernorm", ffn="gelu",
+    pos="rope", rope_theta=1_000_000.0,
+)
+
+SMOKE = CONFIG.replace(
+    name="starcoder2-7b-smoke", n_layers=2, d_model=64, n_heads=4,
+    n_kv_heads=2, head_dim=16, d_ff=128, vocab=256, dtype="float32")

@@ -1,0 +1,18 @@
+"""repro.core — the QONNX dialect and graph toolchain in JAX."""
+from .quant_ops import (  # noqa: F401
+    ROUNDING_MODES,
+    bipolar_quant,
+    dequantize_int,
+    int_repr,
+    max_int,
+    min_int,
+    quant,
+    quantize_int,
+    round_with_mode,
+    scale_from_minmax,
+    trunc,
+)
+from .ste import bipolar_quant_ste, fake_quant, quant_ste  # noqa: F401
+from .graph import GraphBuilder, Node, QonnxGraph, TensorInfo  # noqa: F401
+from .executor import execute, register_op  # noqa: F401
+from . import bops, export, formats, serialize, streamline, transforms  # noqa: F401

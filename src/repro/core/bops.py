@@ -1,0 +1,117 @@
+"""BOPs / MACs accounting (paper Eq. 5, Table III).
+
+BOPs of one conv layer with b_w-bit weights, b_a-bit activations, n input
+channels, m output channels, k x k filters over an H x W output map:
+
+    BOPs ~= m * n * k^2 * (b_a*b_w + b_a + b_w + log2(n*k^2))   per output px
+
+The paper's Table III counts are per-inference totals; for fully connected
+layers k = 1.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+
+@dataclass
+class LayerCost:
+    name: str
+    macs: int
+    bops: float
+    weights: int
+    weight_bits: float
+
+
+@dataclass
+class ModelCost:
+    layers: list[LayerCost] = field(default_factory=list)
+
+    @property
+    def macs(self):
+        return sum(l.macs for l in self.layers)
+
+    @property
+    def bops(self):
+        return sum(l.bops for l in self.layers)
+
+    @property
+    def weights(self):
+        return sum(l.weights for l in self.layers)
+
+    @property
+    def total_weight_bits(self):
+        return sum(l.weight_bits for l in self.layers)
+
+
+def conv_bops(n_in: int, m_out: int, k: int, out_hw: int, b_w: float,
+              b_a: float) -> float:
+    """Eq. 5 for a conv layer evaluated over ``out_hw`` output pixels."""
+    per_px = m_out * n_in * k * k * (b_a * b_w + b_a + b_w + math.log2(n_in * k * k))
+    return per_px * out_hw
+
+
+def conv_cost(name: str, n_in: int, m_out: int, k: int, out_hw: int,
+              b_w: float, b_a: float) -> LayerCost:
+    macs = m_out * n_in * k * k * out_hw
+    weights = m_out * n_in * k * k
+    return LayerCost(name, macs, conv_bops(n_in, m_out, k, out_hw, b_w, b_a),
+                     weights, weights * b_w)
+
+
+def fc_cost(name: str, n_in: int, m_out: int, b_w: float, b_a: float) -> LayerCost:
+    """Fully connected layer: k = 1, single output position."""
+    return conv_cost(name, n_in, m_out, 1, 1, b_w, b_a)
+
+
+def graph_cost(graph, act_bits: float = 8.0, default_weight_bits: float = 8.0) -> ModelCost:
+    """Estimate BOPs/MACs of a QonnxGraph by walking MatMul/Gemm/Conv nodes.
+
+    Weight bit width is taken from a Quant/BipolarQuant producer of the
+    weight operand when present (the QONNX way), else ``default_weight_bits``.
+    Activation bits from a Quant producer of the data operand, else
+    ``act_bits``.  Graph must be shape-inferred.
+    """
+    cost = ModelCost()
+
+    def bits_of(tensor: str) -> float | None:
+        prod = graph.producer(tensor)
+        if prod is None:
+            return None
+        if prod.op_type == "BipolarQuant":
+            return 1.0
+        if prod.op_type == "Quant":
+            bw_name = prod.inputs[3]
+            if bw_name in graph.initializers:
+                import numpy as np
+                return float(np.asarray(graph.initializers[bw_name]).reshape(-1)[0])
+        return None
+
+    for node in graph.nodes:
+        if node.op_type in ("MatMul", "Gemm"):
+            w_name = node.inputs[1]
+            w_shape = graph.get_shape(w_name)
+            if w_shape is None or len(w_shape) != 2:
+                continue
+            n_in, m_out = int(w_shape[0]), int(w_shape[1])
+            if node.op_type == "Gemm" and node.attrs.get("transB", 0):
+                m_out, n_in = n_in, m_out
+            b_w = bits_of(w_name) or default_weight_bits
+            b_a = bits_of(node.inputs[0]) or act_bits
+            cost.layers.append(fc_cost(node.name, n_in, m_out, b_w, b_a))
+        elif node.op_type == "Conv":
+            w_name = node.inputs[1]
+            w_shape = graph.get_shape(w_name)
+            y_shape = graph.get_shape(node.outputs[0])
+            if w_shape is None or y_shape is None:
+                continue
+            m_out, cin_g, k = int(w_shape[0]), int(w_shape[1]), int(w_shape[2])
+            layout = node.attrs.get("data_layout", "NCHW")
+            sp = y_shape[2:] if layout == "NCHW" else y_shape[1:-1]
+            out_hw = 1
+            for d in sp:
+                out_hw *= int(d)
+            b_w = bits_of(w_name) or default_weight_bits
+            b_a = bits_of(node.inputs[0]) or act_bits
+            cost.layers.append(conv_cost(node.name, cin_g, m_out, k, out_hw, b_w, b_a))
+    return cost

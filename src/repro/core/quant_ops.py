@@ -1,0 +1,233 @@
+"""QONNX quantization operators in JAX.
+
+Implements the three operators of the QONNX standard (Pappalardo et al., 2022,
+Table II) plus the underlying uniform-quantization math of Eqs. 1-4:
+
+    quantize(x)   = clamp(round(x / s + z), y_min, y_max)          (Eq. 1)
+    y_min         = -2^(n_b - 1)  if signed else 0                 (Eq. 2)
+    y_max         =  2^(n_b - 1) - 1 if signed else 2^n_b - 1      (Eq. 3)
+    dequantize(y) = s * (y - z)                                    (Eq. 4)
+
+All QONNX operators fuse a dequantization at the output: float32 in,
+float32 out.  ``scale``, ``zero_point`` and ``bit_width`` are *tensors* that
+broadcast with ``x`` (tensor-wise / channel-wise / block-wise granularity all
+emerge from broadcasting, per the paper's design).  ``bit_width`` may be
+fractional (e.g. 7.5) which narrows the clamp interval without changing the
+storage width.
+"""
+from __future__ import annotations
+
+from typing import Union
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+ArrayLike = Union[Array, float, int]
+
+# Rounding modes of the QONNX ``Quant`` operator ("ROUND" = round-half-to-even)
+# plus two extras (HALF_UP / HALF_DOWN) used by some QAT frontends.
+ROUNDING_MODES = ("ROUND", "ROUND_TO_ZERO", "CEIL", "FLOOR", "HALF_UP", "HALF_DOWN")
+
+
+def round_with_mode(x: Array, rounding_mode: str) -> Array:
+    """Apply one of the QONNX rounding modes elementwise."""
+    m = rounding_mode.upper()
+    if m == "ROUND":  # round half to even (banker's rounding) — jnp default
+        return jnp.round(x)
+    if m == "ROUND_TO_ZERO":
+        return jnp.trunc(x)
+    if m == "CEIL":
+        return jnp.ceil(x)
+    if m == "FLOOR":
+        return jnp.floor(x)
+    if m == "HALF_UP":
+        return jnp.floor(x + 0.5)
+    if m == "HALF_DOWN":
+        return jnp.ceil(x - 0.5)
+    raise ValueError(f"unknown rounding_mode {rounding_mode!r}; expected one of {ROUNDING_MODES}")
+
+
+def min_int(signed: bool, narrow: bool, bit_width: ArrayLike) -> Array:
+    """Minimum integer of the target interval (Eq. 2, extended with ``narrow``).
+
+    signed, narrow      -> -(2^(n-1)) + 1     e.g. 8b: -127
+    signed, not narrow  -> -(2^(n-1))         e.g. 8b: -128
+    unsigned            -> 0
+    """
+    bw = jnp.asarray(bit_width, jnp.float32)
+    if signed:
+        lo = -jnp.exp2(bw - 1.0)
+        if narrow:
+            lo = lo + 1.0
+        return lo
+    return jnp.zeros_like(bw)
+
+
+def max_int(signed: bool, narrow: bool, bit_width: ArrayLike) -> Array:
+    """Maximum integer of the target interval (Eq. 3, extended with ``narrow``).
+
+    signed                 -> 2^(n-1) - 1      e.g. 8b: 127
+    unsigned, narrow       -> 2^n - 2          e.g. 8b: 254
+    unsigned, not narrow   -> 2^n - 1          e.g. 8b: 255
+    """
+    bw = jnp.asarray(bit_width, jnp.float32)
+    if signed:
+        return jnp.exp2(bw - 1.0) - 1.0
+    hi = jnp.exp2(bw) - 1.0
+    if narrow:
+        hi = hi - 1.0
+    return hi
+
+
+def quantize_int(
+    x: Array,
+    scale: ArrayLike,
+    zero_point: ArrayLike,
+    bit_width: ArrayLike,
+    *,
+    signed: bool = True,
+    narrow: bool = False,
+    rounding_mode: str = "ROUND",
+) -> Array:
+    """Eq. 1: float tensor -> integer-valued float tensor (quantized domain)."""
+    scale = jnp.asarray(scale, x.dtype)
+    zero_point = jnp.asarray(zero_point, x.dtype)
+    y = round_with_mode(x / scale + zero_point, rounding_mode)
+    lo = min_int(signed, narrow, bit_width)
+    hi = max_int(signed, narrow, bit_width)
+    return jnp.clip(y, lo.astype(x.dtype), hi.astype(x.dtype))
+
+
+def dequantize_int(y: Array, scale: ArrayLike, zero_point: ArrayLike) -> Array:
+    """Eq. 4."""
+    scale = jnp.asarray(scale, y.dtype)
+    zero_point = jnp.asarray(zero_point, y.dtype)
+    return scale * (y - zero_point)
+
+
+def quant(
+    x: Array,
+    scale: ArrayLike,
+    zero_point: ArrayLike = 0.0,
+    bit_width: ArrayLike = 8,
+    *,
+    signed: bool = True,
+    narrow: bool = False,
+    rounding_mode: str = "ROUND",
+) -> Array:
+    """The QONNX ``Quant`` operator: fused quantize->dequantize (fake quant).
+
+    float32 in, float32 out — the integer representation is never exposed,
+    leaving it implementation-dependent (paper §V).
+    """
+    q = quantize_int(
+        x, scale, zero_point, bit_width,
+        signed=signed, narrow=narrow, rounding_mode=rounding_mode,
+    )
+    return dequantize_int(q, scale, zero_point)
+
+
+def bipolar_quant(x: Array, scale: ArrayLike) -> Array:
+    """The QONNX ``BipolarQuant`` operator: binary {-1,+1} quantization.
+
+    y = scale * (+1 if x >= 0 else -1); no zero_point / bit_width.
+    """
+    scale = jnp.asarray(scale, x.dtype)
+    return scale * jnp.where(x >= 0, 1.0, -1.0).astype(x.dtype)
+
+
+def trunc(
+    x: Array,
+    scale: ArrayLike,
+    zero_point: ArrayLike,
+    in_bit_width: ArrayLike,
+    out_bit_width: ArrayLike,
+    *,
+    rounding_mode: str = "FLOOR",
+    signed: bool = True,
+) -> Array:
+    """The QONNX ``Trunc`` operator: drop LSBs of an already-quantized value.
+
+    ``scale``/``zero_point`` describe how ``x`` *was* QDQed by a previous
+    layer; ``in_bit_width - out_bit_width`` LSBs are removed (default FLOOR).
+    The input's scale and zero_point are preserved: the output is dequantized
+    with ``scale * 2^(in-out)`` so its real-valued magnitude is unchanged
+    modulo truncation.  Typical use: quantized average pooling (sum then
+    right-shift), paper §V.  Output values are clamped to the
+    ``out_bit_width`` integer range (signedness of the input domain).
+    """
+    scale = jnp.asarray(scale, x.dtype)
+    zero_point = jnp.asarray(zero_point, x.dtype)
+    in_bw = jnp.asarray(in_bit_width, jnp.float32)
+    out_bw = jnp.asarray(out_bit_width, jnp.float32)
+    shift = jnp.exp2(in_bw - out_bw).astype(x.dtype)
+    # Reconstruct the integer-domain value.  The input is by definition on the
+    # (scale, zero_point) grid, so snapping with round() is exact and avoids
+    # float-division error flipping FLOOR/CEIL at integer boundaries.
+    y_int = jnp.round(x / scale + zero_point)
+    y_trunc = round_with_mode(y_int / shift, rounding_mode)
+    lo = min_int(signed, False, out_bw).astype(x.dtype)
+    hi = max_int(signed, False, out_bw).astype(x.dtype)
+    y_trunc = jnp.clip(y_trunc, lo, hi)
+    out_scale = scale * shift
+    return out_scale * (y_trunc - zero_point)
+
+
+# ---------------------------------------------------------------------------
+# Helpers for deriving quantization parameters (used by the QAT/PTQ layer).
+# ---------------------------------------------------------------------------
+
+def scale_from_minmax(
+    x_min: Array,
+    x_max: Array,
+    bit_width: ArrayLike,
+    *,
+    signed: bool = True,
+    narrow: bool = False,
+    symmetric: bool = True,
+    eps: float = 1e-8,
+) -> tuple[Array, Array]:
+    """Derive (scale, zero_point) covering [x_min, x_max].
+
+    Symmetric (z = 0): scale = max(|min|, |max|) / max_int.
+    Asymmetric: scale = (max - min) / (max_int - min_int), integer zero-point
+    (restricted to the integer grid per paper §II for zero-padding compat).
+    """
+    lo_i = min_int(signed, narrow, bit_width)
+    hi_i = max_int(signed, narrow, bit_width)
+    if symmetric:
+        amax = jnp.maximum(jnp.abs(x_min), jnp.abs(x_max))
+        bound = jnp.maximum(jnp.abs(lo_i), jnp.abs(hi_i))
+        scale = jnp.maximum(amax / bound, eps)
+        zp = jnp.zeros_like(scale)
+        return scale, zp
+    x_min = jnp.minimum(x_min, 0.0)
+    x_max = jnp.maximum(x_max, 0.0)
+    scale = jnp.maximum((x_max - x_min) / (hi_i - lo_i), eps)
+    zp = jnp.round(lo_i - x_min / scale)
+    zp = jnp.clip(zp, lo_i, hi_i)
+    return scale, zp
+
+
+def int_repr(
+    x: Array,
+    scale: ArrayLike,
+    zero_point: ArrayLike,
+    bit_width: ArrayLike,
+    *,
+    signed: bool = True,
+    narrow: bool = False,
+    rounding_mode: str = "ROUND",
+    dtype: jnp.dtype = jnp.int8,
+) -> Array:
+    """Integer representation of a quantized tensor (for lowering/serving).
+
+    Only valid when bit_width <= the carrier dtype's width; the carrier is an
+    implementation choice (paper §V leaves it implementation-dependent).
+    """
+    q = quantize_int(
+        x, scale, zero_point, bit_width,
+        signed=signed, narrow=narrow, rounding_mode=rounding_mode,
+    )
+    return q.astype(dtype)

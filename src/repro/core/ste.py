@@ -1,0 +1,128 @@
+"""Straight-through estimators for QONNX operators (QAT support).
+
+The paper's QAT frontends (Brevitas, QKeras) train with fake-quant forward
+passes and straight-through gradients.  We provide the same in JAX via
+``jax.custom_vjp``:
+
+  * ``quant_ste``         — Quant with identity-in-range gradient w.r.t. x
+                            (zero outside the clip interval, per Brevitas) and
+                            LSQ-style gradients w.r.t. scale (Esser et al.
+                            2020), a beyond-paper nicety that makes scales
+                            learnable.
+  * ``bipolar_quant_ste`` — BipolarQuant with hardtanh-window STE
+                            (BinaryConnect, Courbariaux et al. 2015).
+
+``bit_width`` is treated as non-differentiable (it is usually a structural
+hyperparameter; dynamic bit widths flow through the forward pass only).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .quant_ops import (
+    dequantize_int,
+    max_int,
+    min_int,
+    quant,
+    quantize_int,
+    round_with_mode,
+)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6))
+def quant_ste(x, scale, zero_point, bit_width, signed=True, narrow=False,
+              rounding_mode="ROUND"):
+    """Quant (fake-quant QDQ) with straight-through gradients."""
+    return quant(x, scale, zero_point, bit_width,
+                 signed=signed, narrow=narrow, rounding_mode=rounding_mode)
+
+
+def _quant_ste_fwd(x, scale, zero_point, bit_width, signed, narrow, rounding_mode):
+    scale_a = jnp.asarray(scale, x.dtype)
+    zp_a = jnp.asarray(zero_point, x.dtype)
+    pre = x / scale_a + zp_a
+    lo = min_int(signed, narrow, bit_width).astype(x.dtype)
+    hi = max_int(signed, narrow, bit_width).astype(x.dtype)
+    q = jnp.clip(round_with_mode(pre, rounding_mode), lo, hi)
+    y = dequantize_int(q, scale_a, zp_a)
+    return y, (x, scale_a, zp_a, pre, q, lo, hi)
+
+
+def _quant_ste_bwd(signed, narrow, rounding_mode, res, g):
+    x, scale, zp, pre, q, lo, hi = res
+    in_range = jnp.logical_and(pre >= lo, pre <= hi)
+    # d y / d x : straight-through inside the clip window, 0 outside.
+    gx = jnp.where(in_range, g, 0.0).astype(x.dtype)
+    # d y / d scale (LSQ): inside range -> (q - round-free residual) ~ q - pre
+    # i.e. d/ds [s*(clip(round(x/s+z)) - z)] with STE on round:
+    #   in range:  q - z - (x/s)            (the rounding residual term)
+    #   clipped:   lo - z  or  hi - z       (saturation gradient)
+    grad_s_elem = jnp.where(
+        in_range,
+        (q - zp) - (x / scale),
+        jnp.where(pre < lo, lo - zp, hi - zp),
+    ).astype(x.dtype)
+    gs_full = g * grad_s_elem
+    gs = _reduce_to_shape(gs_full, jnp.shape(scale)).astype(scale.dtype)
+    # d y / d zero_point: in range the +z and -z cancel under STE -> 0;
+    # when clipped, d/dz [s*(const - z)] = -s.
+    gz_full = g * jnp.where(in_range, 0.0, -scale)
+    gz = _reduce_to_shape(gz_full, jnp.shape(zp)).astype(zp.dtype)
+    # bit_width: non-differentiable -> zeros of matching shape.
+    gb = jnp.zeros_like(jnp.asarray(0.0, jnp.float32))
+    return gx, gs, gz, gb
+
+
+def _reduce_to_shape(g, shape):
+    """Sum-reduce a broadcasted gradient back to the parameter's shape."""
+    g = jnp.asarray(g)
+    if g.shape == tuple(shape):
+        return g
+    # sum leading extra dims
+    while g.ndim > len(shape):
+        g = g.sum(axis=0)
+    # sum broadcasted (size-1) dims
+    for i, (gd, sd) in enumerate(zip(g.shape, shape)):
+        if sd == 1 and gd != 1:
+            g = g.sum(axis=i, keepdims=True)
+    return g.reshape(shape)
+
+
+quant_ste.defvjp(_quant_ste_fwd, _quant_ste_bwd)
+
+
+@jax.custom_vjp
+def bipolar_quant_ste(x, scale):
+    scale = jnp.asarray(scale, x.dtype)
+    return scale * jnp.where(x >= 0, 1.0, -1.0).astype(x.dtype)
+
+
+def _bipolar_fwd(x, scale):
+    scale = jnp.asarray(scale, x.dtype)
+    y = scale * jnp.where(x >= 0, 1.0, -1.0).astype(x.dtype)
+    return y, (x, scale)
+
+
+def _bipolar_bwd(res, g):
+    x, scale = res
+    # hardtanh window STE: pass gradient where |x| <= 1
+    gx = jnp.where(jnp.abs(x) <= 1.0, g, 0.0).astype(x.dtype)
+    gs_full = g * jnp.where(x >= 0, 1.0, -1.0)
+    gs = _reduce_to_shape(gs_full, jnp.shape(scale)).astype(scale.dtype)
+    return gx, gs
+
+
+bipolar_quant_ste.defvjp(_bipolar_fwd, _bipolar_bwd)
+
+
+def fake_quant(x, scale, zero_point=0.0, bit_width=8, *, signed=True,
+               narrow=False, rounding_mode="ROUND", ste=True):
+    """Convenience dispatcher used by the quantize/ layer."""
+    if ste:
+        return quant_ste(x, scale, zero_point, bit_width, signed, narrow,
+                         rounding_mode)
+    return quant(x, scale, zero_point, bit_width, signed=signed,
+                 narrow=narrow, rounding_mode=rounding_mode)

@@ -1,0 +1,2 @@
+"""repro.data — deterministic synthetic pipeline with resumable state."""
+from .pipeline import SyntheticLMStream  # noqa: F401

@@ -1,0 +1,9 @@
+"""repro.kernels — Pallas TPU kernels (interpret-validated on CPU).
+
+quant_dequant    fused QDQ elementwise (the QONNX Quant op on TPU)
+quant_matmul     int8 / packed-int4 weight-quantized matmul, fp32 accum
+flash_attention  online-softmax attention, VMEM-resident state
+ops              jit'd public wrappers;  ref: pure-jnp oracles
+"""
+from . import ops, ref  # noqa: F401
+from .flash_attention import flash_attention  # noqa: F401

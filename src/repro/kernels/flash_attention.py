@@ -1,0 +1,106 @@
+"""Flash attention Pallas kernel (TPU target, interpret-validated on CPU).
+
+Motivation from the roofline analysis (EXPERIMENTS.md §Roofline): the pure-
+jnp chunked attention keeps its (Sq, C) score tile in HBM as far as XLA's
+cost model is concerned — the memory term of every *_4k/32k cell is
+dominated by score-tensor elementwise traffic.  This kernel keeps the whole
+online-softmax state (acc, m, l) in VMEM scratch across the K-block loop, so
+HBM traffic collapses to Q + K + V + O exactly (the flash-attention
+guarantee, Dao et al. 2022 adapted to TPU VMEM/MXU tiling).
+
+Layout: q (B, H, Sq, hd), k/v (B, KV, Sk, hd); GQA via kv_head = h // G in
+the BlockSpec index maps (KV heads are never materialized per-q-head).
+Grid (B, H, Sq/bq, Sk/bk), K innermost; causal blocks above the diagonal are
+skipped with @pl.when (no wasted MXU work).  Block defaults are MXU-aligned.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCKS = (512, 512)       # (bq, bk)
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  nk, bq, bk, causal, scale):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    run = True
+    if causal:
+        # block fully above the diagonal -> no work
+        run = (ik * bk) <= (iq * bq + bq - 1)
+
+    @pl.when(run if causal else True)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32) * scale          # (bq, hd)
+        k = k_ref[0, 0].astype(jnp.float32)                  # (bk, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (bq, bk)
+        if causal:
+            q_pos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            k_pos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(k_pos <= q_pos, s, NEG_INF)
+        m_prev = m_ref[...]                                   # (bq, 1)
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "blocks", "interpret"))
+def flash_attention(q, k, v, *, causal=True, blocks=DEFAULT_BLOCKS,
+                    interpret=True):
+    """q: (B, H, Sq, hd);  k, v: (B, KV, Sk, hd);  H = KV * G.
+
+    Returns (B, H, Sq, hd).  Sq/Sk must be multiples of the block sizes
+    (pad outside if needed — the model wrapper guarantees this).
+    """
+    B, H, Sq, hd = q.shape
+    _, KV, Sk, _ = k.shape
+    G = H // KV
+    bq = min(blocks[0], Sq)
+    bk = min(blocks[1], Sk)
+    assert Sq % bq == 0 and Sk % bk == 0, (Sq, Sk, bq, bk)
+    grid = (B, H, Sq // bq, Sk // bk)
+    scale = 1.0 / np.sqrt(hd)
+
+    kernel = functools.partial(_flash_kernel, nk=grid[3], bq=bq, bk=bk,
+                               causal=causal, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, i, j: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, i, j: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, hd), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

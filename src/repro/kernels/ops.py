@@ -1,0 +1,48 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+``interpret`` defaults to True (CPU validation per the build environment);
+production TPU runs pass interpret=False.  Weight packing/unpacking are
+offline operations (done once at model-load), so they are plain jnp here —
+the *in-kernel* unpack lives in quant_matmul_int4.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .quant_dequant import quant_dequant  # noqa: F401  (public re-export)
+from .quant_matmul import quant_matmul, quant_matmul_int4  # noqa: F401
+from . import ref
+
+
+def pack_int4(w_int):
+    """Offline packing: (K, N) int4-valued int8 -> (K//2, N) int8 carriers."""
+    assert w_int.shape[0] % 2 == 0, "K must be even for int4 packing"
+    return ref.pack_int4_ref(jnp.asarray(w_int))
+
+
+def unpack_int4(w_packed):
+    return ref.unpack_int4_ref(jnp.asarray(w_packed))
+
+
+def quantize_weights_int8(w, *, narrow=True):
+    """Symmetric per-output-channel int8 quantization of a (K, N) weight.
+
+    Returns (w_int8, scale[N]) such that w ~= scale * w_int8 — the paper's
+    §II convention (symmetric weights, channel-wise scale).
+    """
+    amax = jnp.max(jnp.abs(w), axis=0)
+    bound = 127.0
+    scale = jnp.maximum(amax / bound, 1e-8)
+    q = jnp.clip(jnp.round(w / scale), -127 if narrow else -128, 127)
+    return q.astype(jnp.int8), scale.astype(jnp.float32)
+
+
+def quantize_weights_int4(w):
+    """Symmetric per-channel int4 quantization + packing.
+
+    Returns (w_packed[K//2, N], scale[N]).
+    """
+    amax = jnp.max(jnp.abs(w), axis=0)
+    scale = jnp.maximum(amax / 7.0, 1e-8)
+    q = jnp.clip(jnp.round(w / scale), -7, 7).astype(jnp.int8)
+    return pack_int4(q), scale.astype(jnp.float32)

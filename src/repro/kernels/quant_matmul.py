@@ -1,0 +1,146 @@
+"""Weight-quantized matmul Pallas kernels (serving hot path).
+
+Two variants:
+
+  * ``quant_matmul``       — int8 weights (K, N) + per-channel scales.
+  * ``quant_matmul_int4``  — int4 weights packed two-per-byte along K
+                             (K//2, N), unpacked *inside* the kernel.
+
+TPU adaptation of the paper's arbitrary-precision weights (DESIGN.md §3):
+sub-byte weights live packed in HBM — the int4 variant halves weight HBM
+traffic, which is exactly what matters for the memory-bound decode shapes —
+and are expanded to the MXU-native operand width in VMEM, inside the kernel,
+so the unpack cost is overlapped with the matmul pipeline.
+
+Blocking: grid (M/bm, N/bn, K/bk), K innermost so each (i, j) output tile
+stays resident in VMEM across the K loop (revision dims semantics); fp32
+accumulation; per-output-channel dequant scale applied once at the last K
+step.  Block defaults are MXU-aligned multiples of 128.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCKS = (256, 256, 512)  # (bm, bn, bk)
+
+
+def _qmm_kernel(x_ref, w_ref, s_ref, o_ref, acc_ref, *, nk):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)          # int8 -> f32 dequant-in-kernel
+    acc_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _finish():
+        o_ref[...] = (acc_ref[...] * s_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+def _unpack_lo_hi(packed):
+    """int8 carrier -> two sign-extended int4 planes (low/high nibble)."""
+    lo = ((packed.astype(jnp.int8) << 4) >> 4).astype(jnp.int8)
+    hi = (packed.astype(jnp.int8) >> 4).astype(jnp.int8)
+    return lo, hi
+
+
+def _qmm4_kernel(x_ref, wp_ref, s_ref, o_ref, acc_ref, *, nk):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)          # (bm, bk)
+    lo, hi = _unpack_lo_hi(wp_ref[...])         # each (bk//2, bn)
+    # interleave: packed row r holds original rows 2r (lo) and 2r+1 (hi)
+    x_even = x[:, 0::2]                          # multiplies lo rows
+    x_odd = x[:, 1::2]                           # multiplies hi rows
+    acc_ref[...] += jnp.dot(x_even, lo.astype(jnp.float32),
+                            preferred_element_type=jnp.float32)
+    acc_ref[...] += jnp.dot(x_odd, hi.astype(jnp.float32),
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _finish():
+        o_ref[...] = (acc_ref[...] * s_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+def _norm_scale(w_scale, n):
+    s = jnp.asarray(w_scale, jnp.float32)
+    if s.ndim == 0 or s.size == 1:
+        return jnp.full((1, n), s.reshape(()))
+    return s.reshape(1, n)
+
+
+@functools.partial(jax.jit, static_argnames=("blocks", "interpret", "out_dtype"))
+def quant_matmul(x, w_int, w_scale, bias=None, *, blocks=DEFAULT_BLOCKS,
+                 interpret=True, out_dtype=jnp.float32):
+    """out = x @ (w_scale * w_int) [+ bias], fp32 accumulation.
+
+    x: (M, K) f32/bf16;  w_int: (K, N) int8;  w_scale: scalar or (N,).
+    """
+    m, kdim = x.shape
+    k2, n = w_int.shape
+    assert kdim == k2, (x.shape, w_int.shape)
+    bm, bn, bk = (min(blocks[0], m), min(blocks[1], n), min(blocks[2], kdim))
+    grid = (pl.cdiv(m, bm), pl.cdiv(n, bn), pl.cdiv(kdim, bk))
+    s2 = _norm_scale(w_scale, n)
+
+    out = pl.pallas_call(
+        functools.partial(_qmm_kernel, nk=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, w_int, s2)
+    if bias is not None:
+        out = out + bias.astype(out.dtype)
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("blocks", "interpret", "out_dtype"))
+def quant_matmul_int4(x, w_packed, w_scale, bias=None, *, blocks=DEFAULT_BLOCKS,
+                      interpret=True, out_dtype=jnp.float32):
+    """out = x @ (w_scale * unpack(w_packed)) with in-kernel int4 unpack.
+
+    x: (M, K);  w_packed: (K//2, N) int8 (two nibbles per byte along K).
+    """
+    m, kdim = x.shape
+    kp, n = w_packed.shape
+    assert kdim == 2 * kp, (x.shape, w_packed.shape)
+    bm, bn, bk = (min(blocks[0], m), min(blocks[1], n), min(blocks[2], kdim))
+    assert bk % 2 == 0
+    grid = (pl.cdiv(m, bm), pl.cdiv(n, bn), pl.cdiv(kdim, bk))
+    s2 = _norm_scale(w_scale, n)
+
+    out = pl.pallas_call(
+        functools.partial(_qmm4_kernel, nk=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk // 2, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, w_packed, s2)
+    if bias is not None:
+        out = out + bias.astype(out.dtype)
+    return out

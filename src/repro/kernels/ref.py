@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernels are validated against (interpret=True
+on CPU, real TPU in production).  They are intentionally written with plain
+jnp — no tiling, no layout tricks.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import quant_ops
+
+
+def quant_dequant_ref(x, scale, zero_point, bit_width, *, signed=True,
+                      narrow=False, rounding_mode="ROUND"):
+    """Oracle for the fused QDQ elementwise kernel == core Quant op."""
+    return quant_ops.quant(x, scale, zero_point, bit_width, signed=signed,
+                           narrow=narrow, rounding_mode=rounding_mode)
+
+
+def quant_matmul_ref(x, w_int, w_scale, bias=None):
+    """Oracle for the weight-quantized matmul.
+
+    x:       (M, K) float32/bfloat16 activations
+    w_int:   (K, N) int8 quantized weights (symmetric, zero_point = 0)
+    w_scale: (N,) or scalar per-output-channel scale
+    out:     (M, N) float32  — x @ (w_scale * w_int), fp32 accumulation
+    """
+    acc = jnp.dot(x.astype(jnp.float32), w_int.astype(jnp.float32),
+                  preferred_element_type=jnp.float32)
+    out = acc * jnp.asarray(w_scale, jnp.float32)
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)
+    return out
+
+
+def pack_int4_ref(w_int):
+    """Pack (K, N) int4-valued int8 into (K//2, N) int8 carriers.
+
+    Row 2k goes to the low nibble, row 2k+1 to the high nibble.
+    """
+    lo = w_int[0::2].astype(jnp.int8)
+    hi = w_int[1::2].astype(jnp.int8)
+    return ((hi.astype(jnp.uint8) << 4) | (lo.astype(jnp.uint8) & 0xF)).astype(jnp.int8)
+
+
+def unpack_int4_ref(w_packed):
+    """Inverse of pack_int4_ref: (K//2, N) int8 -> (K, N) int4-valued int8."""
+    lo = (w_packed.astype(jnp.int8) << 4) >> 4          # sign-extend low nibble
+    hi = w_packed.astype(jnp.int8) >> 4                 # arithmetic shift
+    K2, N = w_packed.shape
+    out = jnp.zeros((K2 * 2, N), jnp.int8)
+    out = out.at[0::2].set(lo.astype(jnp.int8))
+    out = out.at[1::2].set(hi.astype(jnp.int8))
+    return out
+
+
+def quant_matmul_int4_ref(x, w_packed, w_scale, bias=None):
+    """Oracle for the packed-int4 matmul: unpack then quant_matmul."""
+    w_int = unpack_int4_ref(w_packed)
+    return quant_matmul_ref(x, w_int, w_scale, bias)

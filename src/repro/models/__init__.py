@@ -1,0 +1,3 @@
+"""repro.models — architecture substrate (pure-JAX, scan-over-layers)."""
+from .common import ModelConfig  # noqa: F401
+from . import api  # noqa: F401

@@ -1,0 +1,133 @@
+"""Unified model API: family dispatch + input specs for every shape cell.
+
+Families:
+    dense / moe / vlm / audio-decoder -> transformer.py (+ encdec for audio)
+    hybrid                            -> rglru.py
+    ssm                               -> rwkv6.py
+
+Every entry point takes (params, ..., cfg) pytrees so it can be lowered with
+ShapeDtypeStructs (dry-run) or executed with real arrays (tests/examples).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import ModelConfig, init_from_specs
+from . import encdec, rglru, rwkv6, transformer
+
+SDS = jax.ShapeDtypeStruct
+
+
+def _mod(cfg: ModelConfig):
+    if cfg.family == "hybrid":
+        return rglru
+    if cfg.family == "ssm":
+        return rwkv6
+    if cfg.family == "audio":
+        return encdec
+    return transformer   # dense | moe | vlm
+
+
+def param_specs(cfg: ModelConfig):
+    return _mod(cfg).param_specs(cfg)
+
+
+def init_params(rng, cfg: ModelConfig):
+    return init_from_specs(rng, param_specs(cfg))
+
+
+def forward(params, batch, cfg: ModelConfig):
+    return _mod(cfg).forward(params, batch, cfg)
+
+
+def prefill(params, batch, cfg: ModelConfig, cache_len: int):
+    return _mod(cfg).prefill(params, batch, cfg, cache_len)
+
+
+def decode_step(params, cache, tokens, cache_index, cfg: ModelConfig):
+    return _mod(cfg).decode_step(params, cache, tokens, cache_index, cfg)
+
+
+def cache_specs(cfg: ModelConfig, batch: int, cache_len: int):
+    return _mod(cfg).cache_specs(cfg, batch, cache_len)
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int):
+    return _mod(cfg).init_cache(cfg, batch, cache_len)
+
+
+# --------------------------------------------------------------- shapes
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq_len=4096, global_batch=256),
+    "prefill_32k": dict(kind="prefill", seq_len=32768, global_batch=32),
+    "decode_32k": dict(kind="decode", seq_len=32768, global_batch=128),
+    "long_500k": dict(kind="decode", seq_len=524288, global_batch=1),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape_name: str) -> Optional[str]:
+    """None if the (arch, shape) cell runs; else a skip reason (DESIGN.md)."""
+    if shape_name == "long_500k" and not cfg.sub_quadratic():
+        return ("full-attention arch: O(S^2) at 524k tokens violates the "
+                "sub-quadratic requirement (skip noted in DESIGN.md)")
+    return None
+
+
+def input_specs(cfg: ModelConfig, shape_name: str):
+    """ShapeDtypeStruct stand-ins for every model input of a shape cell.
+
+    train   -> {tokens, labels [, frames | img_embeds]}
+    prefill -> {tokens [, frames | img_embeds]}  (+ static cache_len)
+    decode  -> (cache_specs, tokens (B, 1), cache_index)
+    """
+    sh = SHAPES[shape_name]
+    B, S = sh["global_batch"], sh["seq_len"]
+    tok = jnp.int32
+    if sh["kind"] == "train":
+        spec = {"tokens": SDS((B, S), tok), "labels": SDS((B, S), tok)}
+        spec.update(_frontend_specs(cfg, B))
+        return {"batch": spec}
+    if sh["kind"] == "prefill":
+        spec = {"tokens": SDS((B, S), tok)}
+        spec.update(_frontend_specs(cfg, B))
+        cache_len = S + (cfg.n_patches if cfg.family == "vlm" else 0)
+        return {"batch": spec, "cache_len": cache_len}
+    # decode: one new token against a cache of length S
+    return {
+        "cache": cache_specs(cfg, B, S),
+        "tokens": SDS((B, 1), tok),
+        "cache_index": SDS((), jnp.int32),
+    }
+
+
+def _frontend_specs(cfg: ModelConfig, B: int):
+    """Modality-frontend STUBS: precomputed frame/patch embeddings."""
+    if cfg.family == "audio":
+        return {"frames": SDS((B, cfg.n_frames, cfg.d_model), cfg.act_dtype)}
+    if cfg.family == "vlm":
+        return {"img_embeds": SDS((B, cfg.n_patches, cfg.d_model),
+                                  cfg.act_dtype)}
+    return {}
+
+
+def make_batch(rng, cfg: ModelConfig, batch: int, seq: int):
+    """Concrete random batch (smoke tests / examples)."""
+    r1, r2, r3 = jax.random.split(rng, 3)
+    out = {
+        "tokens": jax.random.randint(r1, (batch, seq), 0, cfg.vocab, jnp.int32),
+        "labels": jax.random.randint(r2, (batch, seq), 0, cfg.vocab, jnp.int32),
+    }
+    if cfg.family == "audio":
+        out["frames"] = jax.random.normal(
+            r3, (batch, cfg.n_frames, cfg.d_model), jnp.float32
+        ).astype(cfg.act_dtype)
+    if cfg.family == "vlm":
+        out["img_embeds"] = jax.random.normal(
+            r3, (batch, cfg.n_patches, cfg.d_model), jnp.float32
+        ).astype(cfg.act_dtype)
+    return out

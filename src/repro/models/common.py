@@ -1,0 +1,417 @@
+"""Shared model substrate: config, norms, RoPE, chunked attention, FFNs.
+
+Every architecture in src/repro/configs is expressed through ``ModelConfig``.
+Models are pure functions over parameter pytrees; layers are stacked along a
+leading L axis and executed with ``jax.lax.scan`` (MaxText-style) so the HLO
+stays small for the 512-device dry-run compiles.
+
+Attention is chunked over the KV axis with an online softmax (flash-style,
+pure JAX) so the S x S score matrix is never materialized — required for
+prefill_32k to fit HBM and a prerequisite for the local-window attention of
+RecurrentGemma.  GQA is computed in grouped form (q reshaped to
+(B, S, KV, G, hd)) so KV heads are never repeated in memory.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.quantize.config import FP32, QuantRecipe
+from repro.quantize.layers import qlinear, quant_act
+
+
+# ---------------------------------------------------------------- config
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                    # dense | moe | hybrid | ssm | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None
+    qkv_bias: bool = False
+    norm: str = "rms"              # rms | nonparam | layernorm
+    ffn: str = "swiglu"            # swiglu | gelu
+    pos: str = "rope"              # rope | sinusoidal | none
+    rope_theta: float = 10_000.0
+    tie_embeddings: bool = False
+    # --- moe ---
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    top_k: int = 0
+    moe_capacity_factor: float = 1.25
+    # --- hybrid (RG-LRU + local attention) ---
+    block_pattern: tuple = ()
+    lru_width: int = 0
+    window: int = 0                # local attention window (0 = full)
+    # --- ssm (rwkv6) ---
+    rwkv_head_dim: int = 64
+    # --- encoder-decoder (whisper) ---
+    n_enc_layers: int = 0
+    n_frames: int = 0
+    # --- vlm ---
+    n_patches: int = 0
+    # --- numerics ---
+    dtype: str = "bfloat16"
+    param_dtype: str = "float32"
+    quant: QuantRecipe = field(default_factory=lambda: FP32)
+    attn_chunk: int = 1024
+    remat: bool = False            # activation-checkpoint each layer/group
+    shard_activations: bool = False  # constrain attention intermediates over
+                                     # the 'model' axis (perf hillclimb #1)
+    scan_unroll: bool = False      # unroll layer/chunk scans (roofline mode:
+                                   # XLA cost_analysis counts while bodies
+                                   # once; unrolling restores true FLOP/byte
+                                   # counts in the compiled-artifact analysis)
+    logits_softcap: float = 0.0
+    # --- scale notes (for roofline MODEL_FLOPS) ---
+    notes: str = ""
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim if self.head_dim else self.d_model // self.n_heads
+
+    @property
+    def act_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def p_dtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    def sub_quadratic(self) -> bool:
+        """Can this arch run long_500k? (SSM / hybrid-with-window only.)"""
+        return self.family in ("ssm", "hybrid")
+
+    def param_count(self) -> int:
+        """Analytic parameter count (for 6ND roofline math)."""
+        from . import api
+        specs = api.param_specs(self)
+        return int(sum(np.prod(s.shape) for s in jax.tree.leaves(specs)))
+
+    def active_param_count(self) -> int:
+        """Params active per token (MoE: shared + top_k routed)."""
+        if self.family != "moe":
+            return self.param_count()
+        total = self.param_count()
+        expert = 3 * self.d_model * self.d_ff          # gate/up/down per expert
+        inactive = self.n_layers * (self.n_experts - self.top_k) * expert
+        return int(total - inactive)
+
+
+# ----------------------------------------------------------------- norms
+
+def norm(x, w, kind: str, eps: float = 1e-6):
+    """rms (scaled), nonparam (OLMo LN without affine), layernorm (w = (g,b))."""
+    xf = x.astype(jnp.float32)
+    if kind == "rms":
+        y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+        return (y * (1.0 + w.astype(jnp.float32))).astype(x.dtype)
+    if kind == "nonparam":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        return ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+    if kind == "layernorm":
+        g, b = w
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        return (y * g.astype(jnp.float32) + b.astype(jnp.float32)).astype(x.dtype)
+    raise ValueError(kind)
+
+
+def norm_param_spec(cfg: ModelConfig, shape_prefix=()):
+    """ShapeDtypeStructs for one norm of the configured kind (None if none)."""
+    d = (cfg.d_model,)
+    if cfg.norm == "rms":
+        return jax.ShapeDtypeStruct(shape_prefix + d, cfg.p_dtype)
+    if cfg.norm == "nonparam":
+        return None
+    if cfg.norm == "layernorm":
+        return (jax.ShapeDtypeStruct(shape_prefix + d, cfg.p_dtype),
+                jax.ShapeDtypeStruct(shape_prefix + d, cfg.p_dtype))
+    raise ValueError(cfg.norm)
+
+
+# ------------------------------------------------------------------ RoPE
+
+def rope_freqs(hd: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (B, S, H, hd); positions: (S,) or (B, S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    pos = positions.astype(jnp.float32)
+    ang = pos[..., None] * freqs                        # (..., S, hd/2)
+    if ang.ndim == 2:                                   # (S, hd/2) -> broadcast B
+        ang = ang[None]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+def sinusoidal_embedding(n_pos: int, d: int):
+    pos = np.arange(n_pos)[:, None]
+    i = np.arange(d)[None, :]
+    angle = pos / np.power(10000, (2 * (i // 2)) / d)
+    emb = np.where(i % 2 == 0, np.sin(angle), np.cos(angle))
+    return jnp.asarray(emb, jnp.float32)
+
+
+# ---------------------------------------------------- chunked attention
+
+NEG_INF = -1e30
+
+
+def _model_axis_size() -> int:
+    """Size of the ambient mesh's 'model' axis (0 if no mesh context)."""
+    try:
+        from jax._src import mesh as mesh_lib
+        m = mesh_lib.thread_resources.env.physical_mesh
+        if m is not None and not m.empty and "model" in m.axis_names:
+            return int(m.shape["model"])
+    except Exception:
+        pass
+    return 0
+
+
+def _dp_axes():
+    """DP axis names of the ambient mesh (() if no mesh context)."""
+    try:
+        from jax._src import mesh as mesh_lib
+        m = mesh_lib.thread_resources.env.physical_mesh
+        if m is not None and not m.empty:
+            return tuple(a for a in ("pod", "data") if a in m.axis_names), m
+    except Exception:
+        pass
+    return (), None
+
+
+def constrain_logits(logits):
+    """Pin the LM-head output to (batch over DP, vocab over model).
+
+    Without this, GSPMD resolves the (B,S,D)x(D,V) contraction with a
+    batch-replicated partial strategy on the production mesh — ~30 GB/step
+    of logits all-gathers on qwen2 train_4k (EXPERIMENTS.md §Perf it-2).
+    No-op outside a mesh context.
+    """
+    dp, m = _dp_axes()
+    if not dp or "model" not in m.axis_names:
+        return logits
+    from jax.sharding import PartitionSpec as P
+    dp_size = 1
+    for a in dp:
+        dp_size *= int(m.shape[a])
+    tp = int(m.shape["model"])
+    batch = logits.shape[0]
+    vocab = logits.shape[-1]
+    b_ax = (dp if len(dp) > 1 else dp[0]) if batch % dp_size == 0 else None
+    v_ax = "model" if vocab % tp == 0 else None
+    spec = [b_ax] + [None] * (logits.ndim - 2) + [v_ax]
+    return jax.lax.with_sharding_constraint(logits, P(*spec))
+
+
+def constrain_residual(x, cfg):
+    """Megatron-SP-style activation sharding for the residual stream
+    (perf hillclimb it-4): batch over DP, sequence over 'model', feature
+    replicated.  Norms and FFNs are per-token => zero collectives while
+    seq-sharded; attention gathers K/V (small under GQA) and keeps Q
+    seq-sharded (context parallelism).  Without this, FSDP's ZeRO sharding
+    of w_down leaks a feature-over-data sharding into the residual stream
+    and the logits matmul all-reduces 10 GB/microbatch (qwen2 train_4k).
+    Gated by cfg.shard_activations; no-op outside a mesh context.
+    """
+    if not cfg.shard_activations or x.ndim != 3:
+        return x
+    family = cfg.family
+    dp, m = _dp_axes()
+    if m is None or "model" not in m.axis_names:
+        return x
+    from jax.sharding import PartitionSpec as P
+    dp_size = 1
+    for a in dp:
+        dp_size *= int(m.shape[a])
+    tp = int(m.shape["model"])
+    B, S, _ = x.shape
+    b_ax = (dp if len(dp) > 1 else dp[0]) if (dp and B % dp_size == 0) else None
+    # MoE: seq-sharding the residual forces the token-dispatch scatter to
+    # run replicated (measured 25x FLOP regression on moonshot train_4k,
+    # §Perf it-7-refuted) — batch-shard only; experts get EP constraints
+    # inside moe_ffn instead.
+    s_ax = "model" if (S % tp == 0 and S > 1 and family != "moe") else None
+    return jax.lax.with_sharding_constraint(x, P(b_ax, s_ax, None))
+
+
+def _shard_attn(qg, kc, vc, Sq, KV, G, chunk, enabled):
+    """§Perf hillclimb #1: constrain the attention intermediates so the
+    O(S*C) score tensor shards over 'model' instead of replicating.
+
+    GQA head counts frequently do not divide the TP degree (qwen2: 12 heads
+    / 16-way model axis), in which case GSPMD replicates the whole attention
+    computation per chip.  Preference order: shard the G (grouped-query)
+    dim, else the KV dim, else the query-sequence dim (context parallelism);
+    decode (Sq == 1) shards the KV chunk dim instead.
+    """
+    if not enabled:
+        return qg, kc, vc
+    tp = _model_axis_size()
+    if tp <= 1:
+        return qg, kc, vc
+    wsc = jax.lax.with_sharding_constraint
+    from jax.sharding import PartitionSpec as P
+    U = P.UNCONSTRAINED
+    if Sq > 1:
+        if G % tp == 0:
+            qg = wsc(qg, P(U, U, U, "model", U))         # (B,Sq,KV,G,hd)
+        elif KV % tp == 0:
+            qg = wsc(qg, P(U, U, "model", U, U))
+            kc = wsc(kc, P(U, U, U, "model", U))          # (B,n,C,KV,hd)
+            vc = wsc(vc, P(U, U, U, "model", U))
+        elif Sq % tp == 0:
+            qg = wsc(qg, P(U, "model", U, U, U))          # context parallel
+    else:
+        hd = qg.shape[-1]
+        if hd % tp == 0:        # decode: head-dim TP, matching the hd-sharded
+            qg = wsc(qg, P(U, U, U, U, "model"))          # cache input spec
+            kc = wsc(kc, P(U, U, U, U, "model"))
+            vc = wsc(vc, P(U, U, U, U, "model"))
+    return qg, kc, vc
+
+
+def chunked_attention(q, k, v, *, causal: bool, q_offset=0, window: int = 0,
+                      chunk: int = 1024, kv_len: Optional[jax.Array] = None,
+                      unroll: bool = False, shard: bool = False):
+    """Flash-style attention, chunked over KV, online softmax, GQA-grouped.
+
+    q: (B, Sq, H, hd);  k, v: (B, Sk, KV, hd);  H = KV * G.
+    q_offset: absolute position of q[0] (decode: current cache length).
+    window:  local attention span (0 = unbounded).
+    kv_len:  optional dynamic valid length of k/v (decode with cache).
+    Returns (B, Sq, H, hd).
+    """
+    B, Sq, H, hd = q.shape
+    _, Sk, KV, _ = k.shape
+    G = H // KV
+    scale = 1.0 / np.sqrt(hd)
+
+    chunk = min(chunk, Sk)
+    n_chunks = -(-Sk // chunk)
+    pad = n_chunks * chunk - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    valid_len = jnp.asarray(Sk if kv_len is None else kv_len, jnp.int32)
+
+    qg = q.reshape(B, Sq, KV, G, hd).astype(jnp.float32) * scale
+    q_pos = q_offset + jnp.arange(Sq, dtype=jnp.int32)
+
+    kc = k.reshape(B, n_chunks, chunk, KV, hd)
+    vc = v.reshape(B, n_chunks, chunk, KV, hd)
+    qg, kc, vc = _shard_attn(qg, kc, vc, Sq, KV, G, chunk, shard)
+
+    def step(carry, inp):
+        m, l, acc = carry
+        idx, kb, vb = inp                                # kb/vb: (B, C, KV, hd)
+        k_pos = idx * chunk + jnp.arange(chunk, dtype=jnp.int32)
+        s = jnp.einsum("bqkgh,bckh->bkgqc", qg, kb.astype(jnp.float32))
+        mask = k_pos[None, :] <= (q_pos[:, None] if causal else
+                                  jnp.full((Sq, 1), 2**30, jnp.int32))
+        mask &= k_pos[None, :] < valid_len
+        if window:
+            mask &= k_pos[None, :] > (q_pos[:, None] - window)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))           # (B,KV,G,Sq)
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bkgqc,bckh->bkgqh", p, vb.astype(jnp.float32))
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, KV, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, KV, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, KV, G, Sq, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0),
+        (jnp.arange(n_chunks, dtype=jnp.int32),
+         jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0)),
+        unroll=True if unroll else 1)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]         # (B,KV,G,Sq,hd)
+    out = jnp.moveaxis(out, 3, 1).reshape(B, Sq, H, hd)
+    return out.astype(q.dtype)
+
+
+# ------------------------------------------------------------------ FFN
+
+def ffn_apply(x, p, cfg: ModelConfig, recipe: QuantRecipe):
+    """SwiGLU or GELU FFN over (B, S, D)."""
+    if cfg.ffn == "swiglu":
+        g = qlinear(x, p["w_gate"], recipe=recipe)
+        u = qlinear(x, p["w_up"], recipe=recipe)
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    else:
+        h = qlinear(x, p["w_up"], p.get("b_up"), recipe=recipe)
+        h = jax.nn.gelu(h.astype(jnp.float32), approximate=True).astype(x.dtype)
+    return qlinear(h, p["w_down"], p.get("b_down"), recipe=recipe)
+
+
+def ffn_param_specs(cfg: ModelConfig, L=(), d_in=None, d_ff=None, bias=False):
+    d = d_in or cfg.d_model
+    f = d_ff or cfg.d_ff
+    pd = cfg.p_dtype
+    sd = jax.ShapeDtypeStruct
+    p = {}
+    if cfg.ffn == "swiglu":
+        p["w_gate"] = sd(L + (d, f), pd)
+        p["w_up"] = sd(L + (d, f), pd)
+        p["w_down"] = sd(L + (f, d), pd)
+    else:
+        p["w_up"] = sd(L + (d, f), pd)
+        p["w_down"] = sd(L + (f, d), pd)
+        if bias:
+            p["b_up"] = sd(L + (f,), pd)
+            p["b_down"] = sd(L + (d,), pd)
+    return p
+
+
+# ------------------------------------------------------------ utilities
+
+def init_from_specs(rng, specs, init_scale=0.02):
+    """Materialize a ShapeDtypeStruct pytree with trunc-normal weights
+    (matrices), zeros (biases / norms handled as zeros+1 in norm())."""
+    leaves, treedef = jax.tree.flatten(specs)
+    rngs = jax.random.split(rng, len(leaves))
+    vals = []
+    for r, s in zip(rngs, leaves):
+        if len(s.shape) >= 2:
+            fan_in = s.shape[-2]
+            v = jax.random.truncated_normal(r, -2, 2, s.shape, jnp.float32)
+            v = v * (init_scale if fan_in == 0 else min(init_scale, fan_in ** -0.5))
+        else:
+            v = jnp.zeros(s.shape, jnp.float32)
+        vals.append(v.astype(s.dtype))
+    return jax.tree.unflatten(treedef, vals)
+
+
+def softcap(logits, cap: float):
+    if not cap:
+        return logits
+    return jnp.tanh(logits / cap) * cap

@@ -1,0 +1,245 @@
+"""Whisper-style encoder-decoder backbone (audio family).
+
+The conv frontend is a STUB per the assignment: ``input_specs()`` provides
+precomputed frame embeddings (B, n_frames, d_model).  Encoder = bidirectional
+self-attention stack; decoder = causal self-attention + cross-attention.
+LayerNorm + GELU FFN + sinusoidal positions, per the Whisper architecture.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.quantize.layers import qlinear
+from .common import (constrain_logits, constrain_residual, ModelConfig, chunked_attention, ffn_apply,
+                     ffn_param_specs, norm, norm_param_spec,
+                     sinusoidal_embedding, softcap)
+from .transformer import attn_param_specs
+
+SDS = jax.ShapeDtypeStruct
+
+
+def _enc_layer_specs(cfg, L=()):
+    return {
+        "attn_norm": norm_param_spec(cfg, L),
+        "attn": attn_param_specs(cfg, L),
+        "ffn_norm": norm_param_spec(cfg, L),
+        "ffn": ffn_param_specs(cfg, L, bias=True),
+    }
+
+
+def _dec_layer_specs(cfg, L=()):
+    return {
+        "self_norm": norm_param_spec(cfg, L),
+        "self_attn": attn_param_specs(cfg, L),
+        "cross_norm": norm_param_spec(cfg, L),
+        "cross_attn": attn_param_specs(cfg, L),
+        "ffn_norm": norm_param_spec(cfg, L),
+        "ffn": ffn_param_specs(cfg, L, bias=True),
+    }
+
+
+def param_specs(cfg: ModelConfig):
+    pd = cfg.p_dtype
+    return {
+        "embed": SDS((cfg.vocab, cfg.d_model), pd),
+        "enc_layers": _enc_layer_specs(cfg, (cfg.n_enc_layers,)),
+        "enc_final_norm": norm_param_spec(cfg),
+        "dec_layers": _dec_layer_specs(cfg, (cfg.n_layers,)),
+        "final_norm": norm_param_spec(cfg),
+    }  # Whisper ties the output head to the token embedding
+
+
+def _mha(x, p, cfg, *, kv=None, causal, positions=None):
+    """Generic MHA: self (kv=None) or cross (kv = encoder output)."""
+    recipe = cfg.quant
+    B, S, D = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    src = x if kv is None else kv
+    q = qlinear(x, p["wq"], p.get("bq"), recipe=recipe).reshape(B, S, H, hd)
+    k = qlinear(src, p["wk"], p.get("bk"), recipe=recipe).reshape(
+        B, src.shape[1], KV, hd)
+    v = qlinear(src, p["wv"], p.get("bv"), recipe=recipe).reshape(
+        B, src.shape[1], KV, hd)
+    out = chunked_attention(q, k, v, causal=causal, chunk=cfg.attn_chunk,
+                            unroll=cfg.scan_unroll, shard=cfg.shard_activations)
+    return qlinear(out.reshape(B, S, H * hd), p["wo"], recipe=recipe)
+
+
+def encode(params, frames, cfg: ModelConfig):
+    """frames: (B, n_frames, d_model) stub embeddings -> encoder states."""
+    h = frames.astype(cfg.act_dtype)
+    h = h + sinusoidal_embedding(h.shape[1], cfg.d_model).astype(h.dtype)[None]
+
+    def body(x, lp):
+        x = constrain_residual(x, cfg)
+        a = _mha(norm(x, lp["attn_norm"], cfg.norm), lp["attn"], cfg,
+                 causal=False)
+        x = x + a
+        f = ffn_apply(norm(x, lp["ffn_norm"], cfg.norm), lp["ffn"], cfg,
+                      cfg.quant)
+        return x + f, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    h, _ = jax.lax.scan(body, h, params["enc_layers"],
+                        unroll=True if cfg.scan_unroll else 1)
+    return norm(h, params["enc_final_norm"], cfg.norm)
+
+
+def decode(params, enc_out, tokens, cfg: ModelConfig):
+    h = jnp.take(params["embed"], tokens, axis=0).astype(cfg.act_dtype)
+    h = h + sinusoidal_embedding(h.shape[1], cfg.d_model).astype(h.dtype)[None]
+
+    def body(x, lp):
+        x = constrain_residual(x, cfg)
+        a = _mha(norm(x, lp["self_norm"], cfg.norm), lp["self_attn"], cfg,
+                 causal=True)
+        x = x + a
+        c = _mha(norm(x, lp["cross_norm"], cfg.norm), lp["cross_attn"], cfg,
+                 kv=enc_out, causal=False)
+        x = x + c
+        f = ffn_apply(norm(x, lp["ffn_norm"], cfg.norm), lp["ffn"], cfg,
+                      cfg.quant)
+        return x + f, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    h, _ = jax.lax.scan(body, h, params["dec_layers"],
+                        unroll=True if cfg.scan_unroll else 1)
+    h = norm(h, params["final_norm"], cfg.norm)
+    logits = jnp.einsum("bsd,vd->bsv", h, params["embed"].astype(h.dtype))
+    logits = constrain_logits(logits)
+    return softcap(logits, cfg.logits_softcap).astype(jnp.float32)
+
+
+def forward(params, batch, cfg: ModelConfig):
+    enc_out = encode(params, batch["frames"], cfg)
+    logits = decode(params, enc_out, batch["tokens"], cfg)
+    return logits, {"moe_aux": jnp.zeros((), jnp.float32), "n_prefix": 0}
+
+
+# ------------------------------------------------------------------ serving
+
+def cache_specs(cfg: ModelConfig, batch: int, cache_len: int):
+    KV, hd = cfg.n_kv_heads, cfg.hd
+    cd = cfg.act_dtype
+    L = cfg.n_layers
+    F = cfg.n_frames
+    return {
+        "self_k": SDS((L, batch, cache_len, KV, hd), cd),
+        "self_v": SDS((L, batch, cache_len, KV, hd), cd),
+        "cross_k": SDS((L, batch, F, KV, hd), cd),
+        "cross_v": SDS((L, batch, F, KV, hd), cd),
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_specs(cfg, batch, cache_len))
+
+
+def prefill(params, batch, cfg: ModelConfig, cache_len: int):
+    """Encode frames, precompute cross K/V, run the decoder prompt filling
+    the self-attention cache.  Returns (last logits (B, V), cache)."""
+    recipe = cfg.quant
+    enc_out = encode(params, batch["frames"], cfg)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    c0 = init_cache(cfg, B, cache_len)
+    h = jnp.take(params["embed"], tokens, axis=0).astype(cfg.act_dtype)
+    h = h + sinusoidal_embedding(S, cfg.d_model).astype(h.dtype)[None]
+
+    def body(x, lp_cache):
+        lp, sk, sv = lp_cache
+        hn = norm(x, lp["self_norm"], cfg.norm)
+        q = qlinear(hn, lp["self_attn"]["wq"], lp["self_attn"].get("bq"),
+                    recipe=recipe).reshape(B, S, H, hd)
+        k = qlinear(hn, lp["self_attn"]["wk"], lp["self_attn"].get("bk"),
+                    recipe=recipe).reshape(B, S, KV, hd)
+        v = qlinear(hn, lp["self_attn"]["wv"], lp["self_attn"].get("bv"),
+                    recipe=recipe).reshape(B, S, KV, hd)
+        sk = jax.lax.dynamic_update_slice_in_dim(sk, k.astype(sk.dtype), 0, axis=1)
+        sv = jax.lax.dynamic_update_slice_in_dim(sv, v.astype(sv.dtype), 0, axis=1)
+        a = chunked_attention(q, sk, sv, causal=True, chunk=cfg.attn_chunk,
+                              kv_len=S, unroll=cfg.scan_unroll, shard=cfg.shard_activations)
+        x = x + qlinear(a.reshape(B, S, H * hd), lp["self_attn"]["wo"],
+                        recipe=recipe)
+        hn = norm(x, lp["cross_norm"], cfg.norm)
+        qc = qlinear(hn, lp["cross_attn"]["wq"], lp["cross_attn"].get("bq"),
+                     recipe=recipe).reshape(B, S, H, hd)
+        ck_ = qlinear(enc_out, lp["cross_attn"]["wk"],
+                      lp["cross_attn"].get("bk"), recipe=recipe).reshape(
+            B, enc_out.shape[1], KV, hd)
+        cv_ = qlinear(enc_out, lp["cross_attn"]["wv"],
+                      lp["cross_attn"].get("bv"), recipe=recipe).reshape(
+            B, enc_out.shape[1], KV, hd)
+        c = chunked_attention(qc, ck_, cv_, causal=False,
+                              chunk=cfg.attn_chunk, unroll=cfg.scan_unroll, shard=cfg.shard_activations)
+        x = x + qlinear(c.reshape(B, S, H * hd), lp["cross_attn"]["wo"],
+                        recipe=recipe)
+        f = ffn_apply(norm(x, lp["ffn_norm"], cfg.norm), lp["ffn"], cfg, recipe)
+        return x + f, (sk, sv, ck_.astype(cfg.act_dtype),
+                       cv_.astype(cfg.act_dtype))
+
+    h, (sk, sv, ck, cv) = jax.lax.scan(
+        body, h, (params["dec_layers"], c0["self_k"], c0["self_v"]),
+        unroll=True if cfg.scan_unroll else 1)
+    cache = {"self_k": sk, "self_v": sv, "cross_k": ck, "cross_v": cv}
+    h = norm(h, params["final_norm"], cfg.norm)
+    logits = jnp.einsum("bd,vd->bv", h[:, -1], params["embed"].astype(h.dtype))
+    logits = constrain_logits(logits)
+    return softcap(logits, cfg.logits_softcap).astype(jnp.float32), cache
+
+
+def decode_step(params, cache, tokens, cache_index, cfg: ModelConfig):
+    """One decoder token; cross K/V assumed precomputed in the cache."""
+    recipe = cfg.quant
+    B = tokens.shape[0]
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    h = jnp.take(params["embed"], tokens, axis=0).astype(cfg.act_dtype)
+    pos_emb = sinusoidal_embedding(8192, cfg.d_model)
+    h = h + jax.lax.dynamic_slice_in_dim(
+        pos_emb, jnp.clip(cache_index, 0, 8191), 1, axis=0
+    ).astype(h.dtype)[None][:, :1]
+
+    def body(x, lp_cache):
+        lp, sk, sv, ck_, cv_ = lp_cache
+        S = x.shape[1]
+        hn = norm(x, lp["self_norm"], cfg.norm)
+        q = qlinear(hn, lp["self_attn"]["wq"], lp["self_attn"].get("bq"),
+                    recipe=recipe).reshape(B, S, H, hd)
+        k = qlinear(hn, lp["self_attn"]["wk"], lp["self_attn"].get("bk"),
+                    recipe=recipe).reshape(B, S, KV, hd)
+        v = qlinear(hn, lp["self_attn"]["wv"], lp["self_attn"].get("bv"),
+                    recipe=recipe).reshape(B, S, KV, hd)
+        sk = jax.lax.dynamic_update_slice_in_dim(sk, k.astype(sk.dtype),
+                                                 cache_index, axis=1)
+        sv = jax.lax.dynamic_update_slice_in_dim(sv, v.astype(sv.dtype),
+                                                 cache_index, axis=1)
+        a = chunked_attention(q, sk, sv, causal=True, q_offset=cache_index,
+                              chunk=cfg.attn_chunk, kv_len=cache_index + S,
+                              unroll=cfg.scan_unroll, shard=cfg.shard_activations)
+        x = x + qlinear(a.reshape(B, S, H * hd), lp["self_attn"]["wo"],
+                        recipe=recipe)
+        hn = norm(x, lp["cross_norm"], cfg.norm)
+        qc = qlinear(hn, lp["cross_attn"]["wq"], lp["cross_attn"].get("bq"),
+                     recipe=recipe).reshape(B, S, H, hd)
+        c = chunked_attention(qc, ck_, cv_, causal=False,
+                              chunk=cfg.attn_chunk, unroll=cfg.scan_unroll, shard=cfg.shard_activations)
+        x = x + qlinear(c.reshape(B, S, H * hd), lp["cross_attn"]["wo"],
+                        recipe=recipe)
+        f = ffn_apply(norm(x, lp["ffn_norm"], cfg.norm), lp["ffn"], cfg, recipe)
+        return x + f, (sk, sv)
+
+    h, (sk_new, sv_new) = jax.lax.scan(
+        body, h, (params["dec_layers"], cache["self_k"], cache["self_v"],
+                  cache["cross_k"], cache["cross_v"]),
+        unroll=True if cfg.scan_unroll else 1)
+    new_cache = dict(cache, self_k=sk_new, self_v=sv_new)
+    h = norm(h, params["final_norm"], cfg.norm)
+    logits = jnp.einsum("bsd,vd->bsv", h, params["embed"].astype(h.dtype))
+    logits = constrain_logits(logits)
+    return softcap(logits, cfg.logits_softcap)[:, -1].astype(jnp.float32), \
+        new_cache

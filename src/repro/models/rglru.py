@@ -1,0 +1,355 @@
+"""RecurrentGemma-style hybrid: RG-LRU recurrent blocks + local attention.
+
+Block pattern (cfg.block_pattern, e.g. ("rec", "rec", "attn")) repeats over
+the depth; the tail (n_layers % len(pattern)) reuses the pattern prefix.
+Full pattern groups run under ``lax.scan``; tail layers are unrolled.
+
+RG-LRU recurrence (Griffin, De et al. 2024), diagonal and gated:
+
+    r_t = sigmoid(x_t * w_r + b_r)           (recurrence gate, diagonal)
+    i_t = sigmoid(x_t * w_i + b_i)           (input gate, diagonal)
+    a_t = exp(-c * softplus(Lambda) * r_t)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Diagonal => associative scan over the sequence (O(log S) depth on TPU).
+Gate weights are diagonal vectors (the reference model uses block-diagonal
+matrices; this is noted as a structural simplification in DESIGN.md).
+
+long_500k runs here: the recurrence carries O(1) state and the attention
+layers use a window-bounded cache (ring buffer on decode), so cost is
+O(S * window), sub-quadratic as required.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.quantize.layers import qlinear
+from .common import constrain_logits, constrain_residual, ModelConfig, apply_rope, chunked_attention, ffn_apply, \
+    ffn_param_specs, norm, norm_param_spec, softcap
+from .transformer import attn_param_specs, attention
+
+SDS = jax.ShapeDtypeStruct
+_C = 8.0  # RG-LRU decay sharpness constant
+
+
+# ------------------------------------------------------------ param specs
+
+def rec_param_specs(cfg: ModelConfig, L=()):
+    d, w = cfg.d_model, cfg.lru_width
+    pd = cfg.p_dtype
+    return {
+        "w_in_gate": SDS(L + (d, w), pd),     # GELU branch
+        "w_in_rec": SDS(L + (d, w), pd),      # recurrent branch
+        "conv_k": SDS(L + (4, w), pd),        # temporal conv, width 4
+        "lam": SDS(L + (w,), pd),             # Lambda (decay magnitude)
+        "w_rgate": SDS(L + (w,), pd),
+        "b_rgate": SDS(L + (w,), pd),
+        "w_igate": SDS(L + (w,), pd),
+        "b_igate": SDS(L + (w,), pd),
+        "w_out": SDS(L + (w, d), pd),
+    }
+
+
+def _group_layout(cfg: ModelConfig):
+    pat = tuple(cfg.block_pattern)
+    n_groups = cfg.n_layers // len(pat)
+    tail = cfg.n_layers - n_groups * len(pat)
+    return pat, n_groups, pat[:tail]
+
+
+def param_specs(cfg: ModelConfig):
+    pat, n_groups, tail = _group_layout(cfg)
+    pd = cfg.p_dtype
+
+    def one_group(L):
+        g = []
+        for kind in pat:
+            g.append(_layer_specs(cfg, kind, L))
+        return tuple(g)
+
+    p = {
+        "embed": SDS((cfg.vocab, cfg.d_model), pd),
+        "groups": one_group((n_groups,)),
+        "tail": tuple(_layer_specs(cfg, kind, ()) for kind in tail),
+    }
+    fn = norm_param_spec(cfg)
+    if fn is not None:
+        p["final_norm"] = fn
+    if not cfg.tie_embeddings:
+        p["lm_head"] = SDS((cfg.d_model, cfg.vocab), pd)
+    return p
+
+
+def _layer_specs(cfg, kind, L):
+    p = {}
+    an = norm_param_spec(cfg, L)
+    if an is not None:
+        p["pre_norm"] = an
+        p["ffn_norm"] = norm_param_spec(cfg, L)
+    p["mix"] = rec_param_specs(cfg, L) if kind == "rec" else attn_param_specs(cfg, L)
+    p["ffn"] = ffn_param_specs(cfg, L)
+    return p
+
+
+# ---------------------------------------------------------------- RG-LRU
+
+def rg_lru(x, p, h0=None):
+    """x: (B, S, W).  Returns (y, h_last).  Associative scan over S."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf * p["w_rgate"].astype(jnp.float32) +
+                       p["b_rgate"].astype(jnp.float32))
+    i = jax.nn.sigmoid(xf * p["w_igate"].astype(jnp.float32) +
+                       p["b_igate"].astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r  # (B,S,W)
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * xf)
+    if h0 is not None:
+        # fold the carried state into the first step
+        gated = gated.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    a_s, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    return h.astype(x.dtype), h[:, -1]
+
+
+def rec_mix(x, p, cfg: ModelConfig, state=None):
+    """The Griffin recurrent block.  state: {"h": (B,W), "conv": (B,3,W)}."""
+    recipe = cfg.quant
+    gate = jax.nn.gelu(qlinear(x, p["w_in_gate"], recipe=recipe)
+                       .astype(jnp.float32)).astype(x.dtype)
+    u = qlinear(x, p["w_in_rec"], recipe=recipe)       # (B, S, W)
+
+    # temporal conv (causal, width 4) with optional carried tail
+    if state is not None:
+        u_ext = jnp.concatenate([state["conv"].astype(u.dtype), u], axis=1)
+    else:
+        u_ext = jnp.pad(u, ((0, 0), (3, 0), (0, 0)))
+    ck = p["conv_k"].astype(jnp.float32)
+    uc = sum(u_ext[:, 3 - j:u_ext.shape[1] - j].astype(jnp.float32) * ck[3 - j]
+             for j in range(4)).astype(u.dtype)
+
+    y, h_last = rg_lru(uc, p, h0=None if state is None else state["h"])
+    out = qlinear(y * gate, p["w_out"], recipe=recipe)
+    new_state = None
+    if state is not None:
+        new_state = {"h": h_last.astype(state["h"].dtype),
+                     "conv": u_ext[:, -3:].astype(state["conv"].dtype)}
+    return out, new_state
+
+
+# ------------------------------------------------------------------ layers
+
+def _apply_layer(x, lp, kind, cfg, *, positions, state=None, cache_index=None):
+    x = constrain_residual(x, cfg)
+    h = norm(x, lp.get("pre_norm"), cfg.norm)
+    if kind == "rec":
+        mix, new_state = rec_mix(h, lp["mix"], cfg, state=state)
+    else:
+        mix, new_state = attention(
+            h, lp["mix"], cfg, positions=positions, kv_cache=state,
+            cache_index=cache_index, window=cfg.window)
+    x = x + mix
+    h = norm(x, lp.get("ffn_norm"), cfg.norm)
+    x = x + ffn_apply(h, lp["ffn"], cfg, cfg.quant)
+    return x, new_state
+
+
+# ------------------------------------------------------------------ forward
+
+def forward(params, batch, cfg: ModelConfig):
+    pat, n_groups, tail = _group_layout(cfg)
+    h = jnp.take(params["embed"], batch["tokens"], axis=0).astype(cfg.act_dtype)
+    S = h.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+
+    def group_body(x, gp):
+        for kind, lp in zip(pat, gp):
+            x, _ = _apply_layer(x, lp, kind, cfg, positions=positions)
+        return x, None
+
+    if cfg.remat:
+        group_body = jax.checkpoint(group_body, prevent_cse=False)
+    h, _ = jax.lax.scan(group_body, h, params["groups"],
+                        unroll=True if cfg.scan_unroll else 1)
+    for kind, lp in zip(tail, params["tail"]):
+        h, _ = _apply_layer(h, lp, kind, cfg, positions=positions)
+    h = norm(h, params.get("final_norm"), cfg.norm)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", h, head.astype(h.dtype))
+    logits = constrain_logits(logits)
+    return softcap(logits, cfg.logits_softcap).astype(jnp.float32), {
+        "moe_aux": jnp.zeros((), jnp.float32), "n_prefix": 0}
+
+
+# ------------------------------------------------------------------ serving
+
+def cache_specs(cfg: ModelConfig, batch: int, cache_len: int):
+    """Recurrent state per rec layer + windowed KV per attn layer."""
+    pat, n_groups, tail = _group_layout(cfg)
+    kinds = list(pat) * n_groups + list(tail)
+    w = cfg.lru_width
+    KV, hd = cfg.n_kv_heads, cfg.hd
+    win = min(cache_len, cfg.window) if cfg.window else cache_len
+    cdtype = cfg.act_dtype
+    caches = []
+    for kind in kinds:
+        if kind == "rec":
+            caches.append({"h": SDS((batch, w), jnp.float32),
+                           "conv": SDS((batch, 3, w), cdtype)})
+        else:
+            caches.append({"k": SDS((batch, win, KV, hd), cdtype),
+                           "v": SDS((batch, win, KV, hd), cdtype)})
+    return tuple(caches)
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_specs(cfg, batch, cache_len))
+
+
+def prefill(params, batch, cfg: ModelConfig, cache_len: int):
+    """Prompt processing.  Rec layers carry O(1) state through the scan;
+    attention layers keep the last ``window`` KVs (ring starts at slot
+    S %% window so decode continues consistently)."""
+    pat, n_groups, tail = _group_layout(cfg)
+    kinds = list(pat) * n_groups + list(tail)
+    layer_params = _unstack_groups(params, cfg)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    h = jnp.take(params["embed"], tokens, axis=0).astype(cfg.act_dtype)
+    positions = jnp.arange(S, dtype=jnp.int32)
+    win = min(cache_len, cfg.window) if cfg.window else cache_len
+
+    new_caches = []
+    for kind, lp in zip(kinds, layer_params):
+        hn = norm(h, lp.get("pre_norm"), cfg.norm)
+        if kind == "rec":
+            state0 = {"h": jnp.zeros((B, cfg.lru_width), jnp.float32),
+                      "conv": jnp.zeros((B, 3, cfg.lru_width), cfg.act_dtype)}
+            mix, st = rec_mix(hn, lp["mix"], cfg, state=state0)
+        else:
+            mix, kv = _prefill_window_attn(hn, lp["mix"], cfg, positions, win)
+            st = kv
+        h = h + mix
+        hf = norm(h, lp.get("ffn_norm"), cfg.norm)
+        h = h + ffn_apply(hf, lp["ffn"], cfg, cfg.quant)
+        new_caches.append(st)
+    h = norm(h, params.get("final_norm"), cfg.norm)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bd,dv->bv", h[:, -1], head.astype(h.dtype))
+    logits = constrain_logits(logits)
+    return softcap(logits, cfg.logits_softcap).astype(jnp.float32), \
+        tuple(new_caches)
+
+
+def _prefill_window_attn(x, p, cfg, positions, win):
+    """Full windowed attention over the prompt + last-``win`` KV ring state."""
+    recipe = cfg.quant
+    B, S, D = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = qlinear(x, p["wq"], p.get("bq"), recipe=recipe).reshape(B, S, H, hd)
+    k = qlinear(x, p["wk"], p.get("bk"), recipe=recipe).reshape(B, S, KV, hd)
+    v = qlinear(x, p["wv"], p.get("bv"), recipe=recipe).reshape(B, S, KV, hd)
+    if cfg.pos == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    out = chunked_attention(q, k, v, causal=True, window=cfg.window,
+                            chunk=cfg.attn_chunk, unroll=cfg.scan_unroll, shard=cfg.shard_activations)
+    out = qlinear(out.reshape(B, S, H * hd), p["wo"], recipe=recipe)
+    # ring state: last `win` kv entries, placed so that ring slot
+    # (pos % win) holds position pos — matches decode's slot arithmetic
+    last_k = k[:, -win:] if S >= win else jnp.pad(k, ((0, 0), (0, win - S),
+                                                      (0, 0), (0, 0)))
+    last_v = v[:, -win:] if S >= win else jnp.pad(v, ((0, 0), (0, win - S),
+                                                      (0, 0), (0, 0)))
+    # last_k[i] holds position (S - win + i); its ring slot is that pos % win
+    # == ((S - win) % win + i) % win  =>  a roll by (S - win) % win
+    start = (S - win) % win if S >= win else 0
+    ring_k = jnp.roll(last_k, start, axis=1) if S >= win else last_k
+    ring_v = jnp.roll(last_v, start, axis=1) if S >= win else last_v
+    return out, {"k": ring_k.astype(cfg.act_dtype),
+                 "v": ring_v.astype(cfg.act_dtype)}
+
+
+def decode_step(params, cache, tokens, cache_index, cfg: ModelConfig):
+    """Single-token decode.  Attention caches are ring buffers of size
+    ``window``; the recurrence carries O(1) state."""
+    pat, n_groups, tail = _group_layout(cfg)
+    kinds = list(pat) * n_groups + list(tail)
+    layer_params = _unstack_groups(params, cfg)
+    h = jnp.take(params["embed"], tokens, axis=0).astype(cfg.act_dtype)
+    positions = cache_index + jnp.arange(tokens.shape[1], dtype=jnp.int32)
+
+    new_caches = []
+    for kind, lp, st in zip(kinds, layer_params, cache):
+        if kind == "attn":
+            win = st["k"].shape[1]
+            slot = cache_index % win
+            h2 = norm(h, lp.get("pre_norm"), cfg.norm)
+            mix, new_st = _windowed_decode_attn(h2, lp["mix"], st, slot,
+                                                cache_index, cfg)
+            h = h + mix
+            hf = norm(h, lp.get("ffn_norm"), cfg.norm)
+            h = h + ffn_apply(hf, lp["ffn"], cfg, cfg.quant)
+        else:
+            h, new_st = _apply_layer(h, lp, kind, cfg, positions=positions,
+                                     state=st, cache_index=cache_index)
+        new_caches.append(new_st)
+    h = norm(h, params.get("final_norm"), cfg.norm)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", h, head.astype(h.dtype))
+    logits = constrain_logits(logits)
+    return softcap(logits, cfg.logits_softcap)[:, -1].astype(jnp.float32), \
+        tuple(new_caches)
+
+
+def _windowed_decode_attn(x, p, st, slot, cache_index, cfg):
+    """Ring-buffer local attention for one decode token."""
+    recipe = cfg.quant
+    B, S, D = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = qlinear(x, p["wq"], p.get("bq"), recipe=recipe).reshape(B, S, H, hd)
+    k = qlinear(x, p["wk"], p.get("bk"), recipe=recipe).reshape(B, S, KV, hd)
+    v = qlinear(x, p["wv"], p.get("bv"), recipe=recipe).reshape(B, S, KV, hd)
+    if cfg.pos == "rope":
+        pos = cache_index + jnp.arange(S, dtype=jnp.int32)
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+    ck = jax.lax.dynamic_update_slice_in_dim(
+        st["k"], k.astype(st["k"].dtype), slot, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(
+        st["v"], v.astype(st["v"].dtype), slot, axis=1)
+    win = ck.shape[1]
+    # valid entries: min(cache_index+1, win); ring layout — attention over the
+    # whole buffer with masking of unwritten slots (positions are unordered in
+    # the ring but softmax is permutation-invariant given correct masking)
+    n_valid = jnp.minimum(cache_index + 1, win)
+    G = H // KV
+    qg = q.reshape(B, 1, KV, G, hd).astype(jnp.float32) / np.sqrt(hd)
+    s = jnp.einsum("bqkgh,bckh->bkgqc", qg, ck.astype(jnp.float32))
+    slot_ids = jnp.arange(win, dtype=jnp.int32)
+    written = slot_ids < n_valid
+    s = jnp.where(written[None, None, None, None, :], s, -1e30)
+    pmax = s.max(axis=-1, keepdims=True)
+    pr = jnp.exp(s - pmax)
+    out = jnp.einsum("bkgqc,bckh->bkgqh", pr, cv.astype(jnp.float32))
+    out = out / jnp.maximum(pr.sum(-1)[..., None], 1e-30)
+    out = jnp.moveaxis(out, 3, 1).reshape(B, S, H * hd).astype(x.dtype)
+    return qlinear(out, p["wo"], recipe=recipe), {"k": ck, "v": cv}
+
+
+def _unstack_groups(params, cfg: ModelConfig):
+    """Flatten the (groups, tail) param layout into a per-layer list."""
+    pat, n_groups, tail = _group_layout(cfg)
+    layers = []
+    for gi in range(n_groups):
+        for lp in params["groups"]:
+            layers.append(jax.tree.map(lambda a: a[gi], lp))
+    layers.extend(params["tail"])
+    return layers

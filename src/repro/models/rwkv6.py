@@ -1,0 +1,252 @@
+"""RWKV-6 "Finch" (Peng et al. 2024): attention-free, data-dependent decay.
+
+Per layer: time-mix (the wkv recurrence) + channel-mix, both with
+token-shift interpolation.  Per head (dim N = cfg.rwkv_head_dim):
+
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t            (state:  N x N)
+    o_t = r_t (S_{t-1} + diag(u) k_t^T v_t)        (readout, bonus u)
+
+with w_t = exp(-exp(omega_t)) a *data-dependent* per-channel decay (the
+Finch novelty), omega_t produced by a low-rank projection.  Training path
+uses ``lax.scan`` over time in float32 (the recurrence is numerically
+delicate); decode carries S as the cache => O(1) per token, which is why
+this arch runs the long_500k shape.
+
+Token-shift: lerp(x_t, x_{t-1}, mu) with learned mu per use-site.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.quantize.layers import qlinear
+from .common import constrain_logits, constrain_residual, ModelConfig, norm, norm_param_spec, softcap
+
+SDS = jax.ShapeDtypeStruct
+LORA_R = 64  # low-rank dim for the decay projection
+
+
+def _heads(cfg):
+    N = cfg.rwkv_head_dim
+    H = cfg.d_model // N
+    return H, N
+
+
+# ------------------------------------------------------------ param specs
+
+def layer_param_specs(cfg: ModelConfig, L=()):
+    d = cfg.d_model
+    pd = cfg.p_dtype
+    H, N = _heads(cfg)
+    p = {
+        "ln1": norm_param_spec(cfg, L),
+        "ln2": norm_param_spec(cfg, L),
+        # time-mix interpolation factors (r, k, v, w, g)
+        "mu_r": SDS(L + (d,), pd), "mu_k": SDS(L + (d,), pd),
+        "mu_v": SDS(L + (d,), pd), "mu_w": SDS(L + (d,), pd),
+        "mu_g": SDS(L + (d,), pd),
+        "w_r": SDS(L + (d, d), pd), "w_k": SDS(L + (d, d), pd),
+        "w_v": SDS(L + (d, d), pd), "w_g": SDS(L + (d, d), pd),
+        "w_o": SDS(L + (d, d), pd),
+        # data-dependent decay: w0 + (x mu_w) @ A @ B (low-rank)
+        "w0": SDS(L + (d,), pd),
+        "w_lora_a": SDS(L + (d, LORA_R), pd),
+        "w_lora_b": SDS(L + (LORA_R, d), pd),
+        "u_bonus": SDS(L + (H, N), pd),
+        # channel-mix
+        "mu_ck": SDS(L + (d,), pd), "mu_cr": SDS(L + (d,), pd),
+        "w_ck": SDS(L + (d, cfg.d_ff), pd),
+        "w_cv": SDS(L + (cfg.d_ff, d), pd),
+        "w_cr": SDS(L + (d, d), pd),
+    }
+    if p["ln1"] is None:
+        del p["ln1"], p["ln2"]
+    return p
+
+
+def param_specs(cfg: ModelConfig):
+    pd = cfg.p_dtype
+    p = {
+        "embed": SDS((cfg.vocab, cfg.d_model), pd),
+        "layers": layer_param_specs(cfg, (cfg.n_layers,)),
+    }
+    fn = norm_param_spec(cfg)
+    if fn is not None:
+        p["final_norm"] = fn
+    if not cfg.tie_embeddings:
+        p["lm_head"] = SDS((cfg.d_model, cfg.vocab), pd)
+    return p
+
+
+# ------------------------------------------------------------------ mixing
+
+def _token_shift(x, x_prev_last=None):
+    """x_{t-1} along the sequence; first step uses carried state (decode)."""
+    if x_prev_last is None:
+        return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    return jnp.concatenate([x_prev_last[:, None], x[:, :-1]], axis=1)
+
+
+def _lerp(x, xs, mu):
+    return x + (xs - x) * mu.astype(x.dtype)
+
+
+def time_mix(x, p, cfg: ModelConfig, state=None):
+    """state: {"shift": (B, D), "wkv": (B, H, N, N) f32} or None (training).
+
+    Returns (out, new_state_or_None)."""
+    recipe = cfg.quant
+    B, S, D = x.shape
+    H, N = _heads(cfg)
+    xs = _token_shift(x, None if state is None else state["shift"])
+
+    r = qlinear(_lerp(x, xs, p["mu_r"]), p["w_r"], recipe=recipe)
+    k = qlinear(_lerp(x, xs, p["mu_k"]), p["w_k"], recipe=recipe)
+    v = qlinear(_lerp(x, xs, p["mu_v"]), p["w_v"], recipe=recipe)
+    g = qlinear(_lerp(x, xs, p["mu_g"]), p["w_g"], recipe=recipe)
+    xw = _lerp(x, xs, p["mu_w"]).astype(jnp.float32)
+    omega = p["w0"].astype(jnp.float32) + \
+        jnp.tanh(xw @ p["w_lora_a"].astype(jnp.float32)) @ \
+        p["w_lora_b"].astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(jnp.clip(omega, -20.0, 8.0)))          # (B,S,D) in (0,1)
+
+    rh = r.reshape(B, S, H, N).astype(jnp.float32)
+    kh = k.reshape(B, S, H, N).astype(jnp.float32)
+    vh = v.reshape(B, S, H, N).astype(jnp.float32)
+    wh = w.reshape(B, S, H, N)
+    u = p["u_bonus"].astype(jnp.float32)                        # (H, N)
+
+    def step(Sst, inp):
+        rt, kt, vt, wt = inp                                    # (B,H,N)
+        kv = kt[..., :, None] * vt[..., None, :]                # (B,H,N,N)
+        out = jnp.einsum("bhn,bhnm->bhm", rt, Sst + u[None, :, :, None] * kv)
+        S_new = wt[..., None] * Sst + kv
+        return S_new, out
+
+    S0 = jnp.zeros((B, H, N, N), jnp.float32) if state is None \
+        else state["wkv"].astype(jnp.float32)
+    xs_t = tuple(jnp.moveaxis(a, 1, 0) for a in (rh, kh, vh, wh))
+    S_last, outs = jax.lax.scan(step, S0, xs_t)
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, S, D)             # (B,S,D)
+
+    out = out * jax.nn.silu(g.astype(jnp.float32))
+    out = qlinear(out.astype(x.dtype), p["w_o"], recipe=recipe)
+    new_state = None
+    if state is not None:
+        new_state = {"shift": x[:, -1].astype(state["shift"].dtype),
+                     "wkv": S_last}
+    return out, new_state
+
+
+def channel_mix(x, p, cfg: ModelConfig, state=None):
+    recipe = cfg.quant
+    xs = _token_shift(x, None if state is None else state["shift"])
+    k = qlinear(_lerp(x, xs, p["mu_ck"]), p["w_ck"], recipe=recipe)
+    k = jnp.square(jax.nn.relu(k.astype(jnp.float32))).astype(x.dtype)
+    kv = qlinear(k, p["w_cv"], recipe=recipe)
+    r = jax.nn.sigmoid(qlinear(_lerp(x, xs, p["mu_cr"]), p["w_cr"],
+                               recipe=recipe).astype(jnp.float32))
+    out = (r * kv.astype(jnp.float32)).astype(x.dtype)
+    new_state = None
+    if state is not None:
+        new_state = {"shift": x[:, -1].astype(state["shift"].dtype)}
+    return out, new_state
+
+
+# ------------------------------------------------------------------ forward
+
+def _block(x, lp, cfg, tm_state=None, cm_state=None):
+    x = constrain_residual(x, cfg)
+    h = norm(x, lp.get("ln1"), cfg.norm)
+    tm, tm_new = time_mix(h, lp, cfg, state=tm_state)
+    x = x + tm
+    h = norm(x, lp.get("ln2"), cfg.norm)
+    cm, cm_new = channel_mix(h, lp, cfg, state=cm_state)
+    return x + cm, tm_new, cm_new
+
+
+def forward(params, batch, cfg: ModelConfig):
+    h = jnp.take(params["embed"], batch["tokens"], axis=0).astype(cfg.act_dtype)
+
+    def body(x, lp):
+        x, _, _ = _block(x, lp, cfg)
+        return x, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    h, _ = jax.lax.scan(body, h, params["layers"],
+                        unroll=True if cfg.scan_unroll else 1)
+    h = norm(h, params.get("final_norm"), cfg.norm)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", h, head.astype(h.dtype))
+    logits = constrain_logits(logits)
+    return softcap(logits, cfg.logits_softcap).astype(jnp.float32), {
+        "moe_aux": jnp.zeros((), jnp.float32), "n_prefix": 0}
+
+
+# ------------------------------------------------------------------ serving
+
+def cache_specs(cfg: ModelConfig, batch: int, cache_len: int):
+    """O(1) state per layer — independent of cache_len (that's the point)."""
+    H, N = _heads(cfg)
+    d = cfg.d_model
+    L = cfg.n_layers
+    return {
+        "tm_shift": SDS((L, batch, d), cfg.act_dtype),
+        "wkv": SDS((L, batch, H, N, N), jnp.float32),
+        "cm_shift": SDS((L, batch, d), cfg.act_dtype),
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_specs(cfg, batch, cache_len))
+
+
+def prefill(params, batch, cfg: ModelConfig, cache_len: int):
+    """Process the prompt, carrying the O(1) recurrent state per layer."""
+    tokens = batch["tokens"]
+    B = tokens.shape[0]
+    h = jnp.take(params["embed"], tokens, axis=0).astype(cfg.act_dtype)
+    c0 = init_cache(cfg, B, cache_len)
+
+    def body(x, lp_cache):
+        lp, tm_shift, wkv, cm_shift = lp_cache
+        x, tm_new, cm_new = _block(
+            x, lp, cfg,
+            tm_state={"shift": tm_shift, "wkv": wkv},
+            cm_state={"shift": cm_shift})
+        return x, (tm_new["shift"], tm_new["wkv"], cm_new["shift"])
+
+    h, (tm_s, wkv, cm_s) = jax.lax.scan(
+        body, h, (params["layers"], c0["tm_shift"], c0["wkv"], c0["cm_shift"]),
+        unroll=True if cfg.scan_unroll else 1)
+    new_cache = {"tm_shift": tm_s, "wkv": wkv, "cm_shift": cm_s}
+    h = norm(h, params.get("final_norm"), cfg.norm)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bd,dv->bv", h[:, -1], head.astype(h.dtype))
+    logits = constrain_logits(logits)
+    return softcap(logits, cfg.logits_softcap).astype(jnp.float32), new_cache
+
+
+def decode_step(params, cache, tokens, cache_index, cfg: ModelConfig):
+    h = jnp.take(params["embed"], tokens, axis=0).astype(cfg.act_dtype)
+
+    def body(x, lp_cache):
+        lp, tm_shift, wkv, cm_shift = lp_cache
+        x, tm_new, cm_new = _block(
+            x, lp, cfg,
+            tm_state={"shift": tm_shift, "wkv": wkv},
+            cm_state={"shift": cm_shift})
+        return x, (tm_new["shift"], tm_new["wkv"], cm_new["shift"])
+
+    h, (tm_s, wkv, cm_s) = jax.lax.scan(
+        body, h, (params["layers"], cache["tm_shift"], cache["wkv"],
+                  cache["cm_shift"]), unroll=True if cfg.scan_unroll else 1)
+    new_cache = {"tm_shift": tm_s, "wkv": wkv, "cm_shift": cm_s}
+    h = norm(h, params.get("final_norm"), cfg.norm)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", h, head.astype(h.dtype))
+    logits = constrain_logits(logits)
+    return softcap(logits, cfg.logits_softcap)[:, -1].astype(jnp.float32), \
+        new_cache

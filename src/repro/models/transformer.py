@@ -1,0 +1,376 @@
+"""Decoder-only transformer stack: dense GQA, fine-grained MoE, VLM.
+
+Pure-functional: ``param_specs(cfg)`` gives the ShapeDtypeStruct tree (used
+by init AND by the allocation-free dry-run), ``forward`` the training-path
+logits, ``decode_step`` the single-token serving path against a KV cache.
+Layers are stacked on a leading L axis and run under ``jax.lax.scan``.
+
+QONNX quantization enters through ``repro.quantize.layers`` at every linear
+(recipe-controlled), and optionally at the KV-cache write (serving).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.quantize.layers import qlinear, quant_kv
+from .common import (
+    constrain_logits,
+    constrain_residual,
+    ModelConfig,
+    apply_rope,
+    chunked_attention,
+    ffn_apply,
+    ffn_param_specs,
+    norm,
+    norm_param_spec,
+    softcap,
+)
+
+SDS = jax.ShapeDtypeStruct
+
+
+# ------------------------------------------------------------ param specs
+
+def attn_param_specs(cfg: ModelConfig, L=()):
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    pd = cfg.p_dtype
+    p = {
+        "wq": SDS(L + (d, H * hd), pd),
+        "wk": SDS(L + (d, KV * hd), pd),
+        "wv": SDS(L + (d, KV * hd), pd),
+        "wo": SDS(L + (H * hd, d), pd),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = SDS(L + (H * hd,), pd)
+        p["bk"] = SDS(L + (KV * hd,), pd)
+        p["bv"] = SDS(L + (KV * hd,), pd)
+    return p
+
+
+def moe_param_specs(cfg: ModelConfig, L=()):
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    pd = cfg.p_dtype
+    p = {
+        "router": SDS(L + (d, E), pd),
+        "we_gate": SDS(L + (E, d, f), pd),
+        "we_up": SDS(L + (E, d, f), pd),
+        "we_down": SDS(L + (E, f, d), pd),
+    }
+    if cfg.n_shared_experts:
+        fs = cfg.n_shared_experts * cfg.d_ff
+        p["ws_gate"] = SDS(L + (d, fs), pd)
+        p["ws_up"] = SDS(L + (d, fs), pd)
+        p["ws_down"] = SDS(L + (fs, d), pd)
+    return p
+
+
+def layer_param_specs(cfg: ModelConfig, L=()):
+    p = {"attn": attn_param_specs(cfg, L)}
+    an = norm_param_spec(cfg, L)
+    fn = norm_param_spec(cfg, L)
+    if an is not None:
+        p["attn_norm"] = an
+        p["ffn_norm"] = fn
+    if cfg.family == "moe":
+        p["moe"] = moe_param_specs(cfg, L)
+    else:
+        p["ffn"] = ffn_param_specs(cfg, L)
+    return p
+
+
+def param_specs(cfg: ModelConfig):
+    pd = cfg.p_dtype
+    p = {
+        "embed": SDS((cfg.vocab, cfg.d_model), pd),
+        "layers": layer_param_specs(cfg, (cfg.n_layers,)),
+    }
+    fn = norm_param_spec(cfg)
+    if fn is not None:
+        p["final_norm"] = fn
+    if not cfg.tie_embeddings:
+        p["lm_head"] = SDS((cfg.d_model, cfg.vocab), pd)
+    if cfg.family == "vlm":
+        # anyres projector stub: patch embeddings arrive precomputed at
+        # vision-encoder width == d_model (frontend is a stub per assignment)
+        p["img_proj"] = SDS((cfg.d_model, cfg.d_model), pd)
+    return p
+
+
+# ---------------------------------------------------------------- attention
+
+def attention(x, p, cfg: ModelConfig, *, positions, kv_cache=None,
+              cache_index=None, window=0):
+    """Self-attention with optional KV cache (decode).
+
+    x: (B, S, D).  kv_cache: dict(k=(B, C, KV, hd), v=...) or None.
+    Returns (out, new_kv_cache_or_None).
+    """
+    recipe = cfg.quant
+    B, S, D = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = qlinear(x, p["wq"], p.get("bq"), recipe=recipe).reshape(B, S, H, hd)
+    k = qlinear(x, p["wk"], p.get("bk"), recipe=recipe).reshape(B, S, KV, hd)
+    v = qlinear(x, p["wv"], p.get("bv"), recipe=recipe).reshape(B, S, KV, hd)
+    if cfg.pos == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    if kv_cache is not None:
+        if recipe.enabled and recipe.kv_cache_bits:
+            k, v = quant_kv(k, v, recipe.kv_cache_bits)
+        ck = jax.lax.dynamic_update_slice_in_dim(kv_cache["k"], k.astype(
+            kv_cache["k"].dtype), cache_index, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(kv_cache["v"], v.astype(
+            kv_cache["v"].dtype), cache_index, axis=1)
+        out = chunked_attention(q, ck, cv, causal=True, q_offset=cache_index,
+                                window=window, chunk=cfg.attn_chunk,
+                                kv_len=cache_index + S,
+                                unroll=cfg.scan_unroll, shard=cfg.shard_activations)
+        new_cache = {"k": ck, "v": cv}
+    else:
+        out = chunked_attention(q, k, v, causal=True, window=window,
+                                chunk=cfg.attn_chunk, unroll=cfg.scan_unroll, shard=cfg.shard_activations)
+        new_cache = None
+    out = out.reshape(B, S, H * hd)
+    return qlinear(out, p["wo"], recipe=recipe), new_cache
+
+
+# --------------------------------------------------------------------- MoE
+
+def moe_ffn(x, p, cfg: ModelConfig):
+    """Fine-grained MoE (DeepSeekMoE-style): shared experts (dense) + top-k
+    routed experts, GShard-style *grouped* capacity dispatch.
+
+    Tokens are split into G groups (aligned with the DP batch sharding) and
+    each group dispatches into its own (E, C_local) buffer via a per-group
+    cumulative-one-hot position.  This keeps every dispatch op and the
+    expert matmuls shardable over (G -> dp, E -> model); a single global
+    cumsum (the naive design) forces a replicated global-capacity buffer —
+    measured as dense-all-experts compute (~25x FLOPs) on moonshot train_4k
+    (EXPERIMENTS.md §Perf cell 3).
+
+    Returns (y, aux_loss).
+    """
+    capacity_factor = cfg.moe_capacity_factor
+    recipe = cfg.quant
+    B, S, D = x.shape
+    T = B * S
+    E, k = cfg.n_experts, cfg.top_k
+    G = int(np.gcd(B, 32))                       # token groups (dp-alignable)
+    Tl = T // G
+    xg = x.reshape(G, Tl, D)
+
+    router_logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32),
+                               p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(router_logits, axis=-1)
+    top_w, top_i = jax.lax.top_k(probs, k)                     # (G, Tl, k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing aux loss (Switch): E * sum_e f_e * P_e
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.mean(
+        (jax.nn.one_hot(top_i, E, dtype=jnp.float32)).sum(2), axis=(0, 1)) / k
+    aux = E * jnp.sum(me * ce)
+
+    # per-group position-in-expert (capacity-based, drop excess)
+    flat_e = top_i.reshape(G, Tl * k)
+    oh = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)            # (G, Tl*k, E)
+    pos_in_e = jnp.cumsum(oh, axis=1) - oh
+    pos = jnp.take_along_axis(pos_in_e, flat_e[..., None], axis=2)[..., 0]
+    C = max(int(np.ceil(Tl * k * capacity_factor / E)), 1)
+    keep = pos < C                                             # (G, Tl*k)
+    tok = jnp.arange(Tl * k, dtype=jnp.int32) // k
+    src = jnp.where(keep[..., None], xg[:, tok], 0).astype(x.dtype)
+    pos_c = jnp.minimum(pos, C - 1)
+
+    def scatter_group(fe, pc, s):
+        return jnp.zeros((E, C, D), x.dtype).at[fe, pc].add(s, mode="drop")
+
+    buf = jax.vmap(scatter_group)(flat_e, pos_c, src)          # (G, E, C, D)
+    buf = _constrain_experts(buf, cfg)                         # E over model
+
+    # expert FFN (swiglu) over (G, E, C, D); weights quantized per recipe
+    def expert_mm(b, wg, wu, wd):                              # b: (G, C, D)
+        g = qlinear(b, wg, recipe=recipe)
+        u = qlinear(b, wu, recipe=recipe)
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(b.dtype) * u
+        return qlinear(h, wd, recipe=recipe)
+
+    ybuf = jax.vmap(expert_mm, in_axes=(1, 0, 0, 0), out_axes=1)(
+        buf, p["we_gate"], p["we_up"], p["we_down"])           # (G, E, C, D)
+    ybuf = _constrain_experts(ybuf, cfg)
+
+    def gather_group(yb, fe, pc, kp, w):
+        yt = yb[fe, pc]                                        # (Tl*k, D)
+        yt = jnp.where(kp[:, None], yt, 0) * w
+        return jnp.zeros((Tl, D), yt.dtype).at[tok].add(yt)
+
+    y = jax.vmap(gather_group)(ybuf, flat_e, pos_c, keep,
+                               top_w.reshape(G, Tl * k, 1).astype(x.dtype))
+
+    if cfg.n_shared_experts:
+        shared = {"w_gate": p["ws_gate"], "w_up": p["ws_up"],
+                  "w_down": p["ws_down"]}
+        y = y + ffn_apply(x, shared, cfg.replace(ffn="swiglu"), recipe
+                          ).reshape(G, Tl, D)
+    return y.reshape(B, S, D), aux
+
+
+def _constrain_experts(buf, cfg):
+    """EP constraint (it-7): (G, E, C, D) dispatch buffers shard E over
+    'model' (and G is left to propagate from the dp-sharded tokens), so the
+    expert matmuls stay expert-parallel; the dispatch scatter/gather is the
+    all-to-all."""
+    if not cfg.shard_activations:
+        return buf
+    from .common import _model_axis_size
+    tp = _model_axis_size()
+    if tp <= 1 or buf.shape[1] % tp != 0:
+        return buf
+    from jax.sharding import PartitionSpec as P
+    U = P.UNCONSTRAINED
+    return jax.lax.with_sharding_constraint(buf, P(U, "model", U, U))
+
+
+# ------------------------------------------------------------------ blocks
+
+def block(x, lp, cfg: ModelConfig, *, positions, kv_cache=None,
+          cache_index=None):
+    """One transformer block.  Returns (x, new_kv_cache, aux)."""
+    x = constrain_residual(x, cfg)
+    h = norm(x, _norm_w(lp, "attn_norm", cfg), cfg.norm)
+    a, new_cache = attention(h, lp["attn"], cfg, positions=positions,
+                             kv_cache=kv_cache, cache_index=cache_index,
+                             window=cfg.window if cfg.family == "hybrid" else 0)
+    x = x + a
+    h = norm(x, _norm_w(lp, "ffn_norm", cfg), cfg.norm)
+    if cfg.family == "moe":
+        f, aux = moe_ffn(h, lp["moe"], cfg)
+    else:
+        f, aux = ffn_apply(h, lp["ffn"], cfg, cfg.quant), 0.0
+    return x + f, new_cache, aux
+
+
+def _norm_w(lp, key, cfg):
+    return lp.get(key) if cfg.norm != "nonparam" else None
+
+
+# ------------------------------------------------------------------ forward
+
+def embed_inputs(params, batch, cfg: ModelConfig):
+    """Token embedding (+ VLM patch prepending).  Returns (h, n_prefix)."""
+    tokens = batch["tokens"]
+    h = jnp.take(params["embed"], tokens, axis=0).astype(cfg.act_dtype)
+    n_prefix = 0
+    if cfg.family == "vlm" and "img_embeds" in batch:
+        img = batch["img_embeds"].astype(cfg.act_dtype)
+        img = qlinear(img, params["img_proj"], recipe=cfg.quant)
+        h = jnp.concatenate([img, h], axis=1)
+        n_prefix = img.shape[1]
+    if cfg.pos == "sinusoidal":
+        from .common import sinusoidal_embedding
+        h = h + sinusoidal_embedding(h.shape[1], cfg.d_model).astype(h.dtype)[None]
+    return h, n_prefix
+
+
+def forward(params, batch, cfg: ModelConfig):
+    """Training-path logits.  batch: tokens (B, S) [+ img_embeds (B, P, D)].
+
+    Returns (logits (B, S_total, V), aux_scalars dict).
+    """
+    h, n_prefix = embed_inputs(params, batch, cfg)
+    B, S_total, _ = h.shape
+    positions = jnp.arange(S_total, dtype=jnp.int32)
+
+    def body(carry, lp):
+        x, aux = carry
+        x, _, a = block(x, lp, cfg, positions=positions)
+        return (x, aux + a), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    (h, moe_aux), _ = jax.lax.scan(body, (h, jnp.zeros((), jnp.float32)),
+                                   params["layers"],
+                                   unroll=True if cfg.scan_unroll else 1)
+    h = norm(h, params.get("final_norm"), cfg.norm)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", h, head.astype(h.dtype))
+    logits = constrain_logits(logits)
+    logits = softcap(logits, cfg.logits_softcap)
+    return logits.astype(jnp.float32), {"moe_aux": moe_aux,
+                                        "n_prefix": n_prefix}
+
+
+# ------------------------------------------------------------------ serving
+
+def cache_specs(cfg: ModelConfig, batch: int, cache_len: int):
+    KV, hd = cfg.n_kv_heads, cfg.hd
+    cdtype = cfg.act_dtype
+    if cfg.family == "hybrid" and cfg.window:
+        cache_len = min(cache_len, cfg.window)
+    return {
+        "k": SDS((cfg.n_layers, batch, cache_len, KV, hd), cdtype),
+        "v": SDS((cfg.n_layers, batch, cache_len, KV, hd), cdtype),
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_specs(cfg, batch, cache_len))
+
+
+def prefill(params, batch, cfg: ModelConfig, cache_len: int):
+    """Prompt processing: runs the full prompt once, filling the KV cache.
+
+    Returns (last_token_logits (B, V), cache).  cache_len >= prompt length.
+    """
+    h, n_prefix = embed_inputs(params, batch, cfg)
+    B, S_total, _ = h.shape
+    positions = jnp.arange(S_total, dtype=jnp.int32)
+    cache0 = init_cache(cfg, B, cache_len)
+
+    def body(x, lp_and_cache):
+        lp, kc = lp_and_cache
+        x, new_kc, _ = block(x, lp, cfg, positions=positions,
+                             kv_cache=kc, cache_index=0)
+        return x, new_kc
+
+    h, new_cache = jax.lax.scan(body, h, (params["layers"], cache0),
+                                unroll=True if cfg.scan_unroll else 1)
+    h = norm(h, params.get("final_norm"), cfg.norm)
+    h_last = h[:, -1:]
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", h_last, head.astype(h.dtype))
+    logits = constrain_logits(logits)
+    logits = softcap(logits, cfg.logits_softcap)
+    return logits[:, -1].astype(jnp.float32), new_cache
+
+
+def decode_step(params, cache, tokens, cache_index, cfg: ModelConfig):
+    """One decode step: tokens (B, 1) against a cache filled to cache_index.
+
+    Returns (logits (B, V), new_cache).
+    """
+    h = jnp.take(params["embed"], tokens, axis=0).astype(cfg.act_dtype)
+    positions = cache_index + jnp.arange(tokens.shape[1], dtype=jnp.int32)
+
+    def body(x, lp_and_cache):
+        lp, kc = lp_and_cache
+        x, new_kc, _ = block(x, lp, cfg, positions=positions,
+                             kv_cache=kc, cache_index=cache_index)
+        return x, new_kc
+
+    h, new_cache = jax.lax.scan(
+        lambda c, pc: body(c, pc), h,
+        (params["layers"], cache), unroll=True if cfg.scan_unroll else 1)
+    h = norm(h, params.get("final_norm"), cfg.norm)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", h, head.astype(h.dtype))
+    logits = constrain_logits(logits)
+    logits = softcap(logits, cfg.logits_softcap)
+    return logits[:, -1].astype(jnp.float32), new_cache

@@ -1,0 +1,4 @@
+"""repro.optim — AdamW + schedules + gradient compression, from scratch."""
+from .adamw import adamw_init, adamw_update, clip_by_global_norm  # noqa: F401
+from .schedule import cosine_schedule, linear_warmup  # noqa: F401
+from .compress import CompressState, compressed_grads  # noqa: F401

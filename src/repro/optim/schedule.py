@@ -1,0 +1,19 @@
+"""LR schedules (pure functions of the step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_warmup(step, warmup_steps: int, peak: float):
+    return peak * jnp.minimum(1.0, (step + 1) / max(warmup_steps, 1))
+
+
+def cosine_schedule(step, *, peak: float, warmup_steps: int,
+                    total_steps: int, floor: float = 0.1):
+    """Linear warmup -> cosine decay to ``floor * peak``."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = linear_warmup(step, warmup_steps, peak)
+    frac = jnp.clip((step - warmup_steps) /
+                    jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+    cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return jnp.where(step < warmup_steps, warm, peak * cos)

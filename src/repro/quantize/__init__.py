@@ -1,0 +1,4 @@
+"""repro.quantize — QONNX-semantics QAT/PTQ integration for JAX models."""
+from .config import QuantRecipe, TensorQuant  # noqa: F401
+from .layers import quant_act, quant_weight, qlinear  # noqa: F401
+from . import calibrate  # noqa: F401

@@ -1,0 +1,58 @@
+"""PTQ calibration: derive static (scale, zero_point) from sample batches.
+
+Three estimators (min-max, percentile, MSE-grid) feeding
+``core.quant_ops.scale_from_minmax``.  Used by the PTQ example and the
+serving weight-quantization path.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.quant_ops import quant, scale_from_minmax
+
+from .config import TensorQuant
+
+
+def minmax_stats(samples):
+    """Running min/max over a list of arrays."""
+    lo = jnp.asarray(jnp.inf)
+    hi = jnp.asarray(-jnp.inf)
+    for s in samples:
+        lo = jnp.minimum(lo, s.min())
+        hi = jnp.maximum(hi, s.max())
+    return lo, hi
+
+
+def percentile_stats(samples, pct=99.9):
+    flat = jnp.concatenate([jnp.ravel(s) for s in samples])
+    lo = jnp.percentile(flat, 100 - pct)
+    hi = jnp.percentile(flat, pct)
+    return lo, hi
+
+
+def calibrate_minmax(samples, tq: TensorQuant):
+    lo, hi = minmax_stats(samples)
+    return scale_from_minmax(lo, hi, tq.bit_width, signed=tq.signed,
+                             narrow=tq.narrow, symmetric=tq.symmetric)
+
+
+def calibrate_percentile(samples, tq: TensorQuant, pct=99.9):
+    lo, hi = percentile_stats(samples, pct)
+    return scale_from_minmax(lo, hi, tq.bit_width, signed=tq.signed,
+                             narrow=tq.narrow, symmetric=tq.symmetric)
+
+
+def calibrate_mse(samples, tq: TensorQuant, n_grid=40):
+    """Search the clipping range minimizing quantization MSE."""
+    flat = jnp.concatenate([jnp.ravel(s) for s in samples])
+    amax = jnp.max(jnp.abs(flat))
+    best = (None, jnp.inf)
+    for frac in jnp.linspace(0.3, 1.0, n_grid):
+        s, z = scale_from_minmax(-amax * frac, amax * frac, tq.bit_width,
+                                 signed=tq.signed, narrow=tq.narrow,
+                                 symmetric=tq.symmetric)
+        err = jnp.mean((quant(flat, s, z, tq.bit_width, signed=tq.signed,
+                              narrow=tq.narrow) - flat) ** 2)
+        if float(err) < float(best[1]):
+            best = ((s, z), err)
+    return best[0]

@@ -1,0 +1,86 @@
+"""Fake-quant building blocks used inside the model substrate.
+
+Dynamic quantization per paper §V: "scale as a function of x" — scales are
+computed at runtime from the tensor being quantized (weights re-derive their
+channel scale each step; activations their tensor scale).  This keeps the
+parameter pytree identical between float and QAT runs (no learnable scales
+in the checkpoint), which matters for elastic restarts, while remaining a
+faithful realization of the QONNX Quant op with runtime scale inputs.
+
+Gradients flow via the STE (core/ste.py).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.quant_ops import max_int
+from repro.core.ste import quant_ste
+
+from .config import QuantRecipe, TensorQuant
+
+
+def _dynamic_scale(x, tq: TensorQuant, *, channel_axis=None):
+    """max-abs symmetric scale; per-channel when requested."""
+    if tq.channelwise and channel_axis is not None:
+        axes = tuple(i for i in range(x.ndim) if i != channel_axis % x.ndim)
+        amax = jnp.max(jnp.abs(x), axis=axes, keepdims=True)
+    else:
+        amax = jnp.max(jnp.abs(x))
+    bound = max_int(tq.signed, tq.narrow, tq.bit_width)
+    return jnp.maximum(amax.astype(jnp.float32), 1e-8) / bound
+
+
+def quant_weight(w, tq: TensorQuant):
+    """Fake-quant a weight (..., out_features): channel-wise on last axis."""
+    s = _dynamic_scale(w, tq, channel_axis=-1)
+    return quant_ste(w, s.astype(w.dtype), jnp.zeros((), w.dtype),
+                     jnp.asarray(tq.bit_width), tq.signed, tq.narrow,
+                     tq.rounding_mode)
+
+
+def quant_act(x, tq: TensorQuant):
+    """Fake-quant an activation tensor (tensor-wise dynamic scale)."""
+    s = _dynamic_scale(x, tq)
+    return quant_ste(x, s.astype(x.dtype), jnp.zeros((), x.dtype),
+                     jnp.asarray(tq.bit_width), tq.signed, tq.narrow,
+                     tq.rounding_mode)
+
+
+def qlinear(x, w, b=None, recipe: QuantRecipe | None = None):
+    """Linear layer with QONNX fake-quant at both operands.
+
+    x: (..., K); w: (K, N) (or (..., K, N) for stacked/batched weights with
+    matching leading dims); b: (N,).  Bias is NOT independently quantized —
+    per paper §II it inherits s_bias = s_w * s_in, which fake-quant realizes
+    automatically since the product grid contains the bias grid.
+    """
+    if recipe is not None and recipe.enabled:
+        w = quant_weight(w, recipe.weights)
+        x = quant_act(x, recipe.acts)
+    y = jnp.matmul(x, w.astype(x.dtype))
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y
+
+
+def qeinsum(spec, x, w, recipe: QuantRecipe | None = None):
+    """Einsum variant of qlinear (used for attention projections / MoE)."""
+    if recipe is not None and recipe.enabled:
+        w = quant_weight(w, recipe.weights)
+        x = quant_act(x, recipe.acts)
+    return jnp.einsum(spec, x, w.astype(x.dtype))
+
+
+def quant_kv(k, v, bits):
+    """Quantize KV-cache entries symmetrically per head-dim vector; returns
+    fake-quant floats (storage realization picks the carrier — DESIGN.md §3)."""
+    if bits is None:
+        return k, v
+    tq = TensorQuant(bit_width=bits, symmetric=True, narrow=False)
+    sk = _dynamic_scale(k, tq)
+    sv = _dynamic_scale(v, tq)
+    k = quant_ste(k, sk.astype(k.dtype), jnp.zeros((), k.dtype),
+                  jnp.asarray(float(bits)), True, False, "ROUND")
+    v = quant_ste(v, sv.astype(v.dtype), jnp.zeros((), v.dtype),
+                  jnp.asarray(float(bits)), True, False, "ROUND")
+    return k, v

@@ -1,0 +1,2 @@
+"""repro.serve — batched generation engine over prefill/decode."""
+from .engine import GenerationEngine, greedy_generate  # noqa: F401

@@ -1,0 +1,2 @@
+"""repro.train — loss, train-step builder, microbatching."""
+from .loop import TrainHyper, make_train_step, loss_fn, init_train_state  # noqa: F401

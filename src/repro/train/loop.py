@@ -1,0 +1,135 @@
+"""Training step builder: loss, microbatch accumulation, optimizer glue.
+
+``make_train_step(cfg, hyper)`` returns a pure (state, batch) -> (state,
+metrics) function suitable for jit/pjit.  Features:
+
+  * causal-LM cross-entropy in f32 with z-loss (logit drift control)
+  * MoE load-balance aux loss folded in
+  * VLM image-prefix positions excluded from the loss
+  * gradient accumulation over ``hyper.microbatches`` via lax.scan
+    (sequential microbatches overlap their DP grad reduction with the next
+    microbatch's compute under GSPMD)
+  * optional error-feedback int8 gradient compression (paper's Quant op)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import api
+from repro.models.common import ModelConfig
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update
+from repro.optim.compress import CompressState, compress_init, compressed_grads
+from repro.optim.schedule import cosine_schedule
+
+
+@dataclass(frozen=True)
+class TrainHyper:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    weight_decay: float = 0.1
+    max_grad_norm: float = 1.0
+    z_loss: float = 1e-4
+    moe_aux_weight: float = 0.01
+    microbatches: int = 1
+    compress_grads: bool = False
+
+
+def loss_fn(params, batch, cfg: ModelConfig, hyper: TrainHyper):
+    logits, aux = api.forward(params, batch, cfg)       # (B, S_total, V) f32
+    labels = batch["labels"]
+    n_prefix = cfg.n_patches if cfg.family == "vlm" else 0
+    if n_prefix:
+        logits = logits[:, n_prefix:]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    # gold-logit extraction via a masked reduction instead of
+    # take_along_axis: gathering along the vocab-sharded axis makes GSPMD
+    # replicate the full logits tensor ("last-resort rematerialization",
+    # ~30 GB/step on qwen2 train_4k — see EXPERIMENTS.md §Perf it-1);
+    # the masked sum reduces over the sharded dim and psums only (B, S).
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                          logits.ndim - 1)
+    gold = jnp.sum(jnp.where(vocab_iota == labels[..., None], logits, 0.0),
+                   axis=-1)
+    nll = (lse - gold).mean()
+    zl = hyper.z_loss * jnp.square(lse).mean()
+    moe = hyper.moe_aux_weight * aux["moe_aux"]
+    loss = nll + zl + moe
+    return loss, {"nll": nll, "z_loss": zl, "moe_aux": aux["moe_aux"]}
+
+
+def init_train_state(rng, cfg: ModelConfig, hyper: TrainHyper):
+    params = api.init_params(rng, cfg)
+    state = {"params": params, "opt": adamw_init(params),
+             "step": jnp.zeros((), jnp.int32)}
+    if hyper.compress_grads:
+        state["compress"] = compress_init(params)
+    return state
+
+
+def train_state_specs(cfg: ModelConfig, hyper: TrainHyper):
+    """ShapeDtypeStruct tree of the train state (dry-run, no allocation)."""
+    p = api.param_specs(cfg)
+    f32 = lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32)
+    state = {
+        "params": p,
+        "opt": AdamWState(step=jax.ShapeDtypeStruct((), jnp.int32),
+                          mu=jax.tree.map(f32, p), nu=jax.tree.map(f32, p)),
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    if hyper.compress_grads:
+        state["compress"] = CompressState(residual=jax.tree.map(f32, p))
+    return state
+
+
+def make_train_step(cfg: ModelConfig, hyper: TrainHyper):
+    def grads_of(params, batch):
+        return jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch, cfg, hyper)
+
+    def train_step(state, batch):
+        params = state["params"]
+        if hyper.microbatches > 1:
+            def micro(carry, mb):
+                acc, _ = carry
+                (l, m), g = grads_of(params, mb)
+                acc = jax.tree.map(jnp.add, acc, g)
+                return (acc, (l, m)), None
+
+            mbs = jax.tree.map(
+                lambda x: x.reshape((hyper.microbatches,
+                                     x.shape[0] // hyper.microbatches)
+                                    + x.shape[1:]), batch)
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                params)
+            (gsum, (loss, metrics)), _ = jax.lax.scan(
+                micro, (zero, (jnp.zeros(()), {"nll": jnp.zeros(()),
+                                               "z_loss": jnp.zeros(()),
+                                               "moe_aux": jnp.zeros(())})),
+                mbs)
+            grads = jax.tree.map(lambda g: g / hyper.microbatches, gsum)
+        else:
+            (loss, metrics), grads = grads_of(params, batch)
+
+        new_state = dict(state)
+        if hyper.compress_grads:
+            grads, new_state["compress"] = compressed_grads(
+                grads, state["compress"])
+
+        lr = cosine_schedule(state["step"], peak=hyper.peak_lr,
+                             warmup_steps=hyper.warmup_steps,
+                             total_steps=hyper.total_steps)
+        new_params, new_opt, opt_metrics = adamw_update(
+            grads, state["opt"], params, lr=lr,
+            weight_decay=hyper.weight_decay,
+            max_grad_norm=hyper.max_grad_norm)
+        new_state.update(params=new_params, opt=new_opt,
+                         step=state["step"] + 1)
+        metrics = dict(metrics, loss=loss, lr=lr, **opt_metrics)
+        return new_state, metrics
+
+    return train_step

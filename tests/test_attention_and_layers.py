@@ -1,0 +1,126 @@
+"""Correctness of the chunked (flash-style) attention and QAT layers."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.common import chunked_attention
+from repro.quantize.config import QuantRecipe, TensorQuant
+from repro.quantize.layers import qlinear, quant_act, quant_weight
+
+
+def naive_attention(q, k, v, *, causal, window=0, q_offset=0):
+    B, Sq, H, hd = q.shape
+    _, Sk, KV, _ = k.shape
+    G = H // KV
+    kr = jnp.repeat(k, G, axis=2).astype(jnp.float32)
+    vr = jnp.repeat(v, G, axis=2).astype(jnp.float32)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), kr) / np.sqrt(hd)
+    q_pos = q_offset + jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, vr)
+
+
+@pytest.mark.parametrize("Sq,Sk,chunk", [(16, 16, 4), (8, 24, 5), (32, 32, 32)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_chunked_attention_matches_naive(Sq, Sk, chunk, causal):
+    rng = jax.random.PRNGKey(0)
+    kq, kk, kv = jax.random.split(rng, 3)
+    B, H, KV, hd = 2, 4, 2, 8
+    q = jax.random.normal(kq, (B, Sq, H, hd))
+    k = jax.random.normal(kk, (B, Sk, KV, hd))
+    v = jax.random.normal(kv, (B, Sk, KV, hd))
+    q_offset = Sk - Sq if causal else 0
+    out = chunked_attention(q, k, v, causal=causal, chunk=chunk,
+                            q_offset=q_offset)
+    ref = naive_attention(q, k, v, causal=causal, q_offset=q_offset)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_chunked_attention_window():
+    rng = jax.random.PRNGKey(1)
+    B, S, H, KV, hd, win = 1, 24, 2, 1, 8, 6
+    q = jax.random.normal(rng, (B, S, H, hd))
+    k = jax.random.normal(jax.random.PRNGKey(2), (B, S, KV, hd))
+    v = jax.random.normal(jax.random.PRNGKey(3), (B, S, KV, hd))
+    out = chunked_attention(q, k, v, causal=True, window=win, chunk=5)
+    ref = naive_attention(q, k, v, causal=True, window=win)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_chunked_attention_kv_len_masks_tail():
+    rng = jax.random.PRNGKey(4)
+    B, H, KV, hd = 1, 2, 2, 8
+    q = jax.random.normal(rng, (B, 1, H, hd))
+    k = jax.random.normal(jax.random.PRNGKey(5), (B, 32, KV, hd))
+    v = jax.random.normal(jax.random.PRNGKey(6), (B, 32, KV, hd))
+    # valid length 10: result must ignore k[10:]
+    out = chunked_attention(q, k, v, causal=True, q_offset=9, chunk=8,
+                            kv_len=jnp.asarray(10))
+    k2 = k.at[:, 10:].set(999.0)
+    v2 = v.at[:, 10:].set(-999.0)
+    out2 = chunked_attention(q, k2, v2, causal=True, q_offset=9, chunk=8,
+                             kv_len=jnp.asarray(10))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out2), atol=1e-6)
+
+
+def test_chunked_attention_unroll_identical():
+    rng = jax.random.PRNGKey(7)
+    B, S, H, KV, hd = 1, 16, 2, 2, 8
+    q = jax.random.normal(rng, (B, S, H, hd))
+    k = jax.random.normal(jax.random.PRNGKey(8), (B, S, KV, hd))
+    v = jax.random.normal(jax.random.PRNGKey(9), (B, S, KV, hd))
+    a = chunked_attention(q, k, v, causal=True, chunk=4, unroll=False)
+    b = chunked_attention(q, k, v, causal=True, chunk=4, unroll=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+# ------------------------------------------------------------- QAT layers
+
+def test_quant_weight_channelwise_scales():
+    w = jnp.asarray([[1.0, 100.0], [-2.0, -50.0]])
+    tq = TensorQuant(bit_width=8, narrow=True, channelwise=True)
+    wq = quant_weight(w, tq)
+    # each column quantized with its own scale -> small column survives
+    assert float(jnp.abs(wq[:, 0] - w[:, 0]).max()) < 0.02
+    assert float(jnp.abs(wq[:, 1] - w[:, 1]).max()) < 1.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 8))
+def test_qlinear_error_bounded_by_quant_noise(bits):
+    rng = jax.random.PRNGKey(bits)
+    x = jax.random.normal(rng, (4, 16))
+    w = jax.random.normal(jax.random.PRNGKey(bits + 99), (16, 8)) * 0.5
+    recipe = QuantRecipe.w_a(bits, 8)
+    y = qlinear(x, w, recipe=recipe)
+    y_ref = x @ w
+    # error bounded by K * (w_step/2 * |x|max) + act noise
+    w_step = float(jnp.abs(w).max(0).max()) / (2 ** (bits - 1) - 1)
+    bound = 16 * (w_step * float(jnp.abs(x).max())) + 0.1
+    assert float(jnp.abs(y - y_ref).max()) < bound
+
+
+def test_qlinear_gradients_flow():
+    recipe = QuantRecipe.w_a(4, 8)
+    w = jax.random.normal(jax.random.PRNGKey(0), (8, 4)) * 0.5
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8))
+    g = jax.grad(lambda w: qlinear(x, w, recipe=recipe).sum())(w)
+    assert float(jnp.abs(g).sum()) > 0
+    assert g.shape == w.shape
+
+
+def test_quant_act_preserves_dtype():
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 4)).astype(jnp.bfloat16)
+    y = quant_act(x, TensorQuant(bit_width=8))
+    assert y.dtype == jnp.bfloat16

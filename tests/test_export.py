@@ -1,0 +1,68 @@
+"""QAT-frontend export (§VI-A/B): exported QONNX graph == JAX forward."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import execute, transforms
+from repro.core.export import export_mlp
+from repro.core.formats import qonnx_to_qcdq
+from repro.quantize.config import QuantRecipe
+from repro.quantize.layers import qlinear, quant_act
+
+
+def _jax_mlp(x, weights, biases, recipe):
+    h = x
+    for i, (w, b) in enumerate(zip(weights, biases)):
+        h = qlinear(h, w, b, recipe=recipe)
+        if i < len(weights) - 1:
+            h = jax.nn.relu(h)
+    return h
+
+
+def test_export_matches_jax_forward():
+    rng = np.random.RandomState(0)
+    weights = [jnp.asarray(rng.randn(8, 16) * 0.3, jnp.float32),
+               jnp.asarray(rng.randn(16, 4) * 0.3, jnp.float32)]
+    biases = [jnp.asarray(rng.randn(16) * 0.1, jnp.float32),
+              jnp.asarray(rng.randn(4) * 0.1, jnp.float32)]
+    recipe = QuantRecipe.w_a(4, 8)
+    x = jnp.asarray(rng.randn(3, 8), jnp.float32)
+
+    ref = _jax_mlp(x, weights, biases, recipe)
+
+    # export: freeze the dynamic activation scales the forward would use
+    from repro.quantize.layers import _dynamic_scale
+    h = x
+    act_scales = []
+    for i, (w, b) in enumerate(zip(weights, biases)):
+        act_scales.append(float(_dynamic_scale(h, recipe.acts)))
+        h = qlinear(h, w, b, recipe=recipe)
+        if i < len(weights) - 1:
+            h = jax.nn.relu(h)
+
+    g = export_mlp(weights, biases, recipe, act_scales, (3, 8))
+    out = execute(g, {"x": np.asarray(x)})[g.output_names[0]]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_exported_graph_flows_through_toolchain():
+    """export -> cleanup -> QCDQ lowering (the full §VI pipeline)."""
+    rng = np.random.RandomState(1)
+    weights = [jnp.asarray(rng.randn(6, 12) * 0.3), jnp.asarray(rng.randn(12, 3) * 0.3)]
+    biases = [None, None]
+    recipe = QuantRecipe.w_a(4, 8)
+    g = export_mlp(weights, biases, recipe, [0.05, 0.02], (2, 6))
+    g = transforms.cleanup(g)
+    q = qonnx_to_qcdq(g)
+    x = rng.randn(2, 6).astype(np.float32)
+    o1 = execute(g, {"x": x})[g.output_names[0]]
+    o2 = execute(q, {"x": x})[q.output_names[0]]
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-5)
+    assert any(n.op_type == "QuantizeLinear" for n in q.nodes)
+
+
+def test_export_fp_recipe_has_no_quant_nodes():
+    g = export_mlp([np.eye(4, dtype=np.float32)], [None],
+                   QuantRecipe(enabled=False), [1.0], (1, 4))
+    assert not any(n.op_type == "Quant" for n in g.nodes)

@@ -1,0 +1,166 @@
+"""Tests for format lowerings (paper §III-§IV, Table I)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import GraphBuilder, execute, quant
+from repro.core.formats import (
+    FEATURE_MATRIX,
+    UnsupportedLowering,
+    qcdq_to_qonnx,
+    qonnx_to_qcdq,
+    qonnx_to_quantized_op,
+)
+
+from test_graph import make_mlp_graph
+
+
+def _run(g, x):
+    return np.asarray(execute(g, {g.input_names[0]: x})[g.output_names[0]])
+
+
+# ------------------------------------------------------------- Table I
+
+def test_feature_matrix_table1():
+    """Table I, row by row."""
+    m = FEATURE_MATRIX
+    assert m["qonnx"].arbitrary_precision and m["qonnx"].rounding_variants
+    assert all([m["qonnx"].below_8bit, m["qonnx"].weights_only_quant,
+                m["qonnx"].avoids_op_duplication, m["qonnx"].high_precision_output])
+    assert not m["qcdq"].arbitrary_precision and not m["qcdq"].rounding_variants
+    assert m["qcdq"].below_8bit and m["qcdq"].weights_only_quant
+    assert m["quantized_op_clip"].below_8bit
+    assert not m["quantized_op_clip"].weights_only_quant
+    assert not m["qdq"].below_8bit and m["qdq"].weights_only_quant
+    assert m["integer_op"].high_precision_output
+    assert not m["quantized_op"].high_precision_output
+
+
+# --------------------------------------------------------------- QCDQ
+
+def test_qcdq_preserves_semantics():
+    g = make_mlp_graph()
+    q = qonnx_to_qcdq(g)
+    x = np.random.RandomState(0).randn(2, 6).astype(np.float32)
+    np.testing.assert_allclose(_run(g, x), _run(q, x), atol=1e-5)
+    ops = [n.op_type for n in q.nodes]
+    assert "Quant" not in ops
+    assert ops.count("QuantizeLinear") == ops.count("DequantizeLinear") == \
+        ops.count("Clip") == 4
+
+
+def test_qcdq_int8_backend_exact():
+    """§IV backward compatibility: the 4-bit QCDQ graph is executed by the
+    *standard 8-bit ops only* (QuantizeLinear/Clip/DequantizeLinear carriers
+    are int8) and still realizes exact 4-bit quantization."""
+    b = GraphBuilder("sub8")
+    x = b.add_input("x", (64,))
+    y = b.quant(x, 0.3, 0.0, 4, narrow=True)
+    b.mark_output(y)
+    g = b.build()
+    q = qonnx_to_qcdq(g)
+    # verify the carrier really is int8 and the Clip bounds are the 4-bit ones
+    clip = next(n for n in q.nodes if n.op_type == "Clip")
+    lo = q.initializers[clip.inputs[1]]
+    hi = q.initializers[clip.inputs[2]]
+    assert lo.dtype == np.int8 and int(lo) == -7 and int(hi) == 7
+    xv = np.random.RandomState(1).randn(64).astype(np.float32) * 3
+    np.testing.assert_allclose(_run(g, xv), _run(q, xv), atol=1e-6)
+
+
+def test_qcdq_roundtrip_fuses_back():
+    g = make_mlp_graph()
+    rt = qcdq_to_qonnx(qonnx_to_qcdq(g))
+    assert sum(1 for n in rt.nodes if n.op_type == "Quant") == 4
+    assert not any(n.op_type == "QuantizeLinear" for n in rt.nodes)
+    x = np.random.RandomState(2).randn(2, 6).astype(np.float32)
+    np.testing.assert_allclose(_run(g, x), _run(rt, x), atol=1e-5)
+    # narrow flag recovered from clip bounds
+    narrows = [n.attrs["narrow"] for n in rt.nodes if n.op_type == "Quant"]
+    assert any(narrows)
+
+
+# ----------------------------------------------- Table I gaps as errors
+
+def test_qcdq_rejects_above_8bit():
+    b = GraphBuilder("g")
+    x = b.add_input("x", (4,))
+    y = b.quant(x, 0.1, 0.0, 16)
+    b.mark_output(y)
+    with pytest.raises(UnsupportedLowering, match="8-bit"):
+        qonnx_to_qcdq(b.build())
+
+
+def test_qcdq_rejects_rounding_variant():
+    b = GraphBuilder("g")
+    x = b.add_input("x", (4,))
+    y = b.quant(x, 0.1, 0.0, 4, rounding_mode="FLOOR")
+    b.mark_output(y)
+    with pytest.raises(UnsupportedLowering, match="round"):
+        qonnx_to_qcdq(b.build())
+
+
+def test_qcdq_rejects_channelwise_bitwidth():
+    b = GraphBuilder("g")
+    x = b.add_input("x", (4,))
+    y = b.quant(x, 0.1, 0.0, np.asarray([2.0, 4.0, 6.0, 8.0]))
+    b.mark_output(y)
+    with pytest.raises(UnsupportedLowering, match="scalar"):
+        qonnx_to_qcdq(b.build())
+
+
+def test_qcdq_rejects_dynamic_scale():
+    b = GraphBuilder("g")
+    x = b.add_input("x", (4,))
+    (absx,) = b.add_node("Relu", [x], 1)
+    z = b.add_initializer("z", np.asarray(0.0, np.float32))
+    bw = b.add_initializer("bw", np.asarray(8.0, np.float32))
+    (y,) = b.add_node("Quant", [x, absx, z, bw], 1,
+                      {"signed": 1, "narrow": 0, "rounding_mode": "ROUND"},
+                      domain="qonnx.custom_op.general")
+    b.mark_output(y)
+    with pytest.raises(UnsupportedLowering, match="dynamic"):
+        qonnx_to_qcdq(b.build())
+
+
+def test_qcdq_rejects_bipolar():
+    b = GraphBuilder("g")
+    x = b.add_input("x", (4,))
+    y = b.bipolar_quant(x, 1.0)
+    b.mark_output(y)
+    with pytest.raises(UnsupportedLowering):
+        qonnx_to_qcdq(b.build())
+
+
+def test_quantized_op_rejects_weights_only():
+    """Table I: quantized-operator format cannot express weights-only quant."""
+    b = GraphBuilder("wonly")
+    x = b.add_input("x", (2, 4))
+    w = b.add_initializer("w", np.random.RandomState(0).randn(4, 3).astype(np.float32))
+    qw = b.quant(w, 0.05, 0.0, 4)
+    (y,) = b.add_node("MatMul", [x, qw], 1)  # activation NOT quantized
+    b.mark_output(y)
+    with pytest.raises(UnsupportedLowering, match="weights-only"):
+        qonnx_to_quantized_op(b.build())
+
+
+# ------------------------------------------------------- quantized op
+
+def test_quantized_op_matches_qonnx():
+    g = make_mlp_graph()
+    q = qonnx_to_quantized_op(g)
+    ops = [n.op_type for n in q.nodes]
+    assert "MatMulInteger" in ops and "Quant" not in ops
+    x = np.random.RandomState(3).randn(2, 6).astype(np.float32)
+    np.testing.assert_allclose(_run(g, x), _run(q, x), atol=1e-4, rtol=1e-4)
+
+
+def test_quantized_op_int32_accumulator_exposed():
+    """§III integer-operator advantage: high-precision accumulator is a real
+    int32 tensor in the graph (not fused away)."""
+    g = qonnx_to_quantized_op(make_mlp_graph())
+    from repro.core import transforms
+    g = transforms.infer_shapes(g)
+    acc_dtypes = [g.value_info[n.outputs[0]].dtype for n in g.nodes
+                  if n.op_type == "MatMulInteger"]
+    assert acc_dtypes and all(d == "int32" for d in acc_dtypes)

@@ -1,0 +1,120 @@
+"""Tests for the QonnxGraph IR, executor, and serialization."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import GraphBuilder, Node, QonnxGraph, TensorInfo, execute
+from repro.core import serialize
+
+
+def make_mlp_graph(seed=0, in_dim=6, hid=8, out_dim=4):
+    rng = np.random.RandomState(seed)
+    b = GraphBuilder("mlp")
+    x = b.add_input("x", (2, in_dim))
+    qx = b.quant(x, 0.05, 0.0, 8)
+    w1 = b.add_initializer("w1", rng.randn(in_dim, hid).astype(np.float32) * 0.3)
+    qw1 = b.quant(w1, 0.01, 0.0, 4, narrow=True)
+    (h,) = b.add_node("MatMul", [qx, qw1], 1)
+    bias = b.add_initializer("b1", rng.randn(hid).astype(np.float32) * 0.1)
+    (h,) = b.add_node("Add", [h, bias], 1)
+    (h,) = b.add_node("Relu", [h], 1)
+    qh = b.quant(h, 0.02, 0.0, 4, signed=False)
+    w2 = b.add_initializer("w2", rng.randn(hid, out_dim).astype(np.float32) * 0.3)
+    qw2 = b.quant(w2, 0.01, 0.0, 4, narrow=True)
+    (y,) = b.add_node("MatMul", [qh, qw2], 1)
+    b.mark_output(y)
+    return b.build()
+
+
+def test_toposort_detects_cycle():
+    g = QonnxGraph(
+        nodes=[Node("Relu", ["b"], ["a"]), Node("Relu", ["a"], ["b"])],
+        inputs=[TensorInfo("x", (1,))], outputs=[TensorInfo("a")])
+    with pytest.raises(ValueError):
+        g.toposort()
+
+
+def test_ssa_violation_detected():
+    g = QonnxGraph(
+        nodes=[Node("Relu", ["x"], ["y"]), Node("Relu", ["x"], ["y"])],
+        inputs=[TensorInfo("x", (1,))], outputs=[TensorInfo("y")])
+    with pytest.raises(ValueError, match="SSA"):
+        g.validate()
+
+
+def test_execute_missing_input_raises():
+    g = make_mlp_graph()
+    with pytest.raises(ValueError, match="missing graph input"):
+        execute(g, {})
+
+
+def test_executor_unknown_op():
+    g = QonnxGraph(nodes=[Node("NoSuchOp", ["x"], ["y"])],
+                   inputs=[TensorInfo("x", (1,))], outputs=[TensorInfo("y")])
+    with pytest.raises(NotImplementedError):
+        execute(g, {"x": jnp.zeros((1,))})
+
+
+def test_mlp_executes_and_is_deterministic():
+    g = make_mlp_graph()
+    x = np.random.RandomState(1).randn(2, 6).astype(np.float32)
+    o1 = execute(g, {"x": x})[g.output_names[0]]
+    o2 = execute(g, {"x": x})[g.output_names[0]]
+    assert o1.shape == (2, 4)
+    np.testing.assert_array_equal(np.asarray(o1), np.asarray(o2))
+    assert not np.any(np.isnan(np.asarray(o1)))
+
+
+def test_nodes_out_of_order_still_execute():
+    g = make_mlp_graph()
+    g.nodes = list(reversed(g.nodes))  # executor must toposort
+    x = np.random.RandomState(1).randn(2, 6).astype(np.float32)
+    out = execute(g, {"x": x})[g.output_names[0]]
+    assert out.shape == (2, 4)
+
+
+def test_serialize_roundtrip(tmp_path):
+    g = make_mlp_graph()
+    p = tmp_path / "mlp.qonnx.json"
+    serialize.save(g, p)
+    g2 = serialize.load(p)
+    x = np.random.RandomState(2).randn(2, 6).astype(np.float32)
+    o1 = execute(g, {"x": x})[g.output_names[0]]
+    o2 = execute(g2, {"x": x})[g2.output_names[0]]
+    np.testing.assert_array_equal(np.asarray(o1), np.asarray(o2))
+    assert [n.op_type for n in g.nodes] == [n.op_type for n in g2.nodes]
+    # initializers preserved bit-exactly
+    for k in g.initializers:
+        np.testing.assert_array_equal(g.initializers[k], g2.initializers[k])
+
+
+def test_serialize_rejects_bad_version(tmp_path):
+    import json
+    g = make_mlp_graph()
+    d = serialize.graph_to_json(g)
+    d["format_version"] = 999
+    p = tmp_path / "bad.json"
+    p.write_text(json.dumps(d))
+    with pytest.raises(ValueError, match="format_version"):
+        serialize.load(p)
+
+
+def test_multithreshold_matches_quant_relu():
+    """FINN-style ingestion (§VI-D): a 2-bit unsigned quantized ReLU is
+    exactly representable as a MultiThreshold node with 3 steps."""
+    from repro.core import quant
+    s = 0.5
+    bits = 2
+    n_steps = 2 ** bits - 1
+    # thresholds where ReLU-then-quant crosses each integer level
+    thr = np.asarray([[(i + 0.5) * s for i in range(n_steps)]], np.float32)
+    g = QonnxGraph(
+        nodes=[Node("MultiThreshold", ["x", "T"], ["y"],
+                    {"out_scale": s, "out_bias": 0.0},
+                    domain="finn.custom_op.general")],
+        inputs=[TensorInfo("x", (1, 1, 5))], outputs=[TensorInfo("y")],
+        initializers={"T": thr})
+    x = jnp.asarray(np.linspace(-1, 2.5, 5, dtype=np.float32).reshape(1, 1, 5))
+    y_mt = execute(g, {"x": x})["y"]
+    y_ref = quant(jnp.maximum(x, 0.0), s, 0.0, bits, signed=False)
+    np.testing.assert_allclose(np.asarray(y_mt), np.asarray(y_ref), atol=1e-6)

@@ -1,0 +1,152 @@
+"""Per-kernel validation: Pallas (interpret=True) vs pure-jnp oracle,
+swept over shapes and dtypes as required."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _rand(shape, dtype, seed=0, scale=2.0):
+    x = jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32) * scale
+    return x.astype(dtype)
+
+
+# ------------------------------------------------------------ quant_dequant
+
+QDQ_SHAPES = [(8, 128), (16, 256), (3, 100), (257, 384), (2, 5, 128)]
+
+
+@pytest.mark.parametrize("shape", QDQ_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_quant_dequant_matches_ref(shape, dtype):
+    x = _rand(shape, dtype, seed=1)
+    out = ops.quant_dequant(x, 0.07, 0.0, bit_width=8)
+    want = ref.quant_dequant_ref(x.astype(jnp.float32), 0.07, 0.0, 8)
+    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(want),
+                               atol=(1e-5 if dtype == jnp.float32 else 0.05))
+
+
+@pytest.mark.parametrize("bits,signed,narrow", [
+    (2, True, True), (3, True, False), (4, False, False), (5.5, True, False),
+    (8, True, True), (6, False, True),
+])
+def test_quant_dequant_bit_widths(bits, signed, narrow):
+    x = _rand((64, 128), jnp.float32, seed=2, scale=5.0)
+    out = ops.quant_dequant(x, 0.2, 1.0 if not signed else 0.0,
+                            bit_width=bits, signed=signed, narrow=narrow)
+    want = ref.quant_dequant_ref(x, 0.2, 1.0 if not signed else 0.0, bits,
+                                 signed=signed, narrow=narrow)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-5)
+
+
+@pytest.mark.parametrize("mode", ["ROUND", "ROUND_TO_ZERO", "CEIL", "FLOOR"])
+def test_quant_dequant_rounding_modes(mode):
+    x = _rand((32, 128), jnp.float32, seed=3)
+    out = ops.quant_dequant(x, 0.11, 0.0, bit_width=6, rounding_mode=mode)
+    want = ref.quant_dequant_ref(x, 0.11, 0.0, 6, rounding_mode=mode)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-5)
+
+
+def test_quant_dequant_channelwise():
+    x = _rand((64, 256), jnp.float32, seed=4)
+    s = jnp.linspace(0.01, 0.5, 256)
+    z = jnp.round(jnp.linspace(-3, 3, 256))
+    out = ops.quant_dequant(x, s, z, bit_width=8)
+    want = ref.quant_dequant_ref(x, s, z, 8)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-5)
+
+
+def test_quant_dequant_small_blocks_match_large():
+    """Block shape must not affect results (pure tiling)."""
+    x = _rand((300, 500), jnp.float32, seed=5)
+    a = ops.quant_dequant(x, 0.05, 0.0, bit_width=4, block=(64, 128))
+    b = ops.quant_dequant(x, 0.05, 0.0, bit_width=4, block=(256, 256))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ------------------------------------------------------------- quant_matmul
+
+MM_SHAPES = [(8, 128, 128), (32, 256, 512), (128, 512, 256), (256, 384, 1024)]
+
+
+@pytest.mark.parametrize("m,k,n", MM_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_quant_matmul_matches_ref(m, k, n, dtype):
+    x = _rand((m, k), dtype, seed=6, scale=0.5)
+    w = np.random.RandomState(0).randint(-127, 128, size=(k, n)).astype(np.int8)
+    s = jnp.linspace(0.001, 0.02, n)
+    out = ops.quant_matmul(x, jnp.asarray(w), s)
+    want = ref.quant_matmul_ref(x, jnp.asarray(w), s)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-4)
+
+
+def test_quant_matmul_bias_and_scalar_scale():
+    x = _rand((16, 256), jnp.float32, seed=7)
+    w = np.random.RandomState(1).randint(-127, 128, size=(256, 128)).astype(np.int8)
+    b = _rand((128,), jnp.float32, seed=8)
+    out = ops.quant_matmul(x, jnp.asarray(w), 0.01, bias=b)
+    want = ref.quant_matmul_ref(x, jnp.asarray(w), 0.01, bias=b)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=2e-5,
+                               atol=2e-4)
+
+
+def test_quant_matmul_blocking_invariance():
+    x = _rand((64, 512), jnp.float32, seed=9)
+    w = np.random.RandomState(2).randint(-127, 128, size=(512, 256)).astype(np.int8)
+    s = jnp.full((256,), 0.02)
+    a = ops.quant_matmul(x, jnp.asarray(w), s, blocks=(32, 128, 128))
+    b = ops.quant_matmul(x, jnp.asarray(w), s, blocks=(64, 256, 512))
+    # fp32 accumulation order differs across K-blockings — tolerance, not exact
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-3)
+
+
+# ----------------------------------------------------------------- int4
+
+def test_pack_unpack_roundtrip():
+    w = np.random.RandomState(3).randint(-7, 8, size=(64, 128)).astype(np.int8)
+    packed = ops.pack_int4(jnp.asarray(w))
+    assert packed.shape == (32, 128) and packed.dtype == jnp.int8
+    back = ops.unpack_int4(packed)
+    np.testing.assert_array_equal(np.asarray(back), w)
+
+
+@pytest.mark.parametrize("m,k,n", [(8, 128, 128), (32, 512, 256), (64, 256, 384)])
+def test_quant_matmul_int4_matches_ref(m, k, n):
+    x = _rand((m, k), jnp.float32, seed=10, scale=0.5)
+    w = np.random.RandomState(4).randint(-7, 8, size=(k, n)).astype(np.int8)
+    packed = ops.pack_int4(jnp.asarray(w))
+    s = jnp.linspace(0.01, 0.1, n)
+    out = ops.quant_matmul_int4(x, packed, s)
+    want = ref.quant_matmul_int4_ref(x, packed, s)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=2e-5,
+                               atol=2e-4)
+    # and against the unpacked int8 path (same math, different layout)
+    want2 = ref.quant_matmul_ref(x, jnp.asarray(w), s)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want2), rtol=2e-5,
+                               atol=2e-4)
+
+
+def test_quantize_weights_int8_accuracy():
+    w = _rand((256, 128), jnp.float32, seed=11)
+    q, s = ops.quantize_weights_int8(w)
+    err = jnp.abs(w - q.astype(jnp.float32) * s)
+    assert float(err.max()) <= float(s.max()) / 2 + 1e-6
+
+
+def test_quantize_weights_int4_end_to_end():
+    w = _rand((256, 128), jnp.float32, seed=12)
+    x = _rand((8, 256), jnp.float32, seed=13, scale=0.3)
+    packed, s = ops.quantize_weights_int4(w)
+    out = ops.quant_matmul_int4(x, packed, s)
+    # exact vs. the fake-quant (QDQ) weights — the kernel must equal the
+    # QONNX semantics of the quantized weight, not the fp32 original
+    w_fq = ops.unpack_int4(packed).astype(jnp.float32) * s
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x @ w_fq),
+                               rtol=2e-5, atol=2e-4)
+    # and int4 noise vs fp32 stays within the analytic expectation
+    exact = x @ w
+    rel = float(jnp.linalg.norm(out - exact) / jnp.linalg.norm(exact))
+    assert rel < 0.25, rel

@@ -1,0 +1,261 @@
+"""Unit + property tests for the QONNX operators (paper Table II, Eqs. 1-4)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quant_ops as Q
+from repro.core import quant_ste, bipolar_quant_ste
+
+jax.config.update("jax_enable_x64", False)
+
+
+# ----------------------------------------------------------------- bounds
+
+@pytest.mark.parametrize("signed,narrow,bits,lo,hi", [
+    (True, False, 8, -128, 127),
+    (True, True, 8, -127, 127),
+    (False, False, 8, 0, 255),
+    (False, True, 8, 0, 254),
+    (True, False, 4, -8, 7),
+    (True, True, 2, -1, 1),
+    (False, False, 2, 0, 3),
+])
+def test_integer_bounds(signed, narrow, bits, lo, hi):
+    assert float(Q.min_int(signed, narrow, bits)) == lo
+    assert float(Q.max_int(signed, narrow, bits)) == hi
+
+
+def test_fractional_bit_width_bounds():
+    # paper §V: n_b = 7.5 narrows the clamp interval; storage unchanged
+    hi = float(Q.max_int(True, False, 7.5))
+    assert hi == pytest.approx(2 ** 6.5 - 1, rel=1e-5)
+    x = jnp.asarray([1e6, -1e6])
+    y = Q.quant(x, 1.0, 0.0, 7.5)
+    assert float(y[0]) <= hi
+    assert float(y[1]) >= float(Q.min_int(True, False, 7.5))
+
+
+# ---------------------------------------------------------------- rounding
+
+@pytest.mark.parametrize("mode,val,expect", [
+    ("ROUND", 0.5, 0.0),       # half-to-even
+    ("ROUND", 1.5, 2.0),
+    ("ROUND", 2.5, 2.0),
+    ("ROUND_TO_ZERO", 1.9, 1.0),
+    ("ROUND_TO_ZERO", -1.9, -1.0),
+    ("CEIL", 1.1, 2.0),
+    ("CEIL", -1.1, -1.0),
+    ("FLOOR", 1.9, 1.0),
+    ("FLOOR", -1.1, -2.0),
+    ("HALF_UP", 0.5, 1.0),
+    ("HALF_DOWN", 0.5, 0.0),
+])
+def test_rounding_modes(mode, val, expect):
+    assert float(Q.round_with_mode(jnp.asarray(val), mode)) == expect
+
+
+def test_unknown_rounding_mode_raises():
+    with pytest.raises(ValueError):
+        Q.round_with_mode(jnp.asarray(1.0), "STOCHASTIC")
+
+
+# ------------------------------------------------------------ Quant (Eq.1)
+
+@settings(max_examples=50, deadline=None)
+@given(
+    st.lists(st.floats(-100, 100, allow_nan=False, width=32), min_size=1, max_size=16),
+    st.floats(1e-3, 10.0),
+    st.integers(-8, 8),
+    st.integers(2, 8),
+    st.booleans(),
+    st.booleans(),
+)
+def test_quant_output_on_grid(xs, scale, zp, bits, signed, narrow):
+    """Property: quant output is always s*(q - z) with q an integer in range."""
+    if not signed:
+        zp = abs(zp)
+    x = jnp.asarray(xs, jnp.float32)
+    y = Q.quant(x, scale, float(zp), bits, signed=signed, narrow=narrow)
+    q = np.asarray(y) / scale + zp
+    assert np.allclose(q, np.round(q), atol=1e-3)
+    lo = float(Q.min_int(signed, narrow, bits))
+    hi = float(Q.max_int(signed, narrow, bits))
+    assert np.all(q >= lo - 1e-3) and np.all(q <= hi + 1e-3)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.floats(-50, 50, allow_nan=False, width=32), min_size=1, max_size=16),
+       st.floats(1e-2, 2.0), st.integers(2, 8))
+def test_quant_idempotent(xs, scale, bits):
+    """quant(quant(x)) == quant(x) — projection property."""
+    x = jnp.asarray(xs, jnp.float32)
+    y1 = Q.quant(x, scale, 0.0, bits)
+    y2 = Q.quant(y1, scale, 0.0, bits)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-5)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.floats(-50, 50, allow_nan=False, width=32), min_size=2, max_size=16),
+       st.floats(1e-2, 2.0), st.integers(2, 8))
+def test_quant_monotone(xs, scale, bits):
+    """x_i <= x_j implies quant(x_i) <= quant(x_j)."""
+    x = np.sort(np.asarray(xs, np.float32))
+    y = np.asarray(Q.quant(jnp.asarray(x), scale, 0.0, bits))
+    assert np.all(np.diff(y) >= -1e-6)
+
+
+def test_quant_error_bound():
+    """|x - quant(x)| <= s/2 inside the representable range (ROUND)."""
+    x = jnp.linspace(-3.0, 3.0, 1001)
+    s = 0.05
+    y = Q.quant(x, s, 0.0, 8)
+    assert float(jnp.max(jnp.abs(x - y))) <= s / 2 + 1e-6
+
+
+def test_channelwise_broadcast():
+    """Channel-wise scale via broadcasting (paper §V semantics)."""
+    x = jnp.ones((2, 3)) * jnp.asarray([1.0, 2.0, 4.0])
+    s = jnp.asarray([0.5, 1.0, 2.0])
+    y = Q.quant(x, s, 0.0, 8)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x))
+    # heterogeneous: tensor-wise scale with channel-wise bit width
+    bw = jnp.asarray([2.0, 4.0, 8.0])
+    y2 = Q.quant(x * 100, 1.0, 0.0, bw)
+    assert float(y2[0, 0]) == 1.0     # 2b signed clamps at 1
+    assert float(y2[0, 1]) == 7.0     # 4b signed clamps at 7
+    assert float(y2[0, 2]) == 127.0   # 8b signed clamps at 127
+
+
+def test_dynamic_scale():
+    """Dynamic quantization: scale computed from x at runtime (paper §V)."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 8))
+    s = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / 127.0
+    y = Q.quant(x, s, 0.0, 8)
+    assert float(jnp.max(jnp.abs(x - y))) <= float(jnp.max(s)) / 2 + 1e-6
+
+
+def test_blockwise_via_reshape():
+    """Block-wise scaling via tiling/reshaping until broadcast works (§V)."""
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 16))
+    xb = x.reshape(4, 2, 8)                      # blocks of 8
+    s = jnp.max(jnp.abs(xb), axis=-1, keepdims=True) / 7.0
+    y = Q.quant(xb, s, 0.0, 4).reshape(4, 16)
+    assert y.shape == x.shape
+    err = jnp.abs(x - y)
+    assert float(jnp.max(err)) <= float(jnp.max(s)) / 2 + 1e-6
+
+
+# ------------------------------------------------------------ BipolarQuant
+
+def test_bipolar():
+    x = jnp.asarray([-2.0, -0.0, 0.0, 3.0])
+    y = Q.bipolar_quant(x, 0.5)
+    np.testing.assert_allclose(np.asarray(y), [-0.5, 0.5, 0.5, 0.5])
+
+
+# ------------------------------------------------------------------- Trunc
+
+def test_trunc_basic():
+    """Drop 2 LSBs of an 8-bit value: int domain 100 -> floor(100/4)=25,
+    dequantized with scale*4 -> same magnitude modulo truncation."""
+    s = 0.1
+    x = jnp.asarray([100 * s])
+    y = Q.trunc(x, s, 0.0, 8, 6, rounding_mode="FLOOR")
+    assert float(y[0]) == pytest.approx(25 * (s * 4), rel=1e-5)
+
+
+def test_trunc_identity_when_same_width():
+    x = Q.quant(jnp.linspace(-3, 3, 17), 0.1, 0.0, 8)
+    y = Q.trunc(x, 0.1, 0.0, 8, 8)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x), atol=1e-5)
+
+
+def test_trunc_avg_pool_use_case():
+    """Paper §V: quantized average pooling = sum then right-shift via Trunc."""
+    s = 0.25
+    vals = Q.quant(jax.random.normal(jax.random.PRNGKey(2), (4, 4)), s, 0.0, 6)
+    pooled_sum = vals.sum()          # worst case needs 6 + log2(16) = 10 bits
+    y = Q.trunc(pooled_sum, s, 0.0, 10, 6)
+    # result is on the coarser grid s * 2^4
+    q = float(y) / (s * 16)
+    assert q == pytest.approx(round(q), abs=1e-4)
+
+
+# --------------------------------------------------------------------- STE
+
+def test_ste_forward_matches_quant():
+    x = jax.random.normal(jax.random.PRNGKey(3), (32,))
+    a = Q.quant(x, 0.1, 0.0, 4)
+    b = quant_ste(x, jnp.asarray(0.1), jnp.asarray(0.0), jnp.asarray(4.0))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_ste_gradient_window():
+    f = lambda x: quant_ste(x, jnp.asarray(0.1), jnp.asarray(0.0),
+                            jnp.asarray(4.0)).sum()
+    g = jax.grad(f)(jnp.asarray([0.0, 0.3, 100.0, -100.0]))
+    np.testing.assert_allclose(np.asarray(g), [1.0, 1.0, 0.0, 0.0])
+
+
+def test_ste_scale_gradient_lsq():
+    """Scale gradients follow LSQ (Esser et al. 2020): clipped elements match
+    the true local derivative (saturation value), in-range elements carry the
+    rounding-residual term q - x/s (which deliberately differs from the local
+    finite difference — that is the LSQ estimator)."""
+    s0 = jnp.asarray(0.21)
+    # clipped element (4b signed: clamps at 7): true derivative = q = 7
+    xc = jnp.asarray([5.0])
+    fc = lambda s: quant_ste(xc, s, jnp.asarray(0.0), jnp.asarray(4.0)).sum()
+    eps = 1e-3
+    fd = (fc(s0 + eps) - fc(s0 - eps)) / (2 * eps)
+    assert float(jnp.abs(jax.grad(fc)(s0) - fd)) < 1e-2
+    # in-range element: LSQ formula q - x/s
+    xi = jnp.asarray([0.33])
+    fi = lambda s: quant_ste(xi, s, jnp.asarray(0.0), jnp.asarray(4.0)).sum()
+    q = jnp.round(xi / s0)
+    expect = float((q - xi / s0)[0])
+    assert float(jnp.abs(jax.grad(fi)(s0) - expect)) < 1e-5
+
+
+def test_bipolar_ste_grad():
+    g = jax.grad(lambda x: bipolar_quant_ste(x, jnp.asarray(1.0)).sum())(
+        jnp.asarray([0.5, 2.0, -0.7, -3.0]))
+    np.testing.assert_allclose(np.asarray(g), [1.0, 0.0, 1.0, 0.0])
+
+
+def test_ste_channelwise_scale_grad_shape():
+    x = jax.random.normal(jax.random.PRNGKey(4), (8, 4))
+    s = jnp.full((1, 4), 0.1)
+    g = jax.grad(lambda s: quant_ste(x, s, jnp.asarray(0.0),
+                                     jnp.asarray(8.0)).sum())(s)
+    assert g.shape == s.shape
+
+
+# ------------------------------------------------------------- minmax/int
+
+def test_scale_from_minmax_symmetric():
+    s, z = Q.scale_from_minmax(jnp.asarray(-3.0), jnp.asarray(2.0), 8,
+                               symmetric=True)
+    assert float(z) == 0.0
+    assert float(s) == pytest.approx(3.0 / 128.0, rel=1e-5)
+
+
+def test_scale_from_minmax_asymmetric_integer_zp():
+    s, z = Q.scale_from_minmax(jnp.asarray(-1.0), jnp.asarray(3.0), 8,
+                               signed=False, symmetric=False)
+    assert float(z) == round(float(z))  # integer zero point (paper §II)
+    # range covered
+    y = Q.quant(jnp.asarray([-1.0, 3.0]), s, z, 8, signed=False)
+    np.testing.assert_allclose(np.asarray(y), [-1.0, 3.0], atol=float(s))
+
+
+def test_int_repr_roundtrip():
+    x = jax.random.normal(jax.random.PRNGKey(5), (16,))
+    s = 0.05
+    q = Q.int_repr(x, s, 0.0, 8)
+    assert q.dtype == jnp.int8
+    y = Q.dequantize_int(q.astype(jnp.float32), s, 0.0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(Q.quant(x, s, 0.0, 8)),
+                               atol=1e-6)

@@ -1,0 +1,105 @@
+"""Sharding-rule tests (host mesh; the 512-device check is the dry-run)."""
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.dist import sharding
+from repro.models import api
+
+
+def _mesh():
+    # single device -> (1, 1) mesh; rules must still be total & valid
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def _find(specs, pspecs, pred):
+    flat_s = jax.tree_util.tree_flatten_with_path(specs)[0]
+    flat_p = jax.tree.leaves(pspecs, is_leaf=lambda x: isinstance(x, P))
+    for (path, leaf), ps in zip(flat_s, flat_p):
+        name = sharding._leaf_name(path)
+        if pred(name):
+            yield name, leaf, ps
+
+
+def test_rules_total_over_all_archs():
+    """Every arch's every leaf gets a valid PartitionSpec of matching rank."""
+    mesh = _mesh()
+    for arch in ("qwen2_1_5b", "deepseek_moe_16b", "recurrentgemma_2b",
+                 "rwkv6_7b", "whisper_base", "llava_next_34b"):
+        specs = api.param_specs(get_config(arch))
+        pspecs = sharding.param_pspecs(specs, mesh)
+        flat_s = jax.tree.leaves(specs)
+        flat_p = jax.tree.leaves(pspecs, is_leaf=lambda x: isinstance(x, P))
+        assert len(flat_s) == len(flat_p)
+        for s, p in zip(flat_s, flat_p):
+            assert len(p) <= len(s.shape), (arch, s.shape, p)
+
+
+def test_model_axis_on_feature_dims():
+    """On a mesh with a real model axis, attention projections are
+    col-parallel and output projections row-parallel."""
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 1, "model": 16}
+    specs = api.param_specs(get_config("qwen2_1_5b"))
+    pspecs = sharding.param_pspecs(specs, FakeMesh(), fsdp=False)
+    for name, leaf, ps in _find(specs, pspecs, lambda n: n == "wq"):
+        assert ps[-1] == "model", (name, ps)       # col-parallel
+    for name, leaf, ps in _find(specs, pspecs, lambda n: n == "wo"):
+        assert ps[-2] == "model", (name, ps)       # row-parallel
+    for name, leaf, ps in _find(specs, pspecs, lambda n: n == "embed"):
+        assert ps[0] == "model"                    # vocab-parallel
+
+
+def test_moe_expert_dim_sharded():
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+    specs = api.param_specs(get_config("deepseek_moe_16b"))
+    pspecs = sharding.param_pspecs(specs, FakeMesh(), fsdp=False)
+    for name, leaf, ps in _find(specs, pspecs, lambda n: n.startswith("we_")):
+        # (L, E, d, f): expert dim = -3
+        assert ps[len(leaf.shape) - 3] == "model", (name, leaf.shape, ps)
+
+
+def test_nondivisible_dims_not_sharded():
+    """whisper vocab 51865 is not divisible by 16 -> embed replicated."""
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+    specs = api.param_specs(get_config("whisper_base"))
+    pspecs = sharding.param_pspecs(specs, FakeMesh(), fsdp=False)
+    for name, leaf, ps in _find(specs, pspecs, lambda n: n == "embed"):
+        assert ps[0] is None, ps
+
+
+def test_fsdp_shards_an_extra_dim():
+    class FakeMesh:
+        axis_names = ("pod", "data", "model")
+        shape = {"pod": 2, "data": 16, "model": 16}
+    specs = api.param_specs(get_config("qwen2_1_5b"))
+    no_fsdp = sharding.param_pspecs(specs, FakeMesh(), fsdp=False)
+    with_fsdp = sharding.param_pspecs(specs, FakeMesh(), fsdp=True)
+    def count_axes(ptree):
+        return sum(sum(1 for a in ps if a is not None)
+                   for ps in jax.tree.leaves(ptree,
+                                             is_leaf=lambda x: isinstance(x, P)))
+    assert count_axes(with_fsdp) > count_axes(no_fsdp)
+
+
+def test_batch_and_cache_pspecs():
+    class FakeMesh:
+        axis_names = ("pod", "data", "model")
+        shape = {"pod": 2, "data": 16, "model": 16}
+    cfg = get_config("qwen2_1_5b")
+    batch = api.input_specs(cfg, "train_4k")["batch"]
+    bp = sharding.batch_pspecs(batch, FakeMesh())
+    assert bp["tokens"][0] == ("pod", "data")
+    dec = api.input_specs(cfg, "decode_32k")
+    cp = sharding.cache_pspecs(dec["cache"], FakeMesh())
+    # stacked cache (L, B, C, KV, hd): batch dim 1 sharded over DP
+    assert jax.tree.leaves(cp, is_leaf=lambda x: isinstance(x, P))[0][1] == \
+        ("pod", "data")

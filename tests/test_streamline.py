@@ -1,0 +1,129 @@
+"""Backend streamlining passes (paper §VI-C/D)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import GraphBuilder, Node, execute, transforms
+from repro.core.formats import qonnx_to_qcdq
+from repro.core.streamline import propagate_dequant, quant_to_multithreshold
+
+
+def _run(g, x):
+    return np.asarray(execute(g, {g.input_names[0]: x})[g.output_names[0]])
+
+
+def make_qcdq_mlp(seed=0):
+    """x -> Quant -> MatMul -> Relu -> Quant -> MatMul, lowered to QCDQ."""
+    rng = np.random.RandomState(seed)
+    b = GraphBuilder("mlp")
+    x = b.add_input("x", (2, 6))
+    h = b.quant(x, 0.05, 0.0, 8)
+    w1 = b.add_initializer("w1", rng.randn(6, 8).astype(np.float32) * 0.4)
+    (h,) = b.add_node("MatMul", [h, w1], 1)
+    (h,) = b.add_node("Relu", [h], 1)
+    h = b.quant(h, 0.04, 0.0, 4, signed=False)
+    w2 = b.add_initializer("w2", rng.randn(8, 3).astype(np.float32) * 0.4)
+    (h,) = b.add_node("MatMul", [h, w2], 1)
+    b.mark_output(h)
+    return b.build()
+
+
+def test_propagate_dequant_moves_scale_below_matmul():
+    g = qonnx_to_qcdq(make_qcdq_mlp())
+    x = np.random.RandomState(1).randn(2, 6).astype(np.float32)
+    ref = _run(g, x)
+    g2 = propagate_dequant(g)
+    # every MatMul's data input now comes straight from Clip (integer domain)
+    for n in g2.nodes:
+        if n.op_type == "MatMul":
+            prod = g2.producer(n.inputs[0])
+            assert prod is not None and prod.op_type == "Clip", \
+                (n.name, prod and prod.op_type)
+    np.testing.assert_allclose(_run(g2, x), ref, rtol=1e-5, atol=1e-5)
+
+
+def test_propagate_dequant_skips_asymmetric():
+    b = GraphBuilder("asym")
+    x = b.add_input("x", (2, 4))
+    h = b.quant(x, 0.1, 3.0, 8, signed=False)   # zero-point 3: must not move
+    w = b.add_initializer("w", np.random.RandomState(0).randn(4, 2)
+                          .astype(np.float32))
+    (h,) = b.add_node("MatMul", [h, w], 1)
+    b.mark_output(h)
+    g = qonnx_to_qcdq(b.build())
+    g2 = propagate_dequant(g)
+    assert any(n.op_type == "DequantizeLinear" for n in g2.nodes)
+    x_v = np.random.RandomState(1).rand(2, 4).astype(np.float32)
+    np.testing.assert_allclose(_run(g2, x_v), _run(g, x_v), atol=1e-6)
+
+
+def test_fold_adjacent_muls():
+    b = GraphBuilder("muls")
+    x = b.add_input("x", (4,))
+    a = b.add_initializer("a", np.asarray(2.0, np.float32))
+    c = b.add_initializer("c", np.asarray(3.0, np.float32))
+    (h,) = b.add_node("Mul", [x, a], 1)
+    (h,) = b.add_node("Mul", [h, c], 1)
+    b.mark_output(h)
+    g2 = propagate_dequant(b.build())
+    assert sum(n.op_type == "Mul" for n in g2.nodes) == 1
+    np.testing.assert_allclose(_run(g2, np.ones(4, np.float32)), 6.0)
+
+
+def test_quant_to_multithreshold_relu():
+    """§VI-D step 3: activation-path Quant -> MultiThreshold, exact."""
+    b = GraphBuilder("act")
+    x = b.add_input("x", (1, 64))
+    w = b.add_initializer("w", np.random.RandomState(0).randn(64, 32)
+                          .astype(np.float32) * 0.2)
+    (h,) = b.add_node("MatMul", [x, w], 1)
+    (h,) = b.add_node("Relu", [h], 1)
+    h = b.quant(h, 0.25, 0.0, 3, signed=False)
+    b.mark_output(h)
+    g = b.build()
+    xv = np.random.RandomState(1).randn(1, 64).astype(np.float32)
+    ref = _run(g, xv)
+    g2 = quant_to_multithreshold(g)
+    ops = [n.op_type for n in g2.nodes]
+    assert "MultiThreshold" in ops and "Quant" not in ops and "Relu" not in ops
+    np.testing.assert_allclose(_run(g2, xv), ref, atol=1e-5)
+
+
+def test_quant_to_multithreshold_signed_identity():
+    b = GraphBuilder("idq")
+    x = b.add_input("x", (1, 32))
+    w = b.add_initializer("w", np.random.RandomState(2).randn(32, 16)
+                          .astype(np.float32) * 0.2)
+    (h,) = b.add_node("MatMul", [x, w], 1)
+    h = b.quant(h, 0.3, 0.0, 3, signed=True, narrow=True)
+    b.mark_output(h)
+    g = b.build()
+    xv = np.random.RandomState(3).randn(1, 32).astype(np.float32)
+    ref = _run(g, xv)
+    g2 = quant_to_multithreshold(g)
+    assert any(n.op_type == "MultiThreshold" for n in g2.nodes)
+    np.testing.assert_allclose(_run(g2, xv), ref, atol=1e-5)
+
+
+def test_quant_to_multithreshold_rejects_nonmonotone():
+    """FINN §VI-D: 'if an incompatible network architecture is discovered
+    during ingestion an error will be raised'."""
+    b = GraphBuilder("bad")
+    x = b.add_input("x", (1, 8))
+    (h,) = b.add_node("Softmax", [x], 1)
+    h = b.quant(h, 0.01, 0.0, 8, signed=False)
+    b.mark_output(h)
+    with pytest.raises(ValueError, match="unsupported activation"):
+        quant_to_multithreshold(b.build())
+
+
+def test_zoo_tfc_full_finn_ingestion():
+    """Whole §VI-D pipeline on a zoo model: cleanup -> weight-fold ->
+    MultiThreshold conversion, end to end, output preserved."""
+    from repro.models import zoo
+    g = transforms.cleanup(zoo.build_tfc(2, 2))
+    x = np.random.RandomState(4).randn(1, 784).astype(np.float32)
+    ref = _run(g, x)
+    g2 = quant_to_multithreshold(g)
+    assert sum(n.op_type == "MultiThreshold" for n in g2.nodes) >= 3
+    np.testing.assert_allclose(_run(g2, x), ref, atol=1e-4)

@@ -1,0 +1,54 @@
+"""Property tests: streamlining preserves semantics on random QCDQ MLPs."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import GraphBuilder, execute
+from repro.core.formats import qonnx_to_qcdq
+from repro.core.streamline import propagate_dequant, quant_to_multithreshold
+
+
+def _mlp_graph(dims, w_bits, a_bits, seed):
+    rng = np.random.RandomState(seed)
+    b = GraphBuilder("prop_mlp")
+    x = b.add_input("x", (2, dims[0]))
+    h = x
+    # scales chosen tie-free: scale reordering ((a@w)*s vs (a*s)@w) flips
+    # round() only at exact .5 ties, which rational scales like 0.1 hit —
+    # a real, documented streamlining caveat, not a bug (see streamline.py)
+    for i in range(len(dims) - 1):
+        h = b.quant(h, 0.0973, 0.0, a_bits, signed=(i == 0))
+        w = b.add_initializer("w", rng.randn(dims[i], dims[i + 1])
+                              .astype(np.float32) * 0.4)
+        qw = b.quant(w, 0.0517, 0.0, w_bits, narrow=True)
+        (h,) = b.add_node("MatMul", [h, qw], 1)
+        if i < len(dims) - 2:
+            (h,) = b.add_node("Relu", [h], 1)
+    b.mark_output(h)
+    return b.build()
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    st.lists(st.integers(2, 12), min_size=2, max_size=4),
+    st.integers(2, 8),
+    st.integers(2, 8),
+    st.integers(0, 1000),
+)
+def test_propagate_dequant_preserves_semantics(dims, w_bits, a_bits, seed):
+    g = qonnx_to_qcdq(_mlp_graph(dims, w_bits, a_bits, seed))
+    g2 = propagate_dequant(g)
+    x = np.random.RandomState(seed + 1).randn(2, dims[0]).astype(np.float32)
+    o1 = np.asarray(execute(g, {"x": x})[g.output_names[0]])
+    o2 = np.asarray(execute(g2, {"x": x})[g2.output_names[0]])
+    np.testing.assert_allclose(o1, o2, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 6), st.integers(0, 1000))
+def test_multithreshold_preserves_semantics(a_bits, seed):
+    g = _mlp_graph([6, 8, 4], 4, a_bits, seed)
+    g2 = quant_to_multithreshold(g)
+    x = np.random.RandomState(seed + 2).randn(2, 6).astype(np.float32)
+    o1 = np.asarray(execute(g, {"x": x})[g.output_names[0]])
+    o2 = np.asarray(execute(g2, {"x": x})[g2.output_names[0]])
+    np.testing.assert_allclose(o1, o2, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,294 @@
+"""Tests for data pipeline, optimizer, checkpointing, serving, fault logic."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.ckpt import CheckpointManager
+from repro.data import SyntheticLMStream
+from repro.dist import fault
+from repro.models import api
+from repro.optim import adamw_init, adamw_update, cosine_schedule
+from repro.optim.compress import compress_init, compressed_grads
+from repro.serve import GenerationEngine, greedy_generate
+from repro.train.loop import TrainHyper, init_train_state, make_train_step
+
+
+# ------------------------------------------------------------------- data
+
+def test_data_deterministic_and_resumable():
+    mk = lambda: SyntheticLMStream(vocab=256, global_batch=4, seq_len=16, seed=7)
+    a, b = mk(), mk()
+    for _ in range(3):
+        np.testing.assert_array_equal(a.next()["tokens"], b.next()["tokens"])
+    # resume: state_dict/load_state_dict reproduces the stream exactly
+    sd = a.state_dict()
+    x4 = a.next()
+    c = mk()
+    c.load_state_dict(sd)
+    np.testing.assert_array_equal(c.next()["tokens"], x4["tokens"])
+
+
+def test_data_host_sharding_partitions_global_batch():
+    full = SyntheticLMStream(vocab=64, global_batch=8, seq_len=4, seed=1)
+    h0 = SyntheticLMStream(vocab=64, global_batch=8, seq_len=4, seed=1,
+                           n_hosts=2, host_index=0)
+    h1 = SyntheticLMStream(vocab=64, global_batch=8, seq_len=4, seed=1,
+                           n_hosts=2, host_index=1)
+    assert h0.next()["tokens"].shape == (4, 4)
+    # different hosts draw different rows
+    assert not np.array_equal(h0.batch_at(0)["tokens"],
+                              h1.batch_at(0)["tokens"])
+    del full
+
+
+def test_data_prefetch_matches_sync():
+    s1 = SyntheticLMStream(vocab=64, global_batch=2, seq_len=8, seed=3)
+    s2 = SyntheticLMStream(vocab=64, global_batch=2, seq_len=8, seed=3)
+    s2.start_prefetch()
+    try:
+        for _ in range(4):
+            np.testing.assert_array_equal(s1.next()["tokens"],
+                                          s2.next_prefetched()["tokens"])
+    finally:
+        s2.stop()
+
+
+def test_data_labels_learnable_map():
+    s = SyntheticLMStream(vocab=97, global_batch=2, seq_len=32, seed=5)
+    b1, b2 = s.batch_at(0), s.batch_at(1)
+    # same token => same label across batches (fixed permutation)
+    lut = {}
+    for b in (b1, b2):
+        for t, l in zip(b["tokens"].ravel(), b["labels"].ravel()):
+            assert lut.setdefault(int(t), int(l)) == int(l)
+
+
+# ------------------------------------------------------------------ optim
+
+def test_adamw_reduces_quadratic_loss():
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    state = adamw_init(params)
+    loss = lambda p: jnp.sum(p["w"] ** 2)
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        params, state, _ = adamw_update(g, state, params, lr=0.05,
+                                        weight_decay=0.0)
+    assert float(loss(params)) < 1e-2
+
+
+def test_adamw_no_decay_on_vectors():
+    params = {"w": jnp.ones((2, 2)), "b": jnp.ones((2,))}
+    state = adamw_init(params)
+    zero_g = jax.tree.map(jnp.zeros_like, params)
+    new_params, _, _ = adamw_update(zero_g, state, params, lr=0.1,
+                                    weight_decay=0.5)
+    assert float(jnp.abs(new_params["b"] - 1.0).max()) < 1e-6   # no decay
+    assert float(new_params["w"][0, 0]) < 1.0                   # decayed
+
+
+def test_cosine_schedule_shape():
+    assert float(cosine_schedule(0, peak=1.0, warmup_steps=10,
+                                 total_steps=100)) < 0.2
+    assert float(cosine_schedule(10, peak=1.0, warmup_steps=10,
+                                 total_steps=100)) == pytest.approx(1.0, rel=1e-3)
+    end = float(cosine_schedule(100, peak=1.0, warmup_steps=10,
+                                total_steps=100))
+    assert end == pytest.approx(0.1, rel=1e-3)                   # floor
+
+
+def test_grad_compression_error_feedback():
+    """Residual-corrected compression: accumulated applied updates converge
+    to the accumulated true gradient (error feedback keeps it unbiased)."""
+    rng = np.random.default_rng(0)
+    g_true = [jnp.asarray(rng.standard_normal(64), jnp.float32)
+              for _ in range(20)]
+    state = compress_init({"w": g_true[0]})
+    applied = jnp.zeros(64)
+    total = jnp.zeros(64)
+    for g in g_true:
+        cg, state = compressed_grads({"w": g}, state)
+        applied = applied + cg["w"]
+        total = total + g
+    # applied = total - final_residual; residual is bounded by one quant step
+    resid = state.residual["w"]
+    np.testing.assert_allclose(np.asarray(applied + resid), np.asarray(total),
+                               rtol=1e-4, atol=1e-4)
+    assert float(jnp.abs(resid).max()) < float(jnp.abs(total).max())
+
+
+# ------------------------------------------------------------------- ckpt
+
+def test_checkpoint_roundtrip_and_latest(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    state = {"params": {"w": jnp.arange(6.0).reshape(2, 3)},
+             "step": jnp.asarray(5)}
+    mgr.save(5, state, extra={"data_step": 5})
+    mgr.save(9, jax.tree.map(lambda x: x + 1, state))
+    assert mgr.latest_step() == 9
+    restored = mgr.restore(9, state)
+    np.testing.assert_allclose(np.asarray(restored["params"]["w"]),
+                               np.arange(6.0).reshape(2, 3) + 1)
+    assert mgr.manifest(5)["extra"]["data_step"] == 5
+
+
+def test_checkpoint_retention_gc(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    state = {"w": jnp.zeros(3)}
+    for s in (1, 2, 3, 4):
+        mgr.save(s, state)
+    assert mgr.all_steps() == [3, 4]
+
+
+def test_checkpoint_crash_safety(tmp_path):
+    """A stale .tmp dir (simulated crash) must not break resume."""
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(3, {"w": jnp.ones(2)})
+    (tmp_path / "step_0000000007.tmp").mkdir()       # crashed mid-save
+    assert mgr.latest_step() == 3
+    mgr2 = CheckpointManager(tmp_path)
+    assert mgr2.latest_step() == 3
+
+
+def test_checkpoint_missing_leaf_raises(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(1, {"a": jnp.zeros(2)})
+    with pytest.raises(ValueError, match="missing"):
+        mgr.restore(1, {"a": jnp.zeros(2), "b": jnp.zeros(3)})
+
+
+# ------------------------------------------------------------- train e2e
+
+def test_train_loss_decreases_smoke():
+    """End-to-end: a tiny dense model learns the synthetic map (mechanism
+    validation — replaces the paper's MNIST/CIFAR training offline)."""
+    cfg = get_smoke_config("qwen2_1_5b")
+    hyper = TrainHyper(peak_lr=3e-3, warmup_steps=5, total_steps=60,
+                       z_loss=0.0)
+    stream = SyntheticLMStream(vocab=cfg.vocab, global_batch=8, seq_len=16,
+                               seed=0)
+    state = init_train_state(jax.random.PRNGKey(0), cfg, hyper)
+    step = jax.jit(make_train_step(cfg, hyper))
+    losses = []
+    for _ in range(40):
+        batch = {k: jnp.asarray(v) for k, v in stream.next().items()}
+        state, m = step(state, batch)
+        losses.append(float(m["loss"]))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.5, losses[::8]
+
+
+def test_train_microbatch_equivalence():
+    """Grad accumulation over microbatches == single big batch (same data)."""
+    cfg = get_smoke_config("olmo_1b")
+    rng = jax.random.PRNGKey(1)
+    batch = api.make_batch(rng, cfg, batch=4, seq=8)
+    h1 = TrainHyper(microbatches=1, z_loss=0.0)
+    h2 = TrainHyper(microbatches=2, z_loss=0.0)
+    s1 = init_train_state(rng, cfg, h1)
+    s2 = jax.tree.map(lambda x: x, s1)
+    n1, _ = jax.jit(make_train_step(cfg, h1))(s1, batch)
+    n2, _ = jax.jit(make_train_step(cfg, h2))(s2, batch)
+    diffs = jax.tree.map(lambda a, b: float(jnp.abs(a - b).max()),
+                         n1["params"], n2["params"])
+    assert max(jax.tree.leaves(diffs)) < 5e-3
+
+
+def test_train_resume_from_checkpoint(tmp_path):
+    """Kill-and-resume reproduces the uninterrupted run (fault tolerance)."""
+    cfg = get_smoke_config("olmo_1b")
+    hyper = TrainHyper(z_loss=0.0, warmup_steps=2, total_steps=20)
+    stream = SyntheticLMStream(vocab=cfg.vocab, global_batch=4, seq_len=8,
+                               seed=2)
+    step = jax.jit(make_train_step(cfg, hyper))
+    mgr = CheckpointManager(tmp_path)
+
+    state = init_train_state(jax.random.PRNGKey(0), cfg, hyper)
+    for i in range(3):
+        state, _ = step(state, jax.tree.map(jnp.asarray, stream.next()))
+    mgr.save(3, {"state": state}, extra=stream.state_dict())
+    for i in range(3):       # uninterrupted continuation
+        state, m_ref = step(state, jax.tree.map(jnp.asarray, stream.next()))
+
+    # "crash" -> restore
+    st = mgr.latest_step()
+    stream2 = SyntheticLMStream(vocab=cfg.vocab, global_batch=4, seq_len=8,
+                                seed=2)
+    stream2.load_state_dict(mgr.manifest(st)["extra"])
+    state2 = mgr.restore(st, {"state": state})["state"]
+    for i in range(3):
+        state2, m_res = step(state2, jax.tree.map(jnp.asarray, stream2.next()))
+    assert float(m_res["loss"]) == pytest.approx(float(m_ref["loss"]),
+                                                 rel=1e-5)
+
+
+# ------------------------------------------------------------------ serve
+
+def test_greedy_generate_deterministic():
+    cfg = get_smoke_config("qwen2_1_5b")
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    batch = {"tokens": jnp.asarray([[1, 2, 3, 4]], jnp.int32)}
+    a = greedy_generate(params, cfg, batch, n_steps=5)
+    b = greedy_generate(params, cfg, batch, n_steps=5)
+    assert a.shape == (1, 5)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_generation_engine_batches_requests():
+    cfg = get_smoke_config("olmo_1b")
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    eng = GenerationEngine(params, cfg, max_batch=4)
+    reqs = [eng.submit(np.arange(1, 4 + i), max_new_tokens=3)
+            for i in range(3)]
+    eng.run_pending()
+    for r in reqs:
+        assert r.result is not None and r.result.shape == (3,)
+        assert not np.any(np.asarray(r.result) < 0)
+
+
+def test_quantized_kv_generation_close_to_float():
+    from repro.quantize.config import QuantRecipe
+    cfg = get_smoke_config("qwen2_1_5b")
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    batch = {"tokens": jnp.asarray([[5, 6, 7, 8, 9, 10]], jnp.int32)}
+    a = greedy_generate(params, cfg, batch, n_steps=4)
+    cfg_q = cfg.replace(quant=QuantRecipe.w_a(8, 8, kv_cache_bits=8))
+    b = greedy_generate(params, cfg_q, batch, n_steps=4)
+    assert a.shape == b.shape  # tokens may differ; shapes/validity must hold
+
+
+# ------------------------------------------------------------------ fault
+
+def test_watchdog_flags_stragglers():
+    wd = fault.Watchdog(threshold=1.5, window=16)
+    import time as _t
+    for i in range(10):
+        wd.step_start()
+        wd.step_end(i)
+    wd.step_start()
+    _t.sleep(0.05)
+    wd._t0 -= 1.0            # simulate a 1s stall without sleeping 1s
+    assert wd.step_end(10) is True
+    assert wd.stragglers
+
+
+def test_restart_policy_bounded():
+    pol = fault.RestartPolicy(max_restarts=2, backoff_s=0.0)
+    calls = {"n": 0}
+
+    def make_state():
+        return {}
+
+    def run(_):
+        calls["n"] += 1
+        raise RuntimeError("boom")
+
+    with pytest.raises(RuntimeError):
+        fault.run_with_restarts(make_state, run, pol)
+    assert calls["n"] == 3   # 1 try + 2 retries
+
+
+def test_elastic_mesh_derives_from_device_count():
+    m = fault.elastic_mesh(prefer_model=16)
+    assert m.devices.size == jax.device_count()
+    assert m.axis_names == ("data", "model")

@@ -1,0 +1,132 @@
+"""Tests for graph transformations (paper §V utilities, Figs. 1-3)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import GraphBuilder, Node, execute, transforms
+
+from test_graph import make_mlp_graph
+
+
+def _run(g, x):
+    return np.asarray(execute(g, {g.input_names[0]: x})[g.output_names[0]])
+
+
+def test_infer_shapes_annotates_all_tensors():
+    g = transforms.infer_shapes(make_mlp_graph())
+    for node in g.nodes:
+        for out in node.outputs:
+            assert out in g.value_info, f"missing shape for {out}"
+            assert g.value_info[out].shape is not None
+
+
+def test_fold_constants_removes_weight_quant():
+    g = make_mlp_graph()
+    n_quant_before = sum(1 for n in g.nodes if n.op_type == "Quant")
+    folded = transforms.fold_constants(g)
+    n_quant_after = sum(1 for n in folded.nodes if n.op_type == "Quant")
+    # the two weight Quants fold; the two activation Quants stay
+    assert n_quant_before == 4 and n_quant_after == 2
+    x = np.random.RandomState(0).randn(2, 6).astype(np.float32)
+    np.testing.assert_allclose(_run(g, x), _run(folded, x), atol=1e-6)
+
+
+def test_remove_identity():
+    b = GraphBuilder("idg")
+    x = b.add_input("x", (2, 3))
+    (i1,) = b.add_node("Identity", [x], 1)
+    (r,) = b.add_node("Relu", [i1], 1)
+    (i2,) = b.add_node("Identity", [r], 1)
+    b.mark_output(i2)
+    g = b.build()
+    g2 = transforms.remove_identity(g)
+    assert [n.op_type for n in g2.nodes] == ["Relu"]
+    xv = np.random.RandomState(0).randn(2, 3).astype(np.float32)
+    np.testing.assert_array_equal(_run(g, xv), _run(g2, xv))
+
+
+def test_collapse_reshape_chain_fig2():
+    """The Fig. 1 -> Fig. 2 cleanup: Shape/Gather/Unsqueeze/Concat feeding a
+    Reshape collapses into a static Reshape."""
+    b = GraphBuilder("rechain")
+    x = b.add_input("x", (2, 4, 3))
+    (sh,) = b.add_node("Shape", [x], 1)
+    zero = b.add_initializer("zero", np.asarray(0, np.int64))
+    (d0,) = b.add_node("Gather", [sh, zero], 1, {"axis": 0})
+    (d0u,) = b.add_node("Unsqueeze", [d0], 1, {"axes": [0]})
+    minus1 = b.add_initializer("m1", np.asarray([-1], np.int64))
+    (tgt,) = b.add_node("Concat", [d0u, minus1], 1, {"axis": 0})
+    (y,) = b.add_node("Reshape", [x, tgt], 1)
+    b.mark_output(y)
+    g = b.build()
+    g2 = transforms.cleanup(g)
+    ops = [n.op_type for n in g2.nodes]
+    assert ops == ["Reshape"], ops  # chain collapsed (Fig. 2)
+    assert g2.nodes[0].inputs[1] in g2.initializers
+    xv = np.random.RandomState(0).randn(2, 4, 3).astype(np.float32)
+    np.testing.assert_array_equal(_run(g, xv), _run(g2, xv))
+    assert _run(g2, xv).shape == (2, 12)
+
+
+def test_dead_code_elimination_keeps_semantics():
+    g = make_mlp_graph()
+    # add a dead branch
+    g.nodes.append(Node("Relu", [g.input_names[0]], ["dead_out"], name="deadrelu"))
+    g2 = transforms.eliminate_dead_code(g)
+    assert all(n.name != "deadrelu" for n in g2.nodes)
+    x = np.random.RandomState(0).randn(2, 6).astype(np.float32)
+    np.testing.assert_allclose(_run(g, x), _run(g2, x))
+
+
+def make_cnv_block(seed=0):
+    """conv -> BN -> relu -> maxpool -> conv -> relu -> GAP, NCHW."""
+    rng = np.random.RandomState(seed)
+    b = GraphBuilder("cnvblk")
+    x = b.add_input("x", (2, 3, 16, 16))
+    qx = b.quant(x, 0.05, 0.0, 8)
+    w1 = b.add_initializer("w1", (rng.randn(8, 3, 3, 3) * 0.2).astype(np.float32))
+    qw1 = b.quant(w1, 0.02, 0.0, 2, narrow=True)
+    (c1,) = b.add_node("Conv", [qx, qw1], 1,
+                       {"strides": [1, 1], "pads": [1, 1, 1, 1], "kernel_shape": [3, 3]})
+    g_, be, mu, va = (b.add_initializer(n, v.astype(np.float32)) for n, v in [
+        ("g", rng.rand(8) + 0.5), ("b", rng.randn(8) * 0.1),
+        ("m", rng.randn(8) * 0.1), ("v", rng.rand(8) + 0.5)])
+    (bn,) = b.add_node("BatchNormalization", [c1, g_, be, mu, va], 1)
+    (r1,) = b.add_node("Relu", [bn], 1)
+    (p1,) = b.add_node("MaxPool", [r1], 1, {"kernel_shape": [2, 2], "strides": [2, 2]})
+    w2 = b.add_initializer("w2", (rng.randn(16, 8, 3, 3) * 0.2).astype(np.float32))
+    qw2 = b.quant(w2, 0.02, 0.0, 2, narrow=True)
+    (c2,) = b.add_node("Conv", [p1, qw2], 1,
+                       {"strides": [1, 1], "pads": [1, 1, 1, 1], "kernel_shape": [3, 3]})
+    (r2,) = b.add_node("Relu", [c2], 1)
+    (gap,) = b.add_node("GlobalAveragePool", [r2], 1)
+    b.mark_output(gap)
+    return b.build()
+
+
+def test_channels_last_fig3():
+    """NCHW -> NHWC conversion preserves semantics; channels move last."""
+    g = transforms.cleanup(make_cnv_block())
+    x = np.random.RandomState(1).randn(2, 3, 16, 16).astype(np.float32)
+    ref = _run(g, x)
+    gl = transforms.to_channels_last(g)
+    # input converted to NHWC (Fig. 3: "channels ... moved to the last position")
+    assert tuple(int(d) for d in gl.inputs[0].shape) == (2, 16, 16, 3)
+    out = np.asarray(execute(gl, {gl.input_names[0]: x.transpose(0, 2, 3, 1)})[
+        gl.output_names[0]])
+    np.testing.assert_allclose(ref.squeeze(), out.squeeze(), atol=1e-4)
+    # all layout ops were tagged NHWC (wrapper attribute)
+    for n in gl.nodes:
+        if n.op_type in ("Conv", "MaxPool", "BatchNormalization", "GlobalAveragePool"):
+            assert n.attrs.get("data_layout") == "NHWC"
+    # no transpose ping-pong left between the conv and pool ops
+    n_transpose = sum(1 for n in gl.nodes if n.op_type == "Transpose")
+    assert n_transpose <= 1  # only the final output restore may remain
+
+
+def test_cleanup_idempotent():
+    g = transforms.cleanup(make_mlp_graph())
+    g2 = transforms.cleanup(g)
+    assert [n.op_type for n in g.nodes] == [n.op_type for n in g2.nodes]
+    x = np.random.RandomState(3).randn(2, 6).astype(np.float32)
+    np.testing.assert_allclose(_run(g, x), _run(g2, x))

@@ -1,0 +1,96 @@
+"""Model zoo validation against paper Table III."""
+import numpy as np
+import pytest
+
+from repro.core import bops, execute, transforms
+from repro.core.formats import qonnx_to_qcdq, UnsupportedLowering
+from repro.models import zoo
+
+
+def _cost(name):
+    g = transforms.infer_shapes(zoo.ZOO[name]())
+    c = bops.graph_cost(g)
+    first_conv = next((l for l in c.layers if "Conv" in l.name), None)
+    conv_net = "CNV" in name or "MobileNet" in name
+    macs_table = c.macs - (first_conv.macs if conv_net else 0)
+    weights_table = c.weights - (
+        first_conv.weights if "MobileNet" in name else 0)
+    return g, c, macs_table, weights_table
+
+
+@pytest.mark.parametrize("name", ["TFC-w1a1", "TFC-w1a2", "TFC-w2a2",
+                                  "CNV-w1a1", "CNV-w1a2", "CNV-w2a2"])
+def test_table3_exact(name):
+    g, c, macs, weights = _cost(name)
+    ref_macs, ref_w, ref_bits = zoo.TABLE3[name]
+    assert macs == ref_macs
+    assert weights == ref_w
+    assert int(c.total_weight_bits) == ref_bits
+
+
+def test_table3_mobilenet_close():
+    g, c, macs, weights = _cost("MobileNet-w4a4")
+    ref_macs, ref_w, ref_bits = zoo.TABLE3["MobileNet-w4a4"]
+    assert abs(macs - ref_macs) / ref_macs < 2e-3     # counting-convention gap
+    assert weights == ref_w
+    assert int(c.total_weight_bits) == ref_bits       # exact
+
+
+@pytest.mark.parametrize("name", ["TFC-w1a1", "TFC-w2a2", "CNV-w2a2"])
+def test_zoo_models_execute(name):
+    g = zoo.ZOO[name]()
+    shape = (1, 784) if "TFC" in name else (1, 3, 32, 32)
+    x = np.random.RandomState(0).randn(*shape).astype(np.float32)
+    out = execute(g, {"x": x})[g.output_names[0]]
+    assert out.shape[-1] == 10
+    assert not np.any(np.isnan(np.asarray(out)))
+
+
+def test_zoo_cleanup_preserves_output():
+    g = zoo.ZOO["CNV-w2a2"]()
+    x = np.random.RandomState(1).randn(1, 3, 32, 32).astype(np.float32)
+    o1 = execute(g, {"x": x})[g.output_names[0]]
+    g2 = transforms.cleanup(g)
+    o2 = execute(g2, {"x": x})[g2.output_names[0]]
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-4)
+    # weight Quant nodes folded (Fig. 2 behaviour)
+    assert sum(n.op_type in ("Quant", "BipolarQuant") for n in g2.nodes) < \
+        sum(n.op_type in ("Quant", "BipolarQuant") for n in g.nodes)
+
+
+def test_zoo_channels_last_cnv():
+    """Fig. 3: the CNV model converts to channels-last and still matches."""
+    g = transforms.cleanup(zoo.ZOO["CNV-w2a2"]())
+    x = np.random.RandomState(2).randn(1, 3, 32, 32).astype(np.float32)
+    o1 = execute(g, {"x": x})[g.output_names[0]]
+    gl = transforms.to_channels_last(g)
+    assert tuple(int(d) for d in gl.inputs[0].shape) == (1, 32, 32, 3)
+    o2 = execute(gl, {gl.input_names[0]: x.transpose(0, 2, 3, 1)})[
+        gl.output_names[0]]
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-3)
+
+
+def test_zoo_qcdq_lowering_w2a2():
+    """Sub-8-bit zoo model lowers to QCDQ and matches (paper §IV)."""
+    g = transforms.cleanup(zoo.ZOO["TFC-w2a2"]())
+    q = qonnx_to_qcdq(g)
+    x = np.random.RandomState(3).randn(1, 784).astype(np.float32)
+    o1 = execute(g, {"x": x})[g.output_names[0]]
+    o2 = execute(q, {"x": x})[q.output_names[0]]
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-4)
+
+
+def test_zoo_binary_models_not_qcdq_lowerable():
+    """w1 models use BipolarQuant — Table I: not expressible in QCDQ."""
+    g = transforms.cleanup(zoo.ZOO["TFC-w1a1"]())
+    with pytest.raises(UnsupportedLowering):
+        qonnx_to_qcdq(g)
+
+
+def test_bops_eq5_monotone_in_bits():
+    """Eq. 5 sanity: BOPs grow with both bit widths."""
+    b11 = bops.conv_bops(64, 64, 3, 100, 1, 1)
+    b12 = bops.conv_bops(64, 64, 3, 100, 1, 2)
+    b22 = bops.conv_bops(64, 64, 3, 100, 2, 2)
+    b88 = bops.conv_bops(64, 64, 3, 100, 8, 8)
+    assert b11 < b12 < b22 < b88
