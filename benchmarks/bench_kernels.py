@@ -41,6 +41,25 @@ def run() -> list[str]:
     us_q = _time(jax.jit(lambda a: ref.quant_dequant_ref(a, 0.05, 0.0, 8)), xq)
     rows.append(f"kernels/quant_dequant_ref_jnp,{us_q:.0f},shape=512x1024")
 
+    # graph-path dispatch: a Quant(w) -> MatMul graph compiled through
+    # core/compile.py reaches the same kernels (fused-segment census proves
+    # the lowering; the timing is the whole jitted plan)
+    from repro.core import GraphBuilder
+    from repro.core.compile import compile_graph
+    b = GraphBuilder("qmm_graph")
+    xg = b.add_input("x", (m, k))
+    wname = b.add_initializer(
+        "w", np.random.RandomState(3).randn(k, n).astype(np.float32) * 0.05)
+    qw = b.quant(wname, 0.01, 0.0, 8, narrow=True)
+    (y,) = b.add_node("MatMul", [xg, qw], 1)
+    b.mark_output(y)
+    plan = compile_graph(b.build())
+    out_name = plan.graph.output_names[0]
+    xv = jnp.asarray(np.asarray(x))
+    us_g = _time(lambda a: plan({"x": a})[out_name], xv, n=2)
+    fused = ";".join(f"{kk}={v}" for kk, v in sorted(plan.fused_counts.items()))
+    rows.append(f"kernels/quant_matmul_graph_compiled,{us_g:.0f},{fused}")
+
     # analytic decode-weight-traffic table (TPU v5e, per layer matmul)
     for bits, div in (("bf16", 1), ("int8", 2), ("int4", 4)):
         bytes_w = 2 * k * n // div

@@ -4,6 +4,7 @@ Prints ``name,us_per_call,derived`` CSV rows:
   * bench_zoo     — Table III (+ Fig. 5 data): MACs/weights/bits/BOPs
   * bench_formats — Table I: lowering correctness + expressiveness gaps
   * bench_kernels — Pallas kernel oracles + TPU byte-traffic analytics
+  * bench_compile — compiled plan vs node-by-node interpreter wall time
   * roofline      — assignment §Roofline (reads the dry-run artifacts)
 """
 from __future__ import annotations
@@ -13,10 +14,12 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import bench_formats, bench_kernels, bench_zoo, roofline
+    from benchmarks import (bench_compile, bench_formats, bench_kernels,
+                            bench_zoo, roofline)
     print("name,us_per_call,derived")
     failures = 0
-    for mod in (bench_zoo, bench_formats, bench_kernels, roofline):
+    for mod in (bench_zoo, bench_formats, bench_kernels, bench_compile,
+                roofline):
         try:
             for row in mod.run():
                 print(row, flush=True)

@@ -16,3 +16,7 @@ from .ste import bipolar_quant_ste, fake_quant, quant_ste  # noqa: F401
 from .graph import GraphBuilder, Node, QonnxGraph, TensorInfo  # noqa: F401
 from .executor import execute, register_op  # noqa: F401
 from . import bops, export, formats, serialize, streamline, transforms  # noqa: F401
+from . import compile as compile_  # noqa: F401  ("compile" shadows a builtin)
+from . import passes  # noqa: F401
+from .compile import CompiledPlan, compile_graph, execute_compiled  # noqa: F401
+from .passes import PassManager, register_pass, run_pipeline  # noqa: F401

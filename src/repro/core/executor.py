@@ -13,6 +13,11 @@ Channels-last execution: shape-dependent ops (Conv, pools, BatchNormalization)
 honor an optional ``data_layout`` attribute ("NCHW" default, "NHWC" after the
 channels-last transform) — the paper's "wrapper nodes ... so that channels
 last networks can be executed" (§V).
+
+This engine is the *interpreted tier*; the hot path is ``compile.py``,
+which partitions a graph into fused segments over the Pallas kernels and
+jits the whole plan, using this registry only as its fallback (and as the
+parity oracle — see tests/test_compile.py).
 """
 from __future__ import annotations
 
@@ -44,9 +49,12 @@ def lookup_op(node: Node) -> OpFn:
     # with an empty domain by frontends)
     if (node.op_type, "") in _OP_REGISTRY:
         return _OP_REGISTRY[(node.op_type, "")]
-    for (op, _dom), fn in _OP_REGISTRY.items():
-        if op == node.op_type:
-            return fn
+    # last resort: any-domain match, lowest domain string wins so the choice
+    # is deterministic rather than dict-insertion-order dependent
+    candidates = sorted(dom for (op, dom) in _OP_REGISTRY
+                        if op == node.op_type)
+    if candidates:
+        return _OP_REGISTRY[(node.op_type, candidates[0])]
     raise NotImplementedError(f"no executor for op {node.op_type!r} (domain {node.domain!r})")
 
 
@@ -346,7 +354,17 @@ def _pool(node, x, reducer, init, is_avg=False):
         padding = [(0, 0)] + pad_pairs + [(0, 0)]
     y = jax.lax.reduce_window(x, init, reducer, window, wstrides, padding)
     if is_avg:
-        y = y / float(np.prod(k))
+        if any(p != 0 for pair in pad_pairs for p in pair) and \
+                not bool(node.attrs.get("count_include_pad", 0)):
+            # ONNX default count_include_pad=0: padded positions do not
+            # count toward the divisor, so edge windows divide by the
+            # number of *real* elements they cover
+            ones = jnp.ones(x.shape, jnp.float32)
+            counts = jax.lax.reduce_window(ones, 0.0, jax.lax.add, window,
+                                           wstrides, padding)
+            y = y / counts.astype(y.dtype)
+        else:
+            y = y / float(np.prod(k))
     return y
 
 

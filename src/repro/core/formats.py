@@ -143,6 +143,30 @@ def qonnx_to_qcdq(graph: QonnxGraph) -> QonnxGraph:
 
 # --------------------------------------------------------- QCDQ -> QONNX
 
+def bitwidth_from_bounds(lo: float, hi: float, signed: bool):
+    """Invert Eqs. 2-3: integer clip bounds -> (bit_width, narrow), or None
+    when the bounds match no integer bit width.  Shared by the QCDQ
+    ingestion fuse and the compiled-executor segment matcher."""
+    if signed:
+        nb = np.log2(hi + 1) + 1
+        narrow = bool(lo == -(2 ** (nb - 1)) + 1)
+    else:
+        narrow = False
+        nb = np.log2(hi + 1)
+        if hi == 2 ** np.ceil(np.log2(hi + 2)) - 2:          # 2^n - 2 pattern
+            nb2 = np.log2(hi + 2)
+            if float(nb2).is_integer() and not float(nb).is_integer():
+                nb, narrow = nb2, True
+    if not float(nb).is_integer():
+        return None
+    nb = int(nb)
+    lo_chk = float(quant_ops.min_int(signed, narrow, nb))
+    hi_chk = float(quant_ops.max_int(signed, narrow, nb))
+    if lo_chk != lo or hi_chk != hi:
+        return None
+    return nb, narrow
+
+
 def qcdq_to_qonnx(graph: QonnxGraph) -> QonnxGraph:
     """Fuse QuantizeLinear [-> Clip] -> DequantizeLinear into one Quant.
 
@@ -173,28 +197,20 @@ def qcdq_to_qonnx(graph: QonnxGraph) -> QonnxGraph:
             if node.inputs[1] != dq.inputs[1]:
                 continue
             zp_name = node.inputs[2] if len(node.inputs) > 2 else None
-            signed = True
+            # a missing zero point means a uint8 carrier, matching the
+            # executor's QuantizeLinear semantics
+            signed = False
             if zp_name is not None and zp_name in g.initializers:
                 signed = np.issubdtype(g.initializers[zp_name].dtype, np.signedinteger)
-            lo, hi = (-128, 127) if signed else (0, 255)
+            lo, hi = (-128.0, 127.0) if signed else (0.0, 255.0)
             if len(seq) == 3:  # with Clip
                 clip = seq[1]
                 lo = float(np.asarray(g.initializers[clip.inputs[1]]))
                 hi = float(np.asarray(g.initializers[clip.inputs[2]]))
-            # recover bit width + narrow from boundaries (Eqs. 2-3 inverted)
-            if signed:
-                nb = np.log2(hi + 1) + 1
-                narrow = bool(lo == -(2 ** (nb - 1)) + 1)
-            else:
-                narrow = False
-                nb = np.log2(hi + 1)
-                if hi == 2 ** np.ceil(np.log2(hi + 2)) - 2:  # 2^n - 2 pattern
-                    nb2 = np.log2(hi + 2)
-                    if float(nb2).is_integer() and not float(nb).is_integer():
-                        nb, narrow = nb2, True
-            if not float(nb).is_integer():
+            recovered = bitwidth_from_bounds(lo, hi, signed)
+            if recovered is None:
                 continue
-            nb = int(nb)
+            nb, narrow = recovered
             x = node.inputs[0]
             y = dq.outputs[0]
             s_name = node.inputs[1]

@@ -61,8 +61,13 @@ def infer_shapes(graph: QonnxGraph) -> QonnxGraph:
 
 # ---------------------------------------------------------------- folding
 
-def fold_constants(graph: QonnxGraph) -> QonnxGraph:
-    """Evaluate nodes whose inputs are all initializers; store results."""
+def fold_constants(graph: QonnxGraph, keep_quant: bool = False) -> QonnxGraph:
+    """Evaluate nodes whose inputs are all initializers; store results.
+
+    ``keep_quant=True`` leaves Quant/BipolarQuant/Trunc nodes in the graph
+    even when foldable — the compiled executor (compile.py) needs the
+    weight-quantization structure intact to lower ``Quant(w) -> MatMul``
+    segments onto the integer-weight kernels."""
     g = graph.copy()
     changed = True
     while changed:
@@ -81,7 +86,10 @@ def fold_constants(graph: QonnxGraph) -> QonnxGraph:
             if not static:
                 continue
             if node.op_type in ("Quant", "BipolarQuant", "Trunc") and \
-                    node.inputs[0] not in g.initializers:
+                    (keep_quant or node.inputs[0] not in g.initializers):
+                continue
+            if keep_quant and node.op_type in ("QuantizeLinear",
+                                               "DequantizeLinear", "Clip"):
                 continue
             fn = lookup_op(node)
             args = [jnp.asarray(g.initializers[i]) if i else None for i in node.inputs]
@@ -159,13 +167,13 @@ def eliminate_dead_code(graph: QonnxGraph) -> QonnxGraph:
 
 def cleanup(graph: QonnxGraph) -> QonnxGraph:
     """The standard pipeline run "before any more involved transformations"
-    (paper §V): shape inference + constant folding + tidying."""
-    g = fold_constants(graph)
-    g = remove_identity(g)
-    g = collapse_reshape_chains(g)
-    g = infer_shapes(g)
-    g.validate()
-    return g
+    (paper §V): shape inference + constant folding + tidying.
+
+    Declaratively defined as the "cleanup" pass list in ``passes.PIPELINES``
+    (this function is the stable entry point; the PassManager validates the
+    graph after every constituent pass)."""
+    from . import passes
+    return passes.run_pipeline(graph, "cleanup")
 
 
 # ---------------------------------------------------------------- layout

@@ -1,0 +1,13 @@
+"""repro.dist — sharding rules, collectives, and fault tolerance.
+
+``sharding``     name-based PartitionSpec rules for params / batches / caches
+``collectives``  quantized all-reduce + error-feedback compression
+``fault``        watchdog, bounded restarts, elastic mesh derivation
+"""
+from . import collectives, fault, sharding  # noqa: F401
+from .sharding import (  # noqa: F401
+    batch_pspecs,
+    cache_pspecs,
+    param_pspecs,
+    to_shardings,
+)

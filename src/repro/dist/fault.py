@@ -1,0 +1,105 @@
+"""Fault tolerance primitives: straggler watchdog, bounded restarts,
+elastic mesh derivation.
+
+All host-side logic (no jax tracing), so the same code runs on a laptop and
+under a cluster process launcher after ``jax.distributed.initialize()``.
+"""
+from __future__ import annotations
+
+import logging
+import statistics
+import time
+from collections import deque
+from dataclasses import dataclass, field
+
+import jax
+
+log = logging.getLogger("repro.dist.fault")
+
+
+class Watchdog:
+    """Flags steps whose wall time exceeds ``threshold`` x the rolling median.
+
+    ``floor_s`` guards the cold regime: until steps take at least that long,
+    nothing is flagged (sub-millisecond smoke steps jitter by integer
+    factors without being stragglers).
+    """
+
+    def __init__(self, threshold: float = 1.5, window: int = 16,
+                 floor_s: float = 0.05):
+        self.threshold = threshold
+        self.window = window
+        self.floor_s = floor_s
+        self.durations: deque[float] = deque(maxlen=window)
+        self.stragglers: list[int] = []
+        self._t0: float | None = None
+
+    def step_start(self) -> None:
+        self._t0 = time.monotonic()
+
+    def step_end(self, step: int) -> bool:
+        """Record the step duration; True if the step was a straggler."""
+        if self._t0 is None:
+            return False
+        dt = time.monotonic() - self._t0
+        self._t0 = None
+        flagged = False
+        if self.durations:
+            baseline = max(statistics.median(self.durations), self.floor_s)
+            if dt > self.threshold * baseline:
+                flagged = True
+                self.stragglers.append(step)
+                log.warning("step %d straggled: %.3fs vs %.3fs median",
+                            step, dt, baseline)
+        self.durations.append(dt)
+        return flagged
+
+
+@dataclass
+class RestartPolicy:
+    max_restarts: int = 3
+    backoff_s: float = 1.0
+    backoff_mult: float = 2.0
+    restartable: tuple = (RuntimeError, OSError)
+    history: list[str] = field(default_factory=list)
+
+
+def run_with_restarts(make_state, run, policy: RestartPolicy):
+    """Run ``run(make_state())`` with up to ``policy.max_restarts`` retries.
+
+    State is rebuilt from scratch (checkpoint resume lives inside
+    ``make_state``) on every attempt — the crash-only design: no attempt to
+    patch up a half-dead attempt's state.
+    """
+    backoff = policy.backoff_s
+    for attempt in range(policy.max_restarts + 1):
+        try:
+            return run(make_state())
+        except policy.restartable as e:          # noqa: PERF203
+            policy.history.append(f"attempt {attempt}: {e!r}")
+            if attempt == policy.max_restarts:
+                log.error("restart budget exhausted after %d attempts",
+                          attempt + 1)
+                raise
+            log.warning("attempt %d failed (%r); restarting in %.1fs",
+                        attempt, e, backoff)
+            if backoff > 0:
+                time.sleep(backoff)
+            backoff *= policy.backoff_mult
+
+
+def elastic_mesh(prefer_model: int = 16):
+    """Build a ("data", "model") mesh from the devices actually present.
+
+    The model axis is the largest divisor of the device count that is
+    <= ``prefer_model``; everything else becomes data parallelism.  On a
+    1-device host this degenerates to a (1, 1) mesh, so the same launcher
+    runs everywhere.
+    """
+    n = jax.device_count()
+    model = 1
+    for cand in range(min(prefer_model, n), 0, -1):
+        if n % cand == 0:
+            model = cand
+            break
+    return jax.make_mesh((n // model, model), ("data", "model"))

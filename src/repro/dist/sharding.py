@@ -1,0 +1,171 @@
+"""Name-based sharding rules: param / batch / cache PartitionSpecs.
+
+The rules are *total*: every leaf of every architecture's pytree gets a
+full-rank PartitionSpec (``None`` entries for replicated dims).  Placement is
+decided from the leaf's *name* (the last key on its tree path) plus its rank:
+
+  * ``embed``                      — vocab-parallel (dim 0 over "model")
+  * ``lm_head``                    — col-parallel on the vocab dim
+  * ``we_*`` MoE banks (L,E,d,f)   — expert-parallel (dim -3 over "model")
+  * row-parallel outputs (``wo``, ``w_down``, ``w_out``, ``w_o``, ``w_cv``,
+    ``ws_down``, ``w_lora_b``)     — dim -2 over "model"
+  * every other ``w*`` matrix      — col-parallel (last dim over "model")
+  * vectors / norms / scalars      — replicated
+
+A dim is only sharded when its size divides the mesh axis size (whisper's
+51865 vocab stays replicated on a 16-way model axis).  ``fsdp=True``
+additionally shards the largest still-replicated dim of every large leaf
+over the data axes (ZeRO-3 style parameter sharding).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# leaves whose second-to-last dim is the contracted (input-feature) dim:
+# shard the *input* features so the matmul is row-parallel and the output
+# needs one all-reduce (Megatron convention)
+_ROW_PARALLEL = {"wo", "w_down", "w_out", "w_o", "w_cv", "ws_down",
+                 "w_lora_b", "img_proj"}
+# minimum leaf size for FSDP to bother sharding (small norms stay replicated)
+_FSDP_MIN_SIZE = 1 << 16
+
+
+def _leaf_name(path) -> str:
+    """Last dict key / attr name on a tree path ('' for positional keys)."""
+    for entry in reversed(path):
+        if hasattr(entry, "key"):
+            return str(entry.key)
+        if hasattr(entry, "name"):
+            return str(entry.name)
+    return ""
+
+
+def _axis_size(mesh, axis: str) -> int:
+    return int(dict(mesh.shape)[axis])
+
+
+def _data_axes(mesh) -> tuple:
+    """Every non-"model" mesh axis, used jointly for batch-dim sharding."""
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def _is_p(x) -> bool:
+    return isinstance(x, P)
+
+
+def _divides(dim: int, size: int) -> bool:
+    return size > 0 and dim % size == 0
+
+
+def _model_dim_for(name: str, shape: tuple) -> Optional[int]:
+    """Which dim (if any) the model axis shards, by rule.  None = replicated."""
+    nd = len(shape)
+    if nd == 0:
+        return None
+    if name == "embed":
+        return 0
+    if name == "lm_head":
+        return nd - 1
+    if name.startswith("we_"):                 # (L, E, d, f) expert banks
+        return nd - 3 if nd >= 3 else None
+    if nd < 2:
+        return None
+    if name in _ROW_PARALLEL or name.split(".")[-1] in _ROW_PARALLEL:
+        return nd - 2
+    if name.startswith(("w", "b")) and nd >= 2:
+        return nd - 1                          # col-parallel default
+    return None
+
+
+def param_pspecs(params, mesh, *, fsdp: bool = True, overrides: dict = None,
+                 fsdp_exclude: tuple = ()):
+    """Full-rank PartitionSpec tree for a param (or train-state) pytree.
+
+    ``overrides``    — {leaf_name: PartitionSpec} taking precedence
+    ``fsdp``         — additionally shard the largest replicated dim of big
+                       leaves over the data axes
+    ``fsdp_exclude`` — leaf names exempted from FSDP sharding
+    """
+    overrides = overrides or {}
+    model_size = _axis_size(mesh, "model") if "model" in mesh.axis_names else 1
+    data_axes = _data_axes(mesh)
+    data_size = 1
+    for a in data_axes:
+        data_size *= _axis_size(mesh, a)
+
+    def rule(path, leaf):
+        name = _leaf_name(path)
+        shape = tuple(getattr(leaf, "shape", ()))
+        if name in overrides:
+            return overrides[name]
+        spec = [None] * len(shape)
+        mdim = _model_dim_for(name, shape)
+        if mdim is not None and _divides(shape[mdim], model_size):
+            spec[mdim] = "model"
+        if fsdp and name not in fsdp_exclude and data_axes and \
+                len(shape) >= 2 and _size_of(shape) >= _FSDP_MIN_SIZE:
+            # shard the largest still-replicated dim over the data axes
+            cands = [(shape[d], d) for d in range(len(shape))
+                     if spec[d] is None and _divides(shape[d], data_size)]
+            if cands:
+                _, d = max(cands)
+                spec[d] = data_axes if len(data_axes) > 1 else data_axes[0]
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(rule, params)
+
+
+def _size_of(shape) -> int:
+    n = 1
+    for d in shape:
+        n *= int(d)
+    return n
+
+
+def batch_pspecs(batch, mesh):
+    """Shard the leading (batch) dim of every batch leaf over the data axes."""
+    data_axes = _data_axes(mesh)
+    data_size = 1
+    for a in data_axes:
+        data_size *= _axis_size(mesh, a)
+
+    def rule(leaf):
+        shape = tuple(getattr(leaf, "shape", ()))
+        spec = [None] * len(shape)
+        if shape and _divides(shape[0], data_size):
+            spec[0] = data_axes if len(data_axes) > 1 else data_axes[0]
+        return P(*spec)
+
+    return jax.tree.map(rule, batch)
+
+
+def cache_pspecs(cache, mesh, *, tp_last_dim: bool = False):
+    """KV-cache sharding: stacked caches are (L, B, C, KV, hd) — the batch
+    dim 1 shards over the data axes; ``tp_last_dim`` additionally shards the
+    head dim over "model" (activation-sharded decode)."""
+    data_axes = _data_axes(mesh)
+    data_size = 1
+    for a in data_axes:
+        data_size *= _axis_size(mesh, a)
+    model_size = _axis_size(mesh, "model") if "model" in mesh.axis_names else 1
+
+    def rule(leaf):
+        shape = tuple(getattr(leaf, "shape", ()))
+        spec = [None] * len(shape)
+        if len(shape) >= 2 and _divides(shape[1], data_size):
+            spec[1] = data_axes if len(data_axes) > 1 else data_axes[0]
+        if tp_last_dim and len(shape) >= 3 and \
+                _divides(shape[-1], model_size):
+            spec[-1] = "model"
+        return P(*spec)
+
+    return jax.tree.map(rule, cache)
+
+
+def to_shardings(pspecs, mesh):
+    """PartitionSpec tree -> NamedSharding tree over ``mesh``."""
+    return jax.tree.map(lambda ps: NamedSharding(mesh, ps), pspecs,
+                        is_leaf=_is_p)

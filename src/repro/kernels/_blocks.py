@@ -1,0 +1,21 @@
+"""Shared block-alignment helpers for the Pallas kernel wrappers.
+
+Partial grid blocks read out-of-bounds garbage (NaN under interpret), so
+every wrapper pads its operands up to block multiples and slices the
+result back down.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def pad2(a, rows: int, cols: int, value=0):
+    """Pad a 2D array up to (rows, cols) with ``value`` (no-op if aligned)."""
+    pr, pc = rows - a.shape[0], cols - a.shape[1]
+    if pr == 0 and pc == 0:
+        return a
+    return jnp.pad(a, ((0, pr), (0, pc)), constant_values=value)

@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ._blocks import pad2, round_up
+
 DEFAULT_BLOCK = (256, 256)
 
 
@@ -94,7 +96,15 @@ def quant_dequant(x, scale, zero_point, *, bit_width=8, signed=True,
 
     bm = min(block[0], m)
     bn = min(block[1], n)
-    grid = (pl.cdiv(m, bm), pl.cdiv(n, bn))
+    # pad to block multiples; scale pads with 1.0 so x/s stays finite in
+    # the (sliced-away) padded region
+    mp, np_ = round_up(m, bm), round_up(n, bn)
+    x2 = pad2(x2, mp, np_)
+    if s2.shape[1] > 1:
+        s2 = pad2(s2, 1, np_, value=1.0)
+    if z2.shape[1] > 1:
+        z2 = pad2(z2, 1, np_)
+    grid = (mp // bm, np_ // bn)
 
     def s_index(i, j):
         return (0, j if s2.shape[1] > 1 else 0)
@@ -109,7 +119,7 @@ def quant_dequant(x, scale, zero_point, *, bit_width=8, signed=True,
                          lambda i, j: (0, j if z2.shape[1] > 1 else 0)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
         interpret=interpret,
     )(x2, s2, z2)
-    return out.reshape(orig_shape)
+    return out[:m, :n].reshape(orig_shape)

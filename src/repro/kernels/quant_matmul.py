@@ -6,11 +6,14 @@ Two variants:
   * ``quant_matmul_int4``  — int4 weights packed two-per-byte along K
                              (K//2, N), unpacked *inside* the kernel.
 
-TPU adaptation of the paper's arbitrary-precision weights (DESIGN.md §3):
-sub-byte weights live packed in HBM — the int4 variant halves weight HBM
-traffic, which is exactly what matters for the memory-bound decode shapes —
-and are expanded to the MXU-native operand width in VMEM, inside the kernel,
-so the unpack cost is overlapped with the matmul pipeline.
+TPU adaptation of the paper's arbitrary-precision weights: sub-byte weights
+live packed in HBM — the int4 variant halves weight HBM traffic, which is
+exactly what matters for the memory-bound decode shapes — and are expanded
+to the MXU-native operand width in VMEM, inside the kernel, so the unpack
+cost is overlapped with the matmul pipeline.  These kernels are reached two
+ways: directly through ``kernels.ops`` (serving checkpoints), and from the
+graph path via ``core/compile.py``, which lowers ``Quant(w) -> MatMul``
+segments of a QonnxGraph onto them with offline weight packing.
 
 Blocking: grid (M/bm, N/bn, K/bk), K innermost so each (i, j) output tile
 stays resident in VMEM across the K loop (revision dims semantics); fp32
@@ -25,6 +28,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from ._blocks import pad2 as _pad2, round_up as _round_up
 
 DEFAULT_BLOCKS = (256, 256, 512)  # (bm, bn, bk)
 
@@ -92,8 +97,13 @@ def quant_matmul(x, w_int, w_scale, bias=None, *, blocks=DEFAULT_BLOCKS,
     k2, n = w_int.shape
     assert kdim == k2, (x.shape, w_int.shape)
     bm, bn, bk = (min(blocks[0], m), min(blocks[1], n), min(blocks[2], kdim))
-    grid = (pl.cdiv(m, bm), pl.cdiv(n, bn), pl.cdiv(kdim, bk))
-    s2 = _norm_scale(w_scale, n)
+    # pad every dim to a block multiple: partial blocks read out-of-bounds
+    # garbage (NaN under interpret); zero-padding K contributes 0 to the dot
+    mp, np_, kp = _round_up(m, bm), _round_up(n, bn), _round_up(kdim, bk)
+    xq = _pad2(x, mp, kp)
+    wq = _pad2(w_int, kp, np_)
+    s2 = _pad2(_norm_scale(w_scale, n), 1, np_)
+    grid = (mp // bm, np_ // bn, kp // bk)
 
     out = pl.pallas_call(
         functools.partial(_qmm_kernel, nk=grid[2]),
@@ -104,10 +114,11 @@ def quant_matmul(x, w_int, w_scale, bias=None, *, blocks=DEFAULT_BLOCKS,
             pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
-    )(x, w_int, s2)
+    )(xq, wq, s2)
+    out = out[:m, :n]
     if bias is not None:
         out = out + bias.astype(out.dtype)
     return out
@@ -121,12 +132,16 @@ def quant_matmul_int4(x, w_packed, w_scale, bias=None, *, blocks=DEFAULT_BLOCKS,
     x: (M, K);  w_packed: (K//2, N) int8 (two nibbles per byte along K).
     """
     m, kdim = x.shape
-    kp, n = w_packed.shape
-    assert kdim == 2 * kp, (x.shape, w_packed.shape)
+    kp2, n = w_packed.shape
+    assert kdim == 2 * kp2, (x.shape, w_packed.shape)
     bm, bn, bk = (min(blocks[0], m), min(blocks[1], n), min(blocks[2], kdim))
-    assert bk % 2 == 0
-    grid = (pl.cdiv(m, bm), pl.cdiv(n, bn), pl.cdiv(kdim, bk))
-    s2 = _norm_scale(w_scale, n)
+    if bk % 2:
+        bk += 1
+    mp, np_, kp = _round_up(m, bm), _round_up(n, bn), _round_up(kdim, bk)
+    xq = _pad2(x, mp, kp)
+    wq = _pad2(w_packed, kp // 2, np_)       # 0x00 byte = two zero nibbles
+    s2 = _pad2(_norm_scale(w_scale, n), 1, np_)
+    grid = (mp // bm, np_ // bn, kp // bk)
 
     out = pl.pallas_call(
         functools.partial(_qmm4_kernel, nk=grid[2]),
@@ -137,10 +152,11 @@ def quant_matmul_int4(x, w_packed, w_scale, bias=None, *, blocks=DEFAULT_BLOCKS,
             pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
-    )(x, w_packed, s2)
+    )(xq, wq, s2)
+    out = out[:m, :n]
     if bias is not None:
         out = out + bias.astype(out.dtype)
     return out

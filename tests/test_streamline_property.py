@@ -1,6 +1,9 @@
 """Property tests: streamlining preserves semantics on random QCDQ MLPs."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis", reason="optional dev dep (requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import GraphBuilder, execute
 from repro.core.formats import qonnx_to_qcdq
