@@ -32,9 +32,9 @@ def _time(fn, n=5):
     return (time.perf_counter() - t0) / n * 1e6
 
 
-def run() -> list[str]:
+def run(cases=None) -> list[str]:
     rows = []
-    for name, shape in CASES:
+    for name, shape in (CASES if cases is None else cases):
         g = zoo.ZOO[name]()
         gc = transforms.cleanup(g)
         t0 = time.perf_counter()
@@ -62,3 +62,28 @@ def run() -> list[str]:
         rows.append(f"compile/{name}_compiled_b8,{us_b:.0f},"
                     f"us_per_sample={us_b / 8:.0f}")
     return rows
+
+
+QUICK_CASES = [("TFC-w2a2", (1, 784)), ("TFC-w1a1", (1, 784))]
+
+
+def main(argv=None) -> int:
+    """CLI used by the CI smoke job: exit 0 iff every row was produced.
+
+        python benchmarks/bench_compile.py [--quick]
+    """
+    import argparse
+
+    ap = argparse.ArgumentParser(description=main.__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="TFC-only cases (fast enough for CI smoke)")
+    args = ap.parse_args(argv)
+    cases = QUICK_CASES if args.quick else CASES
+    rows = run(cases)
+    for row in rows:
+        print(row)
+    return 0 if len(rows) == 3 * len(cases) else 1
+
+
+if __name__ == "__main__":        # PYTHONPATH=src python benchmarks/bench_compile.py
+    raise SystemExit(main())

@@ -1,0 +1,194 @@
+"""Inference-cost reporting from the analyzed graph (paper Eq. 5, Table III).
+
+Where ``core/bops.py`` holds the Eq. 5 *formulas*, this module computes the
+per-layer inputs to those formulas — weight/activation bit widths, MAC and
+weight counts, accumulator widths, memory traffic — from the **analysis
+subsystem** (datatype inference + range analysis) instead of ad-hoc
+producer pattern matching.  ``core.bops.graph_cost`` now delegates here, so
+the Table III reproduction in tests/test_zoo.py exercises this path.
+
+Per layer (MatMul / Gemm / Conv):
+
+  * macs, weights        — from inferred shapes;
+  * weight_bits          — weights x declared weight bit width (exact
+                           fractional widths honored);
+  * bops (Eq. 5)         — b_w/b_a from the datatype annotations;
+  * acc_bits             — minimal accumulator width from the worst-case
+                           dot-product bound (None when the input grid is
+                           unknown);
+  * mem_bytes            — weight bits/8 + input/output activation traffic
+                           at their annotated widths (FLOAT32 = 32 bit).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+from repro.core import bops as bops_mod
+from repro.core.graph import QonnxGraph
+
+from .infer import infer_datatype_map
+from .ranges import GraphAnalysis, analyze
+
+
+@dataclass
+class LayerReport:
+    name: str
+    op_type: str
+    macs: int
+    bops: float
+    weights: int
+    weight_bits: float          # total bits of this layer's weights
+    w_dtype: str = "FLOAT32"
+    a_dtype: str = "FLOAT32"
+    b_w: float = 32.0           # per-weight bit width used in Eq. 5
+    b_a: float = 32.0
+    acc_bits: Optional[int] = None
+    mem_bytes: float = 0.0
+
+
+@dataclass
+class CostReport:
+    """Duck-type-compatible with core.bops.ModelCost (layers + totals)."""
+    graph_name: str = ""
+    layers: list[LayerReport] = field(default_factory=list)
+
+    @property
+    def macs(self):
+        return sum(l.macs for l in self.layers)
+
+    @property
+    def bops(self):
+        return sum(l.bops for l in self.layers)
+
+    @property
+    def weights(self):
+        return sum(l.weights for l in self.layers)
+
+    @property
+    def total_weight_bits(self):
+        return sum(l.weight_bits for l in self.layers)
+
+    @property
+    def total_mem_bytes(self):
+        return sum(l.mem_bytes for l in self.layers)
+
+    def table(self) -> str:
+        head = (f"{'layer':24s} {'op':8s} {'MACs':>12s} {'wbits':>5s} "
+                f"{'abits':>5s} {'acc':>4s} {'BOPs':>12s} {'KiB':>9s}")
+        lines = [head, "-" * len(head)]
+        for l in self.layers:
+            lines.append(
+                f"{l.name[:24]:24s} {l.op_type:8s} {l.macs:12,d} "
+                f"{l.b_w:5.3g} {l.b_a:5.3g} "
+                f"{l.acc_bits if l.acc_bits is not None else '-':>4} "
+                f"{l.bops:12.4g} {l.mem_bytes / 1024:9.1f}")
+        lines.append("-" * len(head))
+        lines.append(
+            f"{self.graph_name[:24]:24s} {'TOTAL':8s} {self.macs:12,d} "
+            f"{'':5s} {'':5s} {'':>4s} {self.bops:12.4g} "
+            f"{self.total_mem_bytes / 1024:9.1f}")
+        lines.append(
+            f"weights={self.weights:,}  total_weight_bits="
+            f"{int(self.total_weight_bits):,}")
+        return "\n".join(lines)
+
+    def csv(self) -> str:
+        rows = ["layer,op,macs,weights,b_w,b_a,acc_bits,bops,mem_bytes"]
+        for l in self.layers:
+            rows.append(f"{l.name},{l.op_type},{l.macs},{l.weights},"
+                        f"{l.b_w:g},{l.b_a:g},"
+                        f"{l.acc_bits if l.acc_bits is not None else ''},"
+                        f"{l.bops:.6g},{l.mem_bytes:.1f}")
+        return "\n".join(rows)
+
+
+def _bits_for(dtypes, qbits, tensor, default: float) -> tuple[float, str]:
+    dt = dtypes.get(tensor)
+    if dt is None or not dt.is_integer():
+        return default, "FLOAT32" if dt is None else str(dt)
+    return qbits.get(tensor, float(dt.bits)), str(dt)
+
+
+def _numel(shape) -> int:
+    n = 1
+    for d in shape:
+        n *= int(d) if d is not None else 1
+    return n
+
+
+def infer_cost(graph: QonnxGraph, act_bits: float = 8.0,
+               default_weight_bits: float = 8.0,
+               ga: Optional[GraphAnalysis] = None) -> CostReport:
+    """Analysis-driven inference cost of every MatMul/Gemm/Conv layer.
+
+    Shapes must be known (run ``infer_shapes`` / the cleanup pipeline
+    first); unknown-shape layers are skipped, matching the historical
+    ``bops.graph_cost`` behaviour.  ``act_bits``/``default_weight_bits``
+    are the fallbacks for tensors whose datatype inference says FLOAT32.
+    """
+    ga = ga or analyze(graph)
+    dtypes, qbits = infer_datatype_map(graph, ga)
+    report = CostReport(graph.name)
+
+    for node in graph.nodes:
+        if node.op_type not in ("MatMul", "Gemm", "Conv"):
+            continue
+        w_name = node.inputs[1]
+        w_shape = graph.get_shape(w_name)
+        b_w, w_dt = _bits_for(dtypes, qbits, w_name, default_weight_bits)
+        b_a, a_dt = _bits_for(dtypes, qbits, node.inputs[0], act_bits)
+        if node.op_type in ("MatMul", "Gemm"):
+            if w_shape is None or len(w_shape) != 2:
+                continue
+            n_in, m_out = int(w_shape[0]), int(w_shape[1])
+            if node.op_type == "Gemm" and node.attrs.get("transB", 0):
+                m_out, n_in = n_in, m_out
+            base = bops_mod.fc_cost(node.name, n_in, m_out, b_w, b_a)
+        else:
+            y_shape = graph.get_shape(node.outputs[0])
+            if w_shape is None or y_shape is None:
+                continue
+            m_out, cin_g, k = int(w_shape[0]), int(w_shape[1]), int(w_shape[2])
+            layout = node.attrs.get("data_layout", "NCHW")
+            sp = y_shape[2:] if layout == "NCHW" else y_shape[1:-1]
+            out_hw = _numel(sp)
+            base = bops_mod.conv_cost(node.name, cin_g, m_out, k, out_hw,
+                                      b_w, b_a)
+
+        spec = ga.accumulator_spec(node)
+        in_shape = graph.get_shape(node.inputs[0])
+        out_shape = graph.get_shape(node.outputs[0])
+        mem = base.weight_bits / 8.0
+        if in_shape is not None:
+            mem += _numel(in_shape) * b_a / 8.0
+        if out_shape is not None:
+            mem += _numel(out_shape) * 32.0 / 8.0    # fp32 accumulator out
+        report.layers.append(LayerReport(
+            base.name, node.op_type, base.macs, base.bops, base.weights,
+            base.weight_bits, w_dt, a_dt, b_w, b_a,
+            None if spec is None else spec.bits, mem))
+    return report
+
+
+def compare_table3(report: CostReport, ref: tuple,
+                   skip_first_conv: bool = False,
+                   skip_first_conv_weights: bool = False) -> str:
+    """Format a comparison against a (macs, weights, weight_bits) Table III
+    row, applying the paper's counting conventions (first conv excluded
+    from MACs for conv nets; from weights for MobileNet)."""
+    first_conv = next((l for l in report.layers if l.op_type == "Conv"), None)
+    macs = report.macs - (first_conv.macs if skip_first_conv and first_conv
+                          else 0)
+    weights = report.weights - (
+        first_conv.weights if skip_first_conv_weights and first_conv else 0)
+    ref_macs, ref_w, ref_bits = ref
+    rows = []
+    for label, got, want in (("MACs", macs, ref_macs),
+                             ("weights", weights, ref_w),
+                             ("weight_bits", int(report.total_weight_bits),
+                              ref_bits)):
+        rel = abs(got - want) / max(want, 1)
+        mark = "OK " if rel < 2e-3 else "!! "
+        rows.append(f"  {mark}{label:12s} {got:>14,} (Table III: {want:,})")
+    return "\n".join(rows)

@@ -1,0 +1,87 @@
+"""Inference-cost report CLI over the model zoo (or a serialized graph).
+
+    python -m repro.analysis.report --model TFC-w2a2
+    python -m repro.analysis.report --all [--quick] [--csv]
+    python -m repro.analysis.report --graph path/to/graph.json
+
+Per model: the per-layer cost table (MACs, weight/activation bit widths,
+minimal accumulator widths, Eq. 5 BOPs, memory traffic) computed from the
+analysis subsystem, plus a Table III comparison when the model has a
+reference row.  Exit status 0 iff every requested report was produced.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.core import transforms
+from repro.models import zoo
+
+from .cost import compare_table3, infer_cost
+
+# models cheap enough for CI smoke runs (MobileNet-224 shape inference and
+# weight-quant evaluation dominate full runs)
+QUICK_MODELS = ("TFC-w1a1", "TFC-w2a2", "CNV-w2a2")
+
+
+def report_model(name: str, csv: bool = False) -> str:
+    g = zoo.ZOO[name]()
+    g = transforms.infer_shapes(g)
+    rep = infer_cost(g)
+    if csv:
+        return rep.csv()
+    out = [f"== {name} ==", rep.table()]
+    if name in zoo.TABLE3:
+        conv_net = "CNV" in name or "MobileNet" in name
+        out.append("Table III check:")
+        out.append(compare_table3(
+            rep, zoo.TABLE3[name], skip_first_conv=conv_net,
+            skip_first_conv_weights="MobileNet" in name))
+    return "\n".join(out)
+
+
+def report_graph_file(path: str, csv: bool = False) -> str:
+    from repro.core import serialize
+    g = serialize.load(path)
+    g = transforms.infer_shapes(g)
+    rep = infer_cost(g)
+    return rep.csv() if csv else f"== {g.name} ==\n{rep.table()}"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.report", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--model", action="append", default=[],
+                    help=f"zoo model name (one of {', '.join(zoo.ZOO)})")
+    ap.add_argument("--all", action="store_true", help="every zoo model")
+    ap.add_argument("--quick", action="store_true",
+                    help=f"restrict --all to {', '.join(QUICK_MODELS)}")
+    ap.add_argument("--graph", action="append", default=[],
+                    help="path to a serialized QonnxGraph JSON")
+    ap.add_argument("--csv", action="store_true", help="CSV per-layer rows")
+    args = ap.parse_args(argv)
+
+    names = list(args.model)
+    if args.all:
+        names += [n for n in zoo.ZOO if not args.quick or n in QUICK_MODELS]
+    elif args.quick and not names and not args.graph:
+        names += list(QUICK_MODELS)
+    if not names and not args.graph:
+        ap.error("nothing to report: pass --model/--all/--graph")
+
+    for name in names:
+        if name not in zoo.ZOO:
+            print(f"unknown model {name!r}; known: {', '.join(zoo.ZOO)}",
+                  file=sys.stderr)
+            return 2
+        print(report_model(name, csv=args.csv))
+        print()
+    for path in args.graph:
+        print(report_graph_file(path, csv=args.csv))
+        print()
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

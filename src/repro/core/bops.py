@@ -64,54 +64,17 @@ def fc_cost(name: str, n_in: int, m_out: int, b_w: float, b_a: float) -> LayerCo
     return conv_cost(name, n_in, m_out, 1, 1, b_w, b_a)
 
 
-def graph_cost(graph, act_bits: float = 8.0, default_weight_bits: float = 8.0) -> ModelCost:
-    """Estimate BOPs/MACs of a QonnxGraph by walking MatMul/Gemm/Conv nodes.
+def graph_cost(graph, act_bits: float = 8.0, default_weight_bits: float = 8.0):
+    """BOPs/MACs of a QonnxGraph's MatMul/Gemm/Conv layers (Table III).
 
-    Weight bit width is taken from a Quant/BipolarQuant producer of the
-    weight operand when present (the QONNX way), else ``default_weight_bits``.
-    Activation bits from a Quant producer of the data operand, else
-    ``act_bits``.  Graph must be shape-inferred.
+    Delegates to the analysis subsystem: bit widths come from datatype
+    inference (Quant/BipolarQuant/Trunc annotations propagated through the
+    graph) rather than syntactic producer matching, with ``act_bits`` /
+    ``default_weight_bits`` as the FLOAT32 fallbacks.  Returns an
+    ``analysis.cost.CostReport``, duck-type-compatible with ``ModelCost``
+    (``.layers`` plus the same total properties).  Graph must be
+    shape-inferred.
     """
-    cost = ModelCost()
-
-    def bits_of(tensor: str) -> float | None:
-        prod = graph.producer(tensor)
-        if prod is None:
-            return None
-        if prod.op_type == "BipolarQuant":
-            return 1.0
-        if prod.op_type == "Quant":
-            bw_name = prod.inputs[3]
-            if bw_name in graph.initializers:
-                import numpy as np
-                return float(np.asarray(graph.initializers[bw_name]).reshape(-1)[0])
-        return None
-
-    for node in graph.nodes:
-        if node.op_type in ("MatMul", "Gemm"):
-            w_name = node.inputs[1]
-            w_shape = graph.get_shape(w_name)
-            if w_shape is None or len(w_shape) != 2:
-                continue
-            n_in, m_out = int(w_shape[0]), int(w_shape[1])
-            if node.op_type == "Gemm" and node.attrs.get("transB", 0):
-                m_out, n_in = n_in, m_out
-            b_w = bits_of(w_name) or default_weight_bits
-            b_a = bits_of(node.inputs[0]) or act_bits
-            cost.layers.append(fc_cost(node.name, n_in, m_out, b_w, b_a))
-        elif node.op_type == "Conv":
-            w_name = node.inputs[1]
-            w_shape = graph.get_shape(w_name)
-            y_shape = graph.get_shape(node.outputs[0])
-            if w_shape is None or y_shape is None:
-                continue
-            m_out, cin_g, k = int(w_shape[0]), int(w_shape[1]), int(w_shape[2])
-            layout = node.attrs.get("data_layout", "NCHW")
-            sp = y_shape[2:] if layout == "NCHW" else y_shape[1:-1]
-            out_hw = 1
-            for d in sp:
-                out_hw *= int(d)
-            b_w = bits_of(w_name) or default_weight_bits
-            b_a = bits_of(node.inputs[0]) or act_bits
-            cost.layers.append(conv_cost(node.name, cin_g, m_out, k, out_hw, b_w, b_a))
-    return cost
+    from repro.analysis.cost import infer_cost
+    return infer_cost(graph, act_bits=act_bits,
+                      default_weight_bits=default_weight_bits)

@@ -23,8 +23,23 @@ performance tier above it (the FINN-R / Jain-et-al. compiler approach):
      as jit arguments (not baked literals) so the plan retraces only on new
      input shapes.
 
-The interpreted engine remains the bit-exactness oracle: parity is enforced
-by tests/test_compile.py across the model zoo in all three formats.
+Kernel selection is **analysis-driven** (repro.analysis): the integer
+range analysis proves what the *actual* weight values and activation
+ranges are, so
+
+  * a weight tensor whose values fit int4 takes the packed int4 path even
+    when its declared bit width is larger;
+  * weights whose declared width exceeds 8 bits still lower when their
+    values fit the int8 carrier;
+  * the accumulator dtype per fused matmul is chosen from the worst-case
+    dot-product bound — int32 exact integer accumulation when the
+    activations are provably integer-valued and the bound fits 31 bits,
+    fp32 otherwise.
+
+Pass ``use_analysis=False`` to fall back to the older syntactic
+(declared-bit-width) matching.  The interpreted engine remains the
+bit-exactness oracle: parity is enforced by tests/test_compile.py across
+the model zoo in all three formats.
 """
 from __future__ import annotations
 
@@ -62,6 +77,7 @@ class Segment:
     nodes     — graph nodes this segment covers (for stats / debugging)
     inputs    — env tensor names read;  outputs — env names written
     run       — traceable fn(consts: dict, env: dict) -> None (writes env)
+    meta      — analysis annotations (acc dtype / minimal acc bits, ...)
     """
     kind: str
     nodes: list[Node]
@@ -69,10 +85,15 @@ class Segment:
     outputs: list[str]
     run: Callable[[dict, dict], None]
     const_keys: tuple = ()         # consts-dict keys this segment reads
+    meta: dict = field(default_factory=dict)
 
     def describe(self) -> str:
         ops = "+".join(n.op_type for n in self.nodes)
-        return f"[{self.kind}] {ops} -> {', '.join(self.outputs)}"
+        extra = ""
+        if self.meta:
+            extra = " {" + ", ".join(f"{k}={v}"
+                                     for k, v in sorted(self.meta.items())) + "}"
+        return f"[{self.kind}] {ops} -> {', '.join(self.outputs)}{extra}"
 
 
 @dataclass
@@ -81,6 +102,7 @@ class CompiledPlan:
     graph: QonnxGraph
     segments: list[Segment]
     consts: dict
+    analysis: Optional[object] = None      # GraphAnalysis used for selection
     _jitted: Callable = field(default=None, repr=False)
 
     def __post_init__(self):
@@ -167,9 +189,12 @@ class _QMMMatch:
     scale: np.ndarray            # () or (N,) effective dequant scale
     bias: Optional[np.ndarray]   # (N,) or None
     int4_ok: bool
+    acc_dtype: object = jnp.float32   # analysis-selected accumulator
+    acc_bits: Optional[int] = None    # minimal accumulator width (if proven)
 
 
-def _match_quant_matmul(g: QonnxGraph, node: Node) -> Optional[_QMMMatch]:
+def _match_quant_matmul(g: QonnxGraph, node: Node,
+                        ga=None) -> Optional[_QMMMatch]:
     if node.op_type not in _MATMUL_OPS:
         return None
     if node.op_type == "Gemm":
@@ -210,18 +235,29 @@ def _match_quant_matmul(g: QonnxGraph, node: Node) -> Optional[_QMMMatch]:
             return None
         signed = bool(wq.attrs.get("signed", 1))
         narrow = bool(wq.attrs.get("narrow", 0))
-        rmode = wq.attrs.get("rounding_mode", "ROUND")
-        hi = float(quant_ops.max_int(signed, narrow, nb))
-        lo = float(quant_ops.min_int(signed, narrow, nb))
-        if lo < -128 or hi > 127:
-            return None                       # must fit the int8 carrier
+        rmode = str(wq.attrs.get("rounding_mode", "ROUND")).upper()
+        if rmode not in quant_ops.ROUNDING_MODES:
+            return None                       # unknown mode: keep interp
         scale = _col_scale(s, n)
         if scale is None:
             return None
-        w_int = np.asarray(quant_ops.quantize_int(
+        w_q = np.asarray(quant_ops.quantize_int(
             jnp.asarray(w, jnp.float32), s, z, bw, signed=signed,
-            narrow=narrow, rounding_mode=rmode)).astype(np.int8)
-        int4_ok = -8.0 <= lo and hi <= 7.0
+            narrow=narrow, rounding_mode=rmode))
+        if ga is not None:
+            # analysis-driven carrier selection: the *actual* value range
+            # decides — declared-wide weights that happen to fit a narrower
+            # carrier still lower (and may take the packed int4 path)
+            w_lo, w_hi = (float(w_q.min()), float(w_q.max())) if w_q.size \
+                else (0.0, 0.0)
+        else:
+            # syntactic fallback: declared bit-width bounds
+            w_hi = float(quant_ops.max_int(signed, narrow, nb))
+            w_lo = float(quant_ops.min_int(signed, narrow, nb))
+        if w_lo < -128 or w_hi > 127:
+            return None                       # must fit the int8 carrier
+        w_int = w_q.astype(np.int8)
+        int4_ok = -8.0 <= w_lo and w_hi <= 7.0
     int4_ok = int4_ok and kdim % 2 == 0
 
     nodes = [node]
@@ -316,6 +352,24 @@ def _finish_qmm_match(g: QonnxGraph, node: Node, nodes: list[Node], n: int,
                      np.asarray(scale, np.float32), bias, int4_ok)
 
 
+def _select_accumulator(ga, node: Node, m: _QMMMatch) -> None:
+    """Analysis-driven accumulator dtype for a fused matmul segment.
+
+    The kernel computes ``x @ w_int`` (activation *values* against integer
+    weight carriers).  When the range analysis proves the activations are
+    integer-valued and the worst-case dot-product bound fits a signed
+    31-bit accumulator, exact int32 accumulation is selected; otherwise
+    fp32 (what the interpreted oracle uses).  The minimal accumulator
+    width is recorded either way for stats / the cost reporter.
+    """
+    spec = ga.kernel_accumulator_spec(node, m.w_int)
+    if spec is None:
+        return
+    m.acc_bits = spec.bits
+    if ga.range(node.inputs[0]).integer and spec.bits <= 31:
+        m.acc_dtype = jnp.int32
+
+
 @dataclass
 class _QDQMatch:
     nodes: list[Node]
@@ -339,6 +393,9 @@ def _match_quant_node(g: QonnxGraph, node: Node) -> Optional[_QDQMatch]:
     nb = _scalar(bw)
     if nb is None:
         return None
+    rmode = str(node.attrs.get("rounding_mode", "ROUND")).upper()
+    if rmode not in quant_ops.ROUNDING_MODES:
+        return None       # mode the QDQ kernel can't realize: keep interp
     sh = g.get_shape(node.inputs[0])
     lastdim = sh[-1] if sh else None
     for p in (s, z):
@@ -349,7 +406,7 @@ def _match_quant_node(g: QonnxGraph, node: Node) -> Optional[_QDQMatch]:
         np.asarray(s, np.float32).reshape(-1),
         np.asarray(z, np.float32).reshape(-1), nb,
         bool(node.attrs.get("signed", 1)), bool(node.attrs.get("narrow", 0)),
-        node.attrs.get("rounding_mode", "ROUND"))
+        rmode)
 
 
 def _match_qcdq_chain(g: QonnxGraph, node: Node) -> Optional[_QDQMatch]:
@@ -410,11 +467,13 @@ def _make_qmm_segment(idx: int, m: _QMMMatch, consts: dict, *,
     if kind == "quant_matmul_int4":
         consts[w_key] = kernel_ops.pack_int4(jnp.asarray(m.w_int))
         kernel = functools.partial(kernel_ops.quant_matmul_int4,
-                                   interpret=interpret)
+                                   interpret=interpret,
+                                   acc_dtype=m.acc_dtype)
     else:
         consts[w_key] = jnp.asarray(m.w_int)
         kernel = functools.partial(kernel_ops.quant_matmul,
-                                   interpret=interpret)
+                                   interpret=interpret,
+                                   acc_dtype=m.acc_dtype)
     consts[s_key] = jnp.asarray(m.scale)
     if m.bias is not None:
         consts[b_key] = jnp.asarray(m.bias, jnp.float32)
@@ -430,7 +489,10 @@ def _make_qmm_segment(idx: int, m: _QMMMatch, consts: dict, *,
         env[out_name] = y.reshape(lead + (y.shape[-1],))
 
     keys = (w_key, s_key, b_key) if has_bias else (w_key, s_key)
-    return Segment(kind, m.nodes, [x_name], [out_name], run, keys)
+    meta = {"acc": jnp.dtype(m.acc_dtype).name}
+    if m.acc_bits is not None:
+        meta["acc_bits"] = m.acc_bits
+    return Segment(kind, m.nodes, [x_name], [out_name], run, keys, meta)
 
 
 def _make_qdq_segment(idx: int, m: _QDQMatch, consts: dict, *,
@@ -484,6 +546,7 @@ def _make_interp_segment(nodes: list[Node], static_consts: dict) -> Segment:
 
 def compile_graph(graph: QonnxGraph, *, run_cleanup: bool = True,
                   use_kernels: bool = True, use_int4: bool = True,
+                  use_analysis: bool = True,
                   interpret: bool = True) -> CompiledPlan:
     """Partition ``graph`` into fused segments and emit one jitted plan.
 
@@ -494,6 +557,9 @@ def compile_graph(graph: QonnxGraph, *, run_cleanup: bool = True,
                    the useful baseline for benchmarks)
     use_int4     — pack <=4-bit signed weights two-per-byte and dispatch
                    the in-kernel-unpack variant
+    use_analysis — consult repro.analysis range/datatype inference for
+                   kernel-variant and accumulator-dtype selection (actual
+                   value ranges) instead of declared-bit-width matching
     interpret    — forwarded to the Pallas kernels (True on CPU)
     """
     if run_cleanup:
@@ -501,6 +567,11 @@ def compile_graph(graph: QonnxGraph, *, run_cleanup: bool = True,
         graph = passes.run_pipeline(graph, "compile_prep")
     g = graph.copy()
     g.nodes = g.toposort()
+
+    ga = None
+    if use_kernels and use_analysis:
+        from repro.analysis import analyze
+        ga = analyze(g)
 
     consts: dict = {k: jnp.asarray(v) for k, v in g.initializers.items()}
 
@@ -515,7 +586,7 @@ def compile_graph(graph: QonnxGraph, *, run_cleanup: bool = True,
         for node in g.nodes:
             if id(node) in covered:
                 continue
-            m = _match_quant_matmul(g, node)
+            m = _match_quant_matmul(g, node, ga)
             kind = "qmm"
             if m is None:
                 m = _match_quant_node(g, node) or _match_qcdq_chain(g, node)
@@ -525,6 +596,8 @@ def compile_graph(graph: QonnxGraph, *, run_cleanup: bool = True,
             if any(id(n) in covered or id(n) in anchor_match
                    for n in m.nodes):
                 continue                       # overlaps an earlier match
+            if kind == "qmm" and ga is not None:
+                _select_accumulator(ga, node, m)
             anchor_match[id(node)] = (kind, m)
             covered.update(id(n) for n in m.nodes)
 
@@ -602,7 +675,7 @@ def compile_graph(graph: QonnxGraph, *, run_cleanup: bool = True,
     used.update(g.output_names)
     consts = {k: v for k, v in consts.items() if k in used}
 
-    return CompiledPlan(g, segments, consts)
+    return CompiledPlan(g, segments, consts, analysis=ga)
 
 
 def execute_compiled(graph: QonnxGraph, inputs: dict, **kw) -> dict:

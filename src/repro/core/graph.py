@@ -30,17 +30,25 @@ FINN_DOMAIN = "finn.custom_op.general"
 class TensorInfo:
     name: str
     shape: Optional[tuple] = None     # None = unknown; entries may be ints
+                                      # (a None entry = symbolic, e.g. batch)
     dtype: str = "float32"
+    qdtype: Optional[str] = None      # QONNX datatype annotation ("INT4",
+                                      # "UINT8", "BIPOLAR", ...) attached by
+                                      # analysis.infer_datatypes
 
     def to_json(self):
-        return {"name": self.name,
-                "shape": list(self.shape) if self.shape is not None else None,
-                "dtype": self.dtype}
+        d = {"name": self.name,
+             "shape": list(self.shape) if self.shape is not None else None,
+             "dtype": self.dtype}
+        if self.qdtype is not None:
+            d["qdtype"] = self.qdtype
+        return d
 
     @staticmethod
     def from_json(d):
         sh = tuple(d["shape"]) if d.get("shape") is not None else None
-        return TensorInfo(d["name"], sh, d.get("dtype", "float32"))
+        return TensorInfo(d["name"], sh, d.get("dtype", "float32"),
+                          d.get("qdtype"))
 
 
 @dataclass

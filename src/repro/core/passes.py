@@ -149,6 +149,8 @@ PIPELINES: dict[str, list[str]] = {
     "lower_to_quantized_op": ["cleanup", "qonnx_to_quantized_op"],
     "ingest_qcdq": ["qcdq_to_qonnx", "cleanup"],
     "channels_last": ["cleanup", "to_channels_last"],
+    # analysis tier: semantic validation, then shape + datatype annotation
+    "analyze": ["validate_quantization", "infer_shapes", "infer_datatypes"],
 }
 
 
@@ -223,3 +225,15 @@ def _ensure_registered() -> None:
                   description="fuse Q(C)DQ triples back into Quant (ingest)")
     register_pass("qonnx_to_quantized_op", formats.qonnx_to_quantized_op,
                   description="lower to MatMulInteger quantized-op style")
+
+    # analysis-tier passes (repro.analysis): datatype annotation and the
+    # quantization-consistency validator.  Imported lazily like the rest;
+    # analysis depends on core, never the other way at module level.
+    from repro.analysis import check_graph, infer_datatypes
+
+    register_pass("infer_datatypes", infer_datatypes,
+                  description="annotate tensors with QONNX datatypes "
+                              "(INT<N>/UINT<N>/BIPOLAR/FLOAT32)")
+    register_pass("validate_quantization", check_graph,
+                  description="reject quantization-inconsistent graphs "
+                              "with actionable errors")

@@ -25,9 +25,13 @@ import jax.numpy as jnp
 Array = jax.Array
 ArrayLike = Union[Array, float, int]
 
-# Rounding modes of the QONNX ``Quant`` operator ("ROUND" = round-half-to-even)
-# plus two extras (HALF_UP / HALF_DOWN) used by some QAT frontends.
-ROUNDING_MODES = ("ROUND", "ROUND_TO_ZERO", "CEIL", "FLOOR", "HALF_UP", "HALF_DOWN")
+# The full QONNX ``Quant`` rounding-mode set ("ROUND" = round-half-to-even),
+# matching the qonnx reference resolve_rounding_mode: UP/DOWN round away
+# from / toward zero, HALF_UP/HALF_DOWN break ties away from / toward zero
+# (sign-symmetric: HALF_UP(-1.5) = -2), plus the legacy ROUND_TO_ZERO alias
+# of DOWN.
+ROUNDING_MODES = ("ROUND", "CEIL", "FLOOR", "UP", "DOWN", "HALF_UP",
+                  "HALF_DOWN", "ROUND_TO_ZERO")
 
 
 def round_with_mode(x: Array, rounding_mode: str) -> Array:
@@ -35,16 +39,18 @@ def round_with_mode(x: Array, rounding_mode: str) -> Array:
     m = rounding_mode.upper()
     if m == "ROUND":  # round half to even (banker's rounding) — jnp default
         return jnp.round(x)
-    if m == "ROUND_TO_ZERO":
+    if m in ("DOWN", "ROUND_TO_ZERO"):   # toward zero
         return jnp.trunc(x)
+    if m == "UP":                        # away from zero
+        return jnp.sign(x) * jnp.ceil(jnp.abs(x))
     if m == "CEIL":
         return jnp.ceil(x)
     if m == "FLOOR":
         return jnp.floor(x)
-    if m == "HALF_UP":
-        return jnp.floor(x + 0.5)
-    if m == "HALF_DOWN":
-        return jnp.ceil(x - 0.5)
+    if m == "HALF_UP":                   # ties away from zero
+        return jnp.sign(x) * jnp.floor(jnp.abs(x) + 0.5)
+    if m == "HALF_DOWN":                 # ties toward zero
+        return jnp.sign(x) * jnp.ceil(jnp.abs(x) - 0.5)
     raise ValueError(f"unknown rounding_mode {rounding_mode!r}; expected one of {ROUNDING_MODES}")
 
 

@@ -30,12 +30,22 @@ _ELEMENTWISE = {"Add", "Sub", "Mul", "Div", "Relu", "Sigmoid", "Tanh", "Erf",
 
 # ---------------------------------------------------------------- shapes
 
+def _concrete_shape(shape):
+    """Symbolic dims (None / strings, e.g. a batch axis) trace as 1."""
+    return tuple(1 if d is None or isinstance(d, str) else int(d)
+                 for d in shape)
+
+
 def infer_shapes(graph: QonnxGraph) -> QonnxGraph:
     """Attach shapes/dtypes to every intermediate tensor.
 
     Implementation: run the node-level executor under ``jax.eval_shape`` so
     every op's shape logic is inherited from its jnp implementation — no
-    duplicated per-op shape rules.
+    duplicated per-op shape rules.  Graph inputs may carry a symbolic
+    leading (batch) dimension — None or a string — which is traced with a
+    placeholder of 1; the recorded value_info shapes are therefore
+    batch-1-concrete while the declared input keeps its symbolic entry
+    (execution itself is batch-polymorphic over the leading dim).
     """
     g = graph.copy()
 
@@ -43,13 +53,15 @@ def infer_shapes(graph: QonnxGraph) -> QonnxGraph:
         inputs = dict(zip(g.input_names, xs))
         return execute(g, inputs, return_all=True)
 
-    arg_structs = [jax.ShapeDtypeStruct(t.shape, np.dtype(t.dtype)) for t in g.inputs]
+    arg_structs = [jax.ShapeDtypeStruct(_concrete_shape(t.shape),
+                                        np.dtype(t.dtype)) for t in g.inputs]
     try:
         env = jax.eval_shape(run, *arg_structs)
     except jax.errors.TracerArrayConversionError:
         # data-dependent reshapes (Shape -> ... -> Reshape chains, Fig. 1)
         # cannot be traced abstractly; fall back to concrete zero inputs
-        env = run(*[jnp.zeros(t.shape, np.dtype(t.dtype)) for t in g.inputs])
+        env = run(*[jnp.zeros(_concrete_shape(t.shape), np.dtype(t.dtype))
+                    for t in g.inputs])
     for name, sds in env.items():
         g.value_info[name] = TensorInfo(name, tuple(sds.shape), str(sds.dtype))
     for t in g.outputs:

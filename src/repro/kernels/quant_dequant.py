@@ -38,19 +38,24 @@ def _static_bounds(signed: bool, narrow: bool, bit_width: float) -> tuple[float,
 
 
 def _round_kernel_body(x, rounding_mode):
+    # mirrors quant_ops.ROUNDING_MODES (the full QONNX set); the compile
+    # matcher only lowers modes listed there, so unknown modes stay on the
+    # interpreted path instead of failing at kernel trace time
     m = rounding_mode.upper()
     if m == "ROUND":
         return jnp.round(x)
-    if m == "ROUND_TO_ZERO":
+    if m in ("DOWN", "ROUND_TO_ZERO"):
         return jnp.trunc(x)
+    if m == "UP":
+        return jnp.sign(x) * jnp.ceil(jnp.abs(x))
     if m == "CEIL":
         return jnp.ceil(x)
     if m == "FLOOR":
         return jnp.floor(x)
-    if m == "HALF_UP":
-        return jnp.floor(x + 0.5)
-    if m == "HALF_DOWN":
-        return jnp.ceil(x - 0.5)
+    if m == "HALF_UP":                   # ties away from zero
+        return jnp.sign(x) * jnp.floor(jnp.abs(x) + 0.5)
+    if m == "HALF_DOWN":                 # ties toward zero
+        return jnp.sign(x) * jnp.ceil(jnp.abs(x) - 0.5)
     raise ValueError(rounding_mode)
 
 

@@ -34,20 +34,24 @@ from ._blocks import pad2 as _pad2, round_up as _round_up
 DEFAULT_BLOCKS = (256, 256, 512)  # (bm, bn, bk)
 
 
-def _qmm_kernel(x_ref, w_ref, s_ref, o_ref, acc_ref, *, nk):
+def _qmm_kernel(x_ref, w_ref, s_ref, o_ref, acc_ref, *, nk, acc_dtype):
     k = pl.program_id(2)
 
     @pl.when(k == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    x = x_ref[...].astype(jnp.float32)
-    w = w_ref[...].astype(jnp.float32)          # int8 -> f32 dequant-in-kernel
-    acc_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+    # acc_dtype is analysis-selected (core/compile.py): f32 by default;
+    # int32 when the activations are provably integer-valued and the
+    # worst-case dot-product bound fits 31 bits (exact integer accumulation)
+    x = x_ref[...].astype(acc_dtype)
+    w = w_ref[...].astype(acc_dtype)            # int8 -> acc dequant-in-kernel
+    acc_ref[...] += jnp.dot(x, w, preferred_element_type=acc_dtype)
 
     @pl.when(k == nk - 1)
     def _finish():
-        o_ref[...] = (acc_ref[...] * s_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+        o_ref[...] = (acc_ref[...].astype(jnp.float32) *
+                      s_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
 
 
 def _unpack_lo_hi(packed):
@@ -57,26 +61,27 @@ def _unpack_lo_hi(packed):
     return lo, hi
 
 
-def _qmm4_kernel(x_ref, wp_ref, s_ref, o_ref, acc_ref, *, nk):
+def _qmm4_kernel(x_ref, wp_ref, s_ref, o_ref, acc_ref, *, nk, acc_dtype):
     k = pl.program_id(2)
 
     @pl.when(k == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    x = x_ref[...].astype(jnp.float32)          # (bm, bk)
+    x = x_ref[...].astype(acc_dtype)            # (bm, bk)
     lo, hi = _unpack_lo_hi(wp_ref[...])         # each (bk//2, bn)
     # interleave: packed row r holds original rows 2r (lo) and 2r+1 (hi)
     x_even = x[:, 0::2]                          # multiplies lo rows
     x_odd = x[:, 1::2]                           # multiplies hi rows
-    acc_ref[...] += jnp.dot(x_even, lo.astype(jnp.float32),
-                            preferred_element_type=jnp.float32)
-    acc_ref[...] += jnp.dot(x_odd, hi.astype(jnp.float32),
-                            preferred_element_type=jnp.float32)
+    acc_ref[...] += jnp.dot(x_even, lo.astype(acc_dtype),
+                            preferred_element_type=acc_dtype)
+    acc_ref[...] += jnp.dot(x_odd, hi.astype(acc_dtype),
+                            preferred_element_type=acc_dtype)
 
     @pl.when(k == nk - 1)
     def _finish():
-        o_ref[...] = (acc_ref[...] * s_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+        o_ref[...] = (acc_ref[...].astype(jnp.float32) *
+                      s_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
 
 
 def _norm_scale(w_scale, n):
@@ -86,12 +91,17 @@ def _norm_scale(w_scale, n):
     return s.reshape(1, n)
 
 
-@functools.partial(jax.jit, static_argnames=("blocks", "interpret", "out_dtype"))
+@functools.partial(jax.jit, static_argnames=("blocks", "interpret",
+                                             "out_dtype", "acc_dtype"))
 def quant_matmul(x, w_int, w_scale, bias=None, *, blocks=DEFAULT_BLOCKS,
-                 interpret=True, out_dtype=jnp.float32):
-    """out = x @ (w_scale * w_int) [+ bias], fp32 accumulation.
+                 interpret=True, out_dtype=jnp.float32,
+                 acc_dtype=jnp.float32):
+    """out = x @ (w_scale * w_int) [+ bias].
 
     x: (M, K) f32/bf16;  w_int: (K, N) int8;  w_scale: scalar or (N,).
+    acc_dtype: f32 (default) or int32 — int32 requires integer-valued x
+    and a dot-product bound < 2^31 (the compile tier proves both via
+    range analysis before selecting it).
     """
     m, kdim = x.shape
     k2, n = w_int.shape
@@ -106,7 +116,7 @@ def quant_matmul(x, w_int, w_scale, bias=None, *, blocks=DEFAULT_BLOCKS,
     grid = (mp // bm, np_ // bn, kp // bk)
 
     out = pl.pallas_call(
-        functools.partial(_qmm_kernel, nk=grid[2]),
+        functools.partial(_qmm_kernel, nk=grid[2], acc_dtype=acc_dtype),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
@@ -115,7 +125,7 @@ def quant_matmul(x, w_int, w_scale, bias=None, *, blocks=DEFAULT_BLOCKS,
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((mp, np_), out_dtype),
-        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((bm, bn), acc_dtype)],
         interpret=interpret,
     )(xq, wq, s2)
     out = out[:m, :n]
@@ -124,12 +134,15 @@ def quant_matmul(x, w_int, w_scale, bias=None, *, blocks=DEFAULT_BLOCKS,
     return out
 
 
-@functools.partial(jax.jit, static_argnames=("blocks", "interpret", "out_dtype"))
+@functools.partial(jax.jit, static_argnames=("blocks", "interpret",
+                                             "out_dtype", "acc_dtype"))
 def quant_matmul_int4(x, w_packed, w_scale, bias=None, *, blocks=DEFAULT_BLOCKS,
-                      interpret=True, out_dtype=jnp.float32):
+                      interpret=True, out_dtype=jnp.float32,
+                      acc_dtype=jnp.float32):
     """out = x @ (w_scale * unpack(w_packed)) with in-kernel int4 unpack.
 
     x: (M, K);  w_packed: (K//2, N) int8 (two nibbles per byte along K).
+    acc_dtype: as in ``quant_matmul``.
     """
     m, kdim = x.shape
     kp2, n = w_packed.shape
@@ -144,7 +157,7 @@ def quant_matmul_int4(x, w_packed, w_scale, bias=None, *, blocks=DEFAULT_BLOCKS,
     grid = (mp // bm, np_ // bn, kp // bk)
 
     out = pl.pallas_call(
-        functools.partial(_qmm4_kernel, nk=grid[2]),
+        functools.partial(_qmm4_kernel, nk=grid[2], acc_dtype=acc_dtype),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
@@ -153,7 +166,7 @@ def quant_matmul_int4(x, w_packed, w_scale, bias=None, *, blocks=DEFAULT_BLOCKS,
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((mp, np_), out_dtype),
-        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((bm, bn), acc_dtype)],
         interpret=interpret,
     )(xq, wq, s2)
     out = out[:m, :n]

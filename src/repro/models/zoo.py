@@ -38,11 +38,14 @@ def _quant_act(b: GraphBuilder, x: str, bits: float, signed=False):
 
 # -------------------------------------------------------------------- TFC
 
-def build_tfc(w_bits=1, a_bits=1, seed=0) -> QonnxGraph:
-    """Tiny FC: 784 -> 3x64 -> 10 on MNIST (Table III: 59,008 MACs)."""
+def build_tfc(w_bits=1, a_bits=1, seed=0, batch=1) -> QonnxGraph:
+    """Tiny FC: 784 -> 3x64 -> 10 on MNIST (Table III: 59,008 MACs).
+
+    ``batch`` sets the declared leading dim; pass None for a symbolic
+    batch axis (execution is batch-polymorphic either way)."""
     rng = RNG(seed)
     b = GraphBuilder(f"TFC-w{w_bits}a{a_bits}")
-    x = b.add_input("x", (1, 784))
+    x = b.add_input("x", (batch, 784))
     h = b.quant(x, 1.0 / 128, 0.0, 8)          # 8-bit input (Table III)
     dims = [784, 64, 64, 64, 10]
     for i in range(4):
@@ -63,12 +66,12 @@ CNV_CONVS = [(3, 64), (64, 64), "M", (64, 128), (128, 128), "M",
 CNV_FCS = [(256, 512), (512, 512), (512, 10)]
 
 
-def build_cnv(w_bits=1, a_bits=1, seed=0) -> QonnxGraph:
+def build_cnv(w_bits=1, a_bits=1, seed=0, batch=1) -> QonnxGraph:
     """VGG-like CIFAR-10 model from FINN (Table III: 57,906,176 MACs
     counted beyond the first conv; 1,542,848 weights)."""
     rng = RNG(seed)
     b = GraphBuilder(f"CNV-w{w_bits}a{a_bits}")
-    x = b.add_input("x", (1, 3, 32, 32))
+    x = b.add_input("x", (batch, 3, 32, 32))
     h = b.quant(x, 1.0 / 128, 0.0, 8)
     first = True
     for spec in CNV_CONVS:
@@ -114,11 +117,11 @@ MOBILENET_V1 = [
 ]
 
 
-def build_mobilenet(w_bits=4, a_bits=4, seed=0, img=224) -> QonnxGraph:
+def build_mobilenet(w_bits=4, a_bits=4, seed=0, img=224, batch=1) -> QonnxGraph:
     """MobileNet-V1-ish w4a4 (Table III: 4,208,224 weights; first conv 8b)."""
     rng = RNG(seed)
     b = GraphBuilder(f"MobileNet-w{w_bits}a{a_bits}")
-    x = b.add_input("x", (1, 3, img, img))
+    x = b.add_input("x", (batch, 3, img, img))
     h = b.quant(x, 1.0 / 128, 0.0, 8)
     for i, (kind, cin, cout, stride) in enumerate(MOBILENET_V1):
         wb = 8.0 if i == 0 else w_bits          # first conv kept at 8 bit

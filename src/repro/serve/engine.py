@@ -14,6 +14,7 @@ Python dispatch never appears on the request path.
 """
 from __future__ import annotations
 
+import logging
 import time
 from dataclasses import dataclass, field
 from typing import Optional
@@ -24,6 +25,8 @@ import numpy as np
 
 from repro.models import api
 from repro.models.common import ModelConfig
+
+log = logging.getLogger("repro.serve")
 
 
 def greedy_generate(params, cfg: ModelConfig, batch, n_steps: int,
@@ -121,7 +124,8 @@ class CompiledGraphEngine:
     """
 
     def __init__(self, graph, *, max_batch: int = 8, use_kernels: bool = True,
-                 use_int4: bool = True, interpret: bool = True):
+                 use_int4: bool = True, interpret: bool = True,
+                 report_cost: bool = True):
         from repro.core.compile import compile_graph
         self.plan = compile_graph(graph, use_kernels=use_kernels,
                                   use_int4=use_int4, interpret=interpret)
@@ -133,6 +137,25 @@ class CompiledGraphEngine:
         self.sample_shape = tuple(g.inputs[0].shape[1:])
         self.max_batch = max_batch
         self.queue: list[GraphRequest] = []
+        self.cost_report = None
+        if report_cost:
+            # analysis-tier inference cost of the served model, logged once
+            # at load (the compile_prep graph keeps quantizers unfolded, so
+            # the datatype inference sees the real bit widths)
+            try:
+                from repro.analysis import infer_cost
+                # reuse the GraphAnalysis the compiler already ran
+                self.cost_report = infer_cost(g, ga=self.plan.analysis)
+                log.info(
+                    "loaded %s: %d layers, %s MACs, %.3g BOPs, "
+                    "%s weight bits, %.1f KiB traffic/inference, fused=%s",
+                    g.name, len(self.cost_report.layers),
+                    f"{self.cost_report.macs:,}", self.cost_report.bops,
+                    f"{int(self.cost_report.total_weight_bits):,}",
+                    self.cost_report.total_mem_bytes / 1024,
+                    self.plan.fused_counts)
+            except Exception:                  # cost is telemetry, not a gate
+                log.exception("cost analysis failed for %s", g.name)
 
     def submit(self, x) -> GraphRequest:
         x = jnp.asarray(x, jnp.float32)

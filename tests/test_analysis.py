@@ -1,0 +1,526 @@
+"""Tests for the analysis subsystem (repro.analysis): datatypes, range
+analysis, accumulator bounds, datatype inference, validation, cost report,
+and the analysis-driven kernel selection in the compiled executor."""
+import numpy as np
+import pytest
+
+from repro import analysis
+from repro.analysis import DataType, QuantValidationError
+from repro.core import GraphBuilder, execute, quant_ops, transforms
+from repro.core.compile import compile_graph
+from repro.core.graph import Node
+from repro.core.passes import run_pipeline
+from repro.models import zoo
+
+QD = "qonnx.custom_op.general"
+
+
+# ------------------------------------------------------------- datatypes
+
+def test_datatype_parsing_and_bounds():
+    i4 = DataType.from_string("INT4")
+    assert (i4.min(), i4.max(), i4.bits, i4.signed) == (-8.0, 7.0, 4, True)
+    u3 = DataType.from_string("uint3")
+    assert (u3.min(), u3.max()) == (0.0, 7.0)
+    bp = DataType.from_string("BIPOLAR")
+    assert (bp.min(), bp.max(), bp.bits) == (-1.0, 1.0, 1)
+    assert DataType.from_string("FLOAT32").is_integer() is False
+    with pytest.raises(ValueError, match="unknown datatype"):
+        DataType.from_string("INT4.5")
+
+
+def test_datatype_from_bounds_minimal():
+    assert DataType.from_bounds(0, 1).name == "UINT1"
+    assert DataType.from_bounds(0, 255).name == "UINT8"
+    assert DataType.from_bounds(-1, 1).name == "INT2"
+    assert DataType.from_bounds(-8, 7).name == "INT4"
+    assert DataType.from_bounds(-9, 7).name == "INT5"
+    assert DataType.from_bounds(-128, 127).name == "INT8"
+    assert DataType.from_bounds(0, 2 ** 17 - 1).name == "UINT17"
+    assert DataType.from_bounds(-np.inf, 3).name == "FLOAT32"
+
+
+def test_datatype_for_values_and_allowed():
+    assert DataType.for_values([0, 3, 7]).name == "UINT3"
+    assert DataType.for_values([-2, 5]).name == "INT4"
+    assert DataType.for_values([0.5]).name == "FLOAT32"
+    assert DataType.from_string("INT4").allowed([-8, 7])
+    assert not DataType.from_string("INT4").allowed([8])
+    assert DataType.from_string("BIPOLAR").allowed([-1, 1, 1])
+    assert not DataType.from_string("BIPOLAR").allowed([0])
+    assert DataType.from_string("UINT17").carrier() == np.dtype(np.uint32)
+
+
+def test_fractional_bitwidth_rounds_up_container():
+    dt = DataType.int(7.5)
+    assert dt.name == "INT8" and dt.bits == 8
+
+
+# --------------------------------------------------------- range analysis
+
+def _quant_mlp(a_bits=8, w_bits=4, scale=1.0, k=16, n=6, seed=0):
+    rng = np.random.RandomState(seed)
+    b = GraphBuilder("ra")
+    x = b.add_input("x", (2, k))
+    h = b.quant(x, scale, 0.0, a_bits, signed=True)
+    w = b.add_initializer("w", (rng.randn(k, n) * 0.5).astype(np.float32))
+    qw = b.quant(w, 0.05, 0.0, w_bits, narrow=True)
+    (y,) = b.add_node("MatMul", [h, qw], 1)
+    (y,) = b.add_node("Relu", [y], 1)
+    b.mark_output(y)
+    return b.build()
+
+
+def test_quant_output_range_and_grid():
+    g = _quant_mlp(a_bits=8, scale=0.5)
+    ga = analysis.analyze(g)
+    q_out = next(n for n in g.nodes if n.op_type == "Quant"
+                 and n.inputs[0] == "x").outputs[0]
+    r = ga.range(q_out)
+    assert r.lo == -64.0 and r.hi == 63.5          # 0.5 * [-128, 127]
+    assert r.grid is not None
+    assert (r.grid.int_lo, r.grid.int_hi) == (-128.0, 127.0)
+    assert not r.integer                            # scale 0.5 off-grid
+
+
+def test_integer_scale_one_quant_is_integer_valued():
+    g = _quant_mlp(a_bits=5, scale=1.0)
+    ga = analysis.analyze(g)
+    q_out = next(n for n in g.nodes if n.op_type == "Quant"
+                 and n.inputs[0] == "x").outputs[0]
+    r = ga.range(q_out)
+    assert r.integer and (r.lo, r.hi) == (-16.0, 15.0)
+    assert ga.value_dtype(q_out).name == "INT5"
+
+
+def test_range_bound_is_sound_on_random_graphs():
+    """Empirical outputs must always fall inside the analyzed range."""
+    for seed in range(5):
+        g = _quant_mlp(a_bits=6, scale=0.25, seed=seed)
+        ga = analysis.analyze(g)
+        out = g.output_names[0]
+        r = ga.range(out)
+        assert r.is_bounded()
+        x = np.random.RandomState(100 + seed).randn(2, 16).astype(np.float32) * 9
+        y = np.asarray(execute(g, {"x": x})[out])
+        assert y.min() >= r.lo - 1e-5 and y.max() <= r.hi + 1e-5
+
+
+def test_relu_and_maxpool_preserve_grid():
+    b = GraphBuilder("grid")
+    x = b.add_input("x", (1, 4, 8, 8))
+    h = b.quant(x, 0.125, 0.0, 4, signed=True)
+    (h,) = b.add_node("Relu", [h], 1)
+    (h,) = b.add_node("MaxPool", [h], 1,
+                      {"kernel_shape": [2, 2], "strides": [2, 2]})
+    b.mark_output(h)
+    g = b.build()
+    ga = analysis.analyze(g)
+    r = ga.range(g.output_names[0])
+    assert r.grid is not None
+    assert (r.grid.int_lo, r.grid.int_hi) == (0.0, 7.0)   # relu clipped
+    assert r.lo == 0.0 and r.hi == pytest.approx(0.875)
+
+
+def test_input_priors_tighten_ranges():
+    g = _quant_mlp(a_bits=8, scale=1 / 128)
+    wide = analysis.analyze(g)
+    tight = analysis.analyze(g, input_ranges={"x": (0.0, 0.1)})
+    q_out = next(n for n in g.nodes if n.op_type == "Quant"
+                 and n.inputs[0] == "x").outputs[0]
+    assert tight.range(q_out).hi <= wide.range(q_out).hi
+    assert tight.range(q_out).lo == 0.0
+
+
+def test_conv_zero_padding_stays_inside_bound():
+    """Border windows of a padded Conv replace taps with 0; the analyzed
+    lower bound must cover them (a strictly-positive unpadded bound would
+    be unsound)."""
+    b = GraphBuilder("conv_pad")
+    x = b.add_input("x", (1, 1, 4, 4))
+    w = b.add_initializer("w", np.ones((1, 1, 3, 3), np.float32))
+    (y,) = b.add_node("Conv", [x, w], 1,
+                      {"strides": [1, 1], "pads": [1, 1, 1, 1],
+                       "kernel_shape": [3, 3]})
+    b.mark_output(y)
+    g = b.build()
+    ga = analysis.analyze(g, input_ranges={"x": (1.0, 2.0)})
+    r = ga.range(g.output_names[0])
+    xv = np.full((1, 1, 4, 4), 1.0, np.float32)
+    out = np.asarray(execute(g, {"x": xv})[g.output_names[0]])
+    assert out.min() == 4.0                       # corner: 4 live taps
+    assert r.lo <= out.min() and out.max() <= r.hi
+
+
+def test_gemm_nondefault_attrs_are_not_bounded():
+    """alpha/beta/trans attrs aren't modeled: range must stay unknown and
+    no accumulator spec may be claimed."""
+    b = GraphBuilder("gemm_alpha")
+    x = b.add_input("x", (1, 8))
+    h = b.quant(x, 1.0, 0.0, 4, signed=True)
+    w = b.add_initializer("w", np.ones((8, 4), np.float32))
+    (y,) = b.add_node("Gemm", [h, w], 1, {"alpha": 2.0})
+    b.mark_output(y)
+    g = b.build()
+    ga = analysis.analyze(g)
+    assert not ga.range(g.output_names[0]).is_bounded()
+    assert ga.accumulator_spec(g.nodes[-1]) is None
+
+
+# ----------------------------------------------------- accumulator bounds
+
+def test_accumulator_bound_sound_and_reasonably_tight():
+    g = transforms.infer_shapes(zoo.build_tfc(2, 2))
+    ga = analysis.analyze(g)
+    mm = next(n for n in g.nodes if n.op_type == "MatMul")
+    spec = ga.accumulator_spec(mm)
+    assert spec is not None
+    # integer-domain accumulator: input int8 x int2-narrow weights over 784
+    assert spec.bits <= 1 + int(np.ceil(np.log2(784 * 128 * 1 + 1)))
+    assert spec.bits >= 10
+
+    # soundness: empirical integer-domain accumulation inside the bound
+    wq = g.producer(mm.inputs[1])
+    w_int = np.asarray(quant_ops.quantize_int(
+        np.asarray(g.initializers[wq.inputs[0]], np.float32),
+        g.initializers[wq.inputs[1]], g.initializers[wq.inputs[2]],
+        g.initializers[wq.inputs[3]], signed=True, narrow=True))
+    for seed in range(3):
+        q_a = np.random.RandomState(seed).randint(-128, 128, size=(4, 784))
+        acc = q_a @ w_int
+        assert acc.min() >= spec.int_lo and acc.max() <= spec.int_hi
+
+
+def test_accumulator_unknown_without_grid():
+    b = GraphBuilder("nogrid")
+    x = b.add_input("x", (1, 8))
+    w = b.add_initializer("w", np.ones((8, 4), np.float32))
+    (y,) = b.add_node("MatMul", [x, w], 1)
+    b.mark_output(y)
+    g = b.build()
+    ga = analysis.analyze(g)
+    assert ga.accumulator_spec(g.nodes[0]) is None  # unbounded float input
+
+
+# ------------------------------------------------------ datatype inference
+
+def test_infer_datatypes_zoo_tfc():
+    g = transforms.infer_shapes(zoo.build_tfc(2, 2))
+    dtypes, qbits = analysis.infer_datatype_map(g)
+    mms = [n for n in g.nodes if n.op_type == "MatMul"]
+    assert str(dtypes[mms[0].inputs[1]]) == "INT2"      # weight annotation
+    assert str(dtypes[mms[0].inputs[0]]) == "INT8"      # signed input quant
+    assert qbits[mms[0].inputs[1]] == 2.0
+    assert str(dtypes[mms[1].inputs[0]]) == "UINT2"     # act quant signed=0
+    assert str(dtypes[g.output_names[0]]) == "FLOAT32"
+
+
+def test_infer_datatypes_bipolar():
+    g = zoo.build_tfc(1, 1)
+    dtypes, qbits = analysis.infer_datatype_map(g)
+    mm = next(n for n in g.nodes if n.op_type == "MatMul")
+    assert str(dtypes[mm.inputs[1]]) == "BIPOLAR"
+    assert qbits[mm.inputs[1]] == 1.0
+
+
+def test_infer_datatypes_pass_annotates_and_serializes():
+    from repro.core import serialize
+    g = run_pipeline(zoo.build_tfc(2, 2), "analyze")
+    annotated = [vi for vi in g.value_info.values() if vi.qdtype]
+    assert any(vi.qdtype == "INT2" for vi in annotated)   # weight quants
+    assert any(vi.qdtype == "UINT2" for vi in annotated)  # activation quants
+    assert any(vi.qdtype == "INT8" for vi in annotated)   # input quant
+    g2 = serialize.graph_from_json(serialize.graph_to_json(g))
+    assert {v.name: v.qdtype for v in g2.value_info.values()} == \
+        {v.name: v.qdtype for v in g.value_info.values()}
+
+
+def test_qcdq_carrier_datatypes():
+    g = run_pipeline(zoo.build_tfc(2, 2), "compile_prep")
+    q = run_pipeline(g, "qonnx_to_qcdq")
+    dtypes, _ = analysis.infer_datatype_map(q)
+    clip_dts = {str(dtypes[n.outputs[0]]) for n in q.nodes
+                if n.op_type == "Clip"}
+    # the 8-bit input quant keeps the full INT8 carrier; the 2-bit
+    # activation quants are narrowed by their Clip to UINT2
+    assert "INT8" in clip_dts and "UINT2" in clip_dts
+
+
+def test_analysis_runs_on_all_three_zoo_models():
+    for g in (zoo.build_tfc(1, 2), zoo.build_cnv(2, 2),
+              zoo.build_mobilenet(4, 4, img=32)):
+        ga = analysis.analyze(g)
+        dtypes, _ = analysis.infer_datatype_map(g, ga)
+        anchors = [n for n in g.nodes if n.op_type in ("MatMul", "Conv")]
+        assert anchors
+        specs = []
+        for n in anchors:
+            assert dtypes[n.inputs[1]].is_integer()
+            specs.append(ga.accumulator_spec(n))
+        # every layer except MobileNet's post-GlobalAveragePool classifier
+        # (averaging leaves the integer grid) gets a proven accumulator
+        assert sum(s is None for s in specs) <= 1
+        assert all(s.bits <= 32 for s in specs if s is not None)
+
+
+# --------------------------------------------------------------- validator
+
+def _qcdq_graph(clip_lo, clip_hi, signed_zp):
+    b = GraphBuilder("qcdq_bad")
+    x = b.add_input("x", (1, 8))
+    s = b.add_initializer("s", np.asarray(0.1, np.float32))
+    z = b.add_initializer("z", np.asarray(
+        0, np.int8 if signed_zp else np.uint8))
+    lo = b.add_initializer("lo", np.asarray(clip_lo, np.float32))
+    hi = b.add_initializer("hi", np.asarray(clip_hi, np.float32))
+    (q,) = b.add_node("QuantizeLinear", [x, s, z], 1)
+    (c,) = b.add_node("Clip", [q, lo, hi], 1)
+    (y,) = b.add_node("DequantizeLinear", [c, s, z], 1)
+    b.mark_output(y)
+    return b.build()
+
+
+def test_validator_rejects_clip_bitwidth_mismatch():
+    g = _qcdq_graph(-5, 10, signed_zp=True)   # no INT<n> has bounds [-5,10]
+    issues = analysis.validate_quantization(g)
+    assert any(i.code == "clip_bitwidth_mismatch" for i in issues)
+    with pytest.raises(QuantValidationError, match="clip_bitwidth_mismatch"):
+        analysis.check_graph(g)
+
+
+def test_validator_rejects_signedness_conflict():
+    g = _qcdq_graph(-8, 7, signed_zp=False)   # signed clip on uint8 carrier
+    issues = analysis.validate_quantization(g)
+    assert [i.code for i in issues] == ["signedness_conflict"]
+    msg = str(QuantValidationError(issues))
+    assert "unsigned" in msg and "int8 zero_point" in msg
+
+
+def test_validator_rejects_clip_exceeding_carrier():
+    g = _qcdq_graph(0, 300, signed_zp=False)
+    issues = analysis.validate_quantization(g)
+    assert [i.code for i in issues] == ["clip_exceeds_carrier"]
+
+
+def test_validator_rejects_bad_quant_params():
+    b = GraphBuilder("bad_quant")
+    x = b.add_input("x", (1, 4))
+    y = b.quant(x, -0.5, 0.3, 4)              # negative scale + frac zp
+    b.mark_output(y)
+    g = b.build()
+    codes = {i.code for i in analysis.validate_quantization(g)}
+    assert codes >= {"nonpositive_scale", "fractional_zero_point"}
+
+
+def test_validator_rejects_trunc_gaining_bits():
+    b = GraphBuilder("bad_trunc")
+    x = b.add_input("x", (1, 4))
+    y = b.trunc(x, 0.1, 0.0, in_bits=4, out_bits=8)
+    b.mark_output(y)
+    g = b.build()
+    issues = analysis.validate_quantization(g)
+    assert [i.code for i in issues] == ["trunc_bits_increase"]
+
+
+def test_validator_rejects_qdq_scale_mismatch():
+    b = GraphBuilder("scale_mismatch")
+    x = b.add_input("x", (1, 8))
+    s1 = b.add_initializer("s1", np.asarray(0.1, np.float32))
+    s2 = b.add_initializer("s2", np.asarray(0.2, np.float32))
+    z = b.add_initializer("z", np.asarray(0, np.int8))
+    (q,) = b.add_node("QuantizeLinear", [x, s1, z], 1)
+    (y,) = b.add_node("DequantizeLinear", [q, s2, z], 1)
+    b.mark_output(y)
+    issues = analysis.validate_quantization(b.build())
+    assert [i.code for i in issues] == ["qdq_scale_mismatch"]
+
+
+def test_validator_accepts_zoo_and_lowered_formats():
+    for g in (zoo.build_tfc(2, 2), zoo.build_cnv(1, 1),
+              run_pipeline(zoo.build_tfc(2, 2), "lower_to_qcdq")):
+        assert analysis.validate_quantization(g) == []
+    run_pipeline(zoo.build_tfc(2, 2), "validate_quantization")  # no raise
+
+
+# ------------------------------------------------------------ cost report
+
+def test_cost_report_reproduces_table3():
+    for name in ("TFC-w1a1", "TFC-w2a2", "CNV-w2a2"):
+        g = transforms.infer_shapes(zoo.ZOO[name]())
+        rep = analysis.infer_cost(g)
+        first_conv = next((l for l in rep.layers if l.op_type == "Conv"), None)
+        macs = rep.macs - (first_conv.macs if first_conv else 0)
+        ref_macs, ref_w, ref_bits = zoo.TABLE3[name]
+        assert macs == ref_macs
+        assert rep.weights == ref_w
+        assert int(rep.total_weight_bits) == ref_bits
+        # every layer got an analysis-proven accumulator width
+        assert all(l.acc_bits is not None for l in rep.layers)
+        assert rep.total_mem_bytes > 0
+
+
+def test_cost_report_table_and_csv_render():
+    g = transforms.infer_shapes(zoo.build_tfc(2, 2))
+    rep = analysis.infer_cost(g)
+    txt = rep.table()
+    assert "TOTAL" in txt and "59,008" in txt
+    csv = rep.csv()
+    assert csv.splitlines()[0].startswith("layer,op,macs")
+    assert len(csv.splitlines()) == len(rep.layers) + 1
+
+
+def test_report_cli_model(capsys):
+    from repro.analysis import report
+    assert report.main(["--model", "TFC-w2a2"]) == 0
+    out = capsys.readouterr().out
+    assert "Table III check" in out
+    assert out.count("OK ") == 3
+    assert report.main(["--model", "nope"]) == 2
+
+
+def test_report_cli_csv(capsys):
+    from repro.analysis import report
+    assert report.main(["--model", "TFC-w1a1", "--csv"]) == 0
+    assert "MatMul" in capsys.readouterr().out
+
+
+# --------------------------------------- compile-tier analysis integration
+
+def test_compile_selects_int32_accumulator_for_integer_activations():
+    rng = np.random.RandomState(0)
+    b = GraphBuilder("int_acc")
+    x = b.add_input("x", (2, 64))
+    h = b.quant(x, 1.0, 0.0, 9, signed=True)       # integer-valued acts
+    w = b.add_initializer("w", (rng.randn(64, 16) * 3).astype(np.float32))
+    qw = b.quant(w, 0.25, 0.0, 8, narrow=True)
+    (y,) = b.add_node("MatMul", [h, qw], 1)
+    b.mark_output(y)
+    g = b.build()
+    plan = compile_graph(g)
+    qmm = next(s for s in plan.segments if s.kind.startswith("quant_matmul"))
+    assert qmm.meta["acc"] == "int32"
+    assert 10 < qmm.meta["acc_bits"] <= 31
+    xv = (rng.randn(2, 64) * 50).astype(np.float32)
+    ref = np.asarray(execute(transforms.cleanup(g), {"x": xv})[g.output_names[0]])
+    out = np.asarray(plan({"x": xv})[g.output_names[0]])
+    np.testing.assert_array_equal(ref, out)        # exact integer math
+
+
+def test_compile_fp32_accumulator_for_scaled_activations():
+    g = transforms.infer_shapes(zoo.build_tfc(2, 2))
+    plan = compile_graph(g)
+    for s in plan.segments:
+        if s.kind.startswith("quant_matmul"):
+            assert s.meta["acc"] == "float32"
+            assert s.meta["acc_bits"] is not None
+
+
+def test_analysis_proves_declared_wide_weights_fit_int4():
+    rng = np.random.RandomState(1)
+    b = GraphBuilder("narrow_vals")
+    x = b.add_input("x", (2, 8))
+    w = b.add_initializer("w", (rng.randn(8, 4) * 0.2).astype(np.float32))
+    qw = b.quant(w, 0.1, 0.0, 8, narrow=True)      # declared 8b; |q| <= 7
+    (y,) = b.add_node("MatMul", [x, qw], 1)
+    b.mark_output(y)
+    g = b.build()
+    with_ga = compile_graph(g)
+    without = compile_graph(g, use_analysis=False)
+    assert "quant_matmul_int4" in with_ga.fused_counts
+    assert "quant_matmul_int4" not in without.fused_counts
+    xv = rng.randn(2, 8).astype(np.float32)
+    ref = np.asarray(execute(transforms.cleanup(g), {"x": xv})[g.output_names[0]])
+    np.testing.assert_allclose(ref, np.asarray(
+        with_ga({"x": xv})[g.output_names[0]]), atol=1e-5)
+
+
+def test_compile_without_analysis_matches_with():
+    g = zoo.build_tfc(2, 2)
+    p1 = compile_graph(g)
+    p2 = compile_graph(g, use_analysis=False)
+    x = np.random.RandomState(0).randn(1, 784).astype(np.float32)
+    np.testing.assert_allclose(
+        np.asarray(p1({"x": x})[g.output_names[0]]),
+        np.asarray(p2({"x": x})[g.output_names[0]]), atol=1e-5)
+
+
+# -------------------------------------------------- rounding-mode lowering
+
+def _round_reference(x, mode):
+    """NumPy reference for the QONNX rounding-mode set."""
+    return {
+        "ROUND": np.round,
+        "CEIL": np.ceil,
+        "FLOOR": np.floor,
+        "UP": lambda v: np.sign(v) * np.ceil(np.abs(v)),
+        "DOWN": np.trunc,
+        "ROUND_TO_ZERO": np.trunc,
+        "HALF_UP": lambda v: np.sign(v) * np.floor(np.abs(v) + 0.5),
+        "HALF_DOWN": lambda v: np.sign(v) * np.ceil(np.abs(v) - 0.5),
+    }[mode](x)
+
+
+@pytest.mark.parametrize("mode", quant_ops.ROUNDING_MODES)
+def test_round_with_mode_matches_numpy_reference(mode):
+    # dense grid across the tie points plus random fractions
+    x = np.concatenate([
+        np.arange(-5, 5, 0.25, dtype=np.float32),
+        np.random.RandomState(0).randn(64).astype(np.float32) * 3])
+    got = np.asarray(quant_ops.round_with_mode(x, mode))
+    np.testing.assert_array_equal(got, _round_reference(x, mode).astype(np.float32))
+
+
+@pytest.mark.parametrize("mode", ["UP", "DOWN", "CEIL", "HALF_DOWN"])
+def test_nonround_quant_modes_lower_and_match_oracle(mode):
+    b = GraphBuilder(f"mode_{mode}")
+    x = b.add_input("x", (2, 16))
+    y = b.quant(x, 0.0973, 0.0, 4, rounding_mode=mode)
+    b.mark_output(y)
+    g = b.build()
+    plan = compile_graph(g)
+    assert "quant_dequant" in plan.fused_counts     # lowered, not interp
+    xv = np.random.RandomState(3).randn(2, 16).astype(np.float32)
+    ref = np.asarray(execute(g, {"x": xv})[g.output_names[0]])
+    out = np.asarray(plan({"x": xv})[g.output_names[0]])
+    np.testing.assert_allclose(ref, out, atol=1e-6)
+
+
+def test_unknown_rounding_mode_fails_loudly_listing_modes():
+    b = GraphBuilder("bogus_mode")
+    x = b.add_input("x", (2, 16))
+    y = b.quant(x, 0.1, 0.0, 4, rounding_mode="STOCHASTIC")
+    b.mark_output(y)
+    g = b.build()
+    with pytest.raises(ValueError, match="STOCHASTIC.*HALF_UP"):
+        compile_graph(g)
+
+
+def test_mode_outside_kernel_set_falls_back_to_interp(monkeypatch):
+    """The matcher consults quant_ops.ROUNDING_MODES: a mode the kernels
+    don't claim stays on the interpreted path instead of silently lowering
+    with wrong rounding."""
+    restricted = tuple(m for m in quant_ops.ROUNDING_MODES if m != "CEIL")
+    monkeypatch.setattr(quant_ops, "ROUNDING_MODES", restricted)
+    b = GraphBuilder("ceil_mode")
+    x = b.add_input("x", (2, 16))
+    y = b.quant(x, 0.0973, 0.0, 4, rounding_mode="CEIL")
+    b.mark_output(y)
+    g = b.build()
+    plan = compile_graph(g)
+    assert "quant_dequant" not in plan.fused_counts  # fell back to interp
+    xv = np.random.RandomState(0).randn(2, 16).astype(np.float32)
+    ref = np.asarray(execute(g, {"x": xv})[g.output_names[0]])
+    np.testing.assert_allclose(
+        ref, np.asarray(plan({"x": xv})[g.output_names[0]]), atol=1e-6)
+
+
+# ------------------------------------------------------- serving cost log
+
+def test_engine_reports_cost_at_load(caplog):
+    import logging
+    from repro.serve import CompiledGraphEngine
+    with caplog.at_level(logging.INFO, logger="repro.serve"):
+        eng = CompiledGraphEngine(zoo.build_tfc(2, 2), max_batch=2)
+    assert eng.cost_report is not None
+    assert eng.cost_report.macs == 59_008
+    assert any("59,008 MACs" in r.getMessage() for r in caplog.records)

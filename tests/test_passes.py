@@ -97,6 +97,55 @@ def test_compile_prep_keeps_weight_quants():
                                atol=1e-6)
 
 
+def test_analysis_passes_registered():
+    names = passes.available_passes()
+    assert "infer_datatypes" in names
+    assert "validate_quantization" in names
+    assert "analyze" in passes.PIPELINES
+
+
+# ------------------------------------------------------------ error paths
+
+def test_duplicate_pass_registration_raises():
+    passes.register_pass("dup_test_pass", lambda g: g)
+    try:
+        with pytest.raises(ValueError, match="already registered"):
+            passes.register_pass("dup_test_pass", lambda g: g)
+    finally:
+        del passes._PASS_REGISTRY["dup_test_pass"]
+
+
+def test_unknown_pass_in_pipeline_raises_with_candidates():
+    with pytest.raises(KeyError, match="no_such_pass"):
+        PassManager.from_names(["cleanup", "no_such_pass"])
+    # the error names the known passes so the typo is findable
+    with pytest.raises(KeyError, match="fold_constants"):
+        PassManager.from_names(["no_such_pass"])
+
+
+def test_failing_pass_mid_pipeline_keeps_prior_stats():
+    from repro.core.graph import Node
+    from repro.core.passes import Pass
+
+    def break_ssa(g):
+        g = g.copy()
+        out = g.nodes[-1].outputs[0]
+        # duplicate producer: output defined twice -> validate() must fail
+        g.nodes.append(Node("Identity", [g.input_names[0]], [out]))
+        return g
+
+    pm = PassManager([passes.get_pass("fold_constants"),
+                      passes.get_pass("infer_shapes"),
+                      Pass("break_ssa", break_ssa),
+                      passes.get_pass("remove_identity")])
+    g = make_mlp_graph()
+    with pytest.raises(ValueError, match="SSA violation"):
+        pm(g)
+    # stats must still report the passes that ran before the failure
+    assert [s.name for s in pm.stats] == ["fold_constants", "infer_shapes"]
+    assert all(s.wall_ms >= 0 for s in pm.stats)
+
+
 def test_every_registered_pass_validates_output():
     # each pass's output must survive graph.validate() (the PassManager
     # invariant); run the safe structural subset on the MLP

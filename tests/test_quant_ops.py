@@ -58,6 +58,47 @@ def test_rounding_modes(mode, val, expect):
     assert float(Q.round_with_mode(jnp.asarray(val), mode)) == expect
 
 
+@pytest.mark.parametrize("mode,val,expect", [
+    ("UP", 1.1, 2.0),          # away from zero
+    ("UP", -1.1, -2.0),
+    ("UP", 1.0, 1.0),
+    ("DOWN", 1.9, 1.0),        # toward zero
+    ("DOWN", -1.9, -1.0),
+    ("HALF_UP", -1.5, -2.0),   # negative tie away from zero (qonnx ref)
+    ("HALF_DOWN", -1.5, -1.0),  # negative tie toward zero
+])
+def test_up_down_rounding_modes(mode, val, expect):
+    assert float(Q.round_with_mode(jnp.asarray(val), mode)) == expect
+
+
+def _np_round_reference(x, mode):
+    """Independent NumPy reference for the full QONNX rounding-mode set."""
+    return {
+        "ROUND": np.round,
+        "CEIL": np.ceil,
+        "FLOOR": np.floor,
+        "UP": lambda v: np.sign(v) * np.ceil(np.abs(v)),
+        "DOWN": np.trunc,
+        "ROUND_TO_ZERO": np.trunc,
+        "HALF_UP": lambda v: np.sign(v) * np.floor(np.abs(v) + 0.5),
+        "HALF_DOWN": lambda v: np.sign(v) * np.ceil(np.abs(v) - 0.5),
+    }[mode](np.asarray(x, np.float32))
+
+
+@settings(max_examples=80, deadline=None)
+@given(
+    st.lists(st.floats(-64, 64, allow_nan=False, width=32),
+             min_size=1, max_size=32),
+    st.sampled_from(Q.ROUNDING_MODES),
+)
+def test_round_with_mode_property_vs_numpy(vals, mode):
+    x = np.asarray(vals, np.float32)
+    # include exact .5 ties, where the modes differ the most
+    x = np.concatenate([x, np.trunc(x) + 0.5, np.trunc(x) - 0.5])
+    got = np.asarray(Q.round_with_mode(jnp.asarray(x), mode))
+    np.testing.assert_array_equal(got, _np_round_reference(x, mode))
+
+
 def test_unknown_rounding_mode_raises():
     with pytest.raises(ValueError):
         Q.round_with_mode(jnp.asarray(1.0), "STOCHASTIC")
