@@ -2,10 +2,16 @@
 
 The headline number for the compile tier (core/compile.py): steady-state
 µs/call of the single jitted plan vs node-by-node Python dispatch, plus the
-fused-segment census.  The quantized-matmul-dominated graphs (TFC family)
-dispatch their MatMuls onto the integer Pallas kernels; conv-dominated
-graphs win mostly from removing the per-node dispatch + re-quantizing
-constant weights every call.
+fused-segment census.  With the lowering-rule registry both the quantized
+matmuls (TFC family) and the convolutions (CNV / MobileNet) dispatch onto
+the integer Pallas kernels; only shape-shuffles and pooling remain on the
+interpreted fallback.
+
+``--json PATH`` writes the same measurements machine-readably (per-model
+wall times, speedup, fused-segment counts) so the perf trajectory is
+tracked across PRs; ``--check-conv MODEL`` is the CI regression gate that
+asserts the conv lowering still fires (≥1 conv segment fused, 0 Conv nodes
+left interpreted).
 """
 from __future__ import annotations
 
@@ -23,6 +29,8 @@ CASES = [
     ("CNV-w2a2", (1, 3, 32, 32)),
 ]
 
+QUICK_CASES = [("TFC-w2a2", (1, 784)), ("TFC-w1a1", (1, 784))]
+
 
 def _time(fn, n=5):
     fn()                                    # warm (trace + compile)
@@ -32,8 +40,9 @@ def _time(fn, n=5):
     return (time.perf_counter() - t0) / n * 1e6
 
 
-def run(cases=None) -> list[str]:
-    rows = []
+def run_detailed(cases=None) -> tuple[list[str], dict]:
+    """Benchmark ``cases``; returns (CSV rows, per-model record dict)."""
+    rows, records = [], {}
     for name, shape in (CASES if cases is None else cases):
         g = zoo.ZOO[name]()
         gc = transforms.cleanup(g)
@@ -61,28 +70,91 @@ def run(cases=None) -> list[str]:
             plan({"x": xb})[plan.graph.output_names[0]]))
         rows.append(f"compile/{name}_compiled_b8,{us_b:.0f},"
                     f"us_per_sample={us_b / 8:.0f}")
-    return rows
+        records[name] = {
+            "interp_us": round(us_interp, 1),
+            "compiled_us": round(us_comp, 1),
+            "speedup": round(us_interp / us_comp, 2),
+            "compile_us": round(compile_us, 1),
+            "fused_counts": dict(sorted(plan.fused_counts.items())),
+            "interp_op_counts": dict(sorted(plan.interp_op_counts().items())),
+            "batch8_us": round(us_b, 1),
+            "batch8_us_per_sample": round(us_b / 8, 1),
+        }
+    return rows, records
 
 
-QUICK_CASES = [("TFC-w2a2", (1, 784)), ("TFC-w1a1", (1, 784))]
+def run(cases=None) -> list[str]:
+    return run_detailed(cases)[0]
+
+
+def check_conv_lowering(name: str) -> dict:
+    """Regression gate: ``name`` must compile with its convs on the kernel
+    tier (≥1 conv segment fused, 0 Conv nodes on the interpreted fallback).
+    Returns a record; record["ok"] is the verdict."""
+    plan = compile_graph(zoo.ZOO[name]())
+    conv_fused = sum(v for k, v in plan.fused_counts.items()
+                     if k.startswith("quant_conv"))
+    conv_interp = plan.interp_op_counts().get("Conv", 0)
+    return {
+        "model": name,
+        "conv_segments_fused": conv_fused,
+        "conv_nodes_interpreted": conv_interp,
+        "fused_counts": dict(sorted(plan.fused_counts.items())),
+        "ok": conv_fused >= 1 and conv_interp == 0,
+    }
 
 
 def main(argv=None) -> int:
-    """CLI used by the CI smoke job: exit 0 iff every row was produced.
+    """CLI used by the CI smoke job: exit 0 iff every row was produced and
+    every ``--check-conv`` gate holds.
 
-        python benchmarks/bench_compile.py [--quick]
+        python benchmarks/bench_compile.py [--quick] [--json PATH]
+                                           [--check-conv MODEL ...]
     """
     import argparse
+    import json
 
     ap = argparse.ArgumentParser(description=main.__doc__)
     ap.add_argument("--quick", action="store_true",
                     help="TFC-only cases (fast enough for CI smoke)")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write machine-readable results (per-model wall "
+                         "time, speedup, fused-segment counts) to PATH")
+    ap.add_argument("--check-conv", metavar="MODEL", action="append",
+                    default=[],
+                    help="assert MODEL compiles with ≥1 conv segment fused "
+                         "and 0 interpreted Conv nodes (repeatable)")
     args = ap.parse_args(argv)
     cases = QUICK_CASES if args.quick else CASES
-    rows = run(cases)
+    rows, records = run_detailed(cases)
     for row in rows:
         print(row)
-    return 0 if len(rows) == 3 * len(cases) else 1
+
+    ok = len(rows) == 3 * len(cases)
+    checks = []
+    for name in args.check_conv:
+        # a failing/crashing check must still reach the JSON artifact —
+        # that's exactly when CI needs the diagnostics
+        try:
+            c = check_conv_lowering(name)
+        except Exception as e:  # noqa: BLE001  (unknown model, compile crash)
+            c = {"model": name, "ok": False, "error": f"{type(e).__name__}: {e}"}
+        checks.append(c)
+        verdict = "OK" if c["ok"] else "FAIL"
+        detail = c.get("error") or (f"interp_convs="
+                                    f"{c['conv_nodes_interpreted']}")
+        print(f"check_conv/{name},{c.get('conv_segments_fused', 0)},"
+              f"{detail};{verdict}")
+        ok = ok and c["ok"]
+
+    if args.json:
+        payload = {"models": records}
+        if checks:
+            payload["conv_checks"] = checks
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+        print(f"# wrote {args.json}")
+    return 0 if ok else 1
 
 
 if __name__ == "__main__":        # PYTHONPATH=src python benchmarks/bench_compile.py

@@ -173,6 +173,27 @@ class GraphAnalysis:
             return None
         return _dot_bound(node, np.asarray(w_int, np.float64), a.lo, a.hi)
 
+    def kernel_accumulator(self, node: Node,
+                           w_int) -> Optional[tuple[int, bool]]:
+        """Per-rule accumulator-selection hook for the compiled executor.
+
+        ``w_int`` is the integer weight carrier in the *node's operand
+        shape* — (K, N) for MatMul/Gemm, (O, I/g, kH, kW) for Conv (the
+        conv lowering stages an im2col matrix but the bound is computed on
+        the real receptive field, zero-padding-aware via ``_dot_bound``).
+
+        Returns ``(min_acc_bits, exact_int32_ok)``: the minimal signed
+        accumulator width for ``x @ w_int`` over the activation's proven
+        value range, and whether exact int32 accumulation is sound (the
+        activations are provably integer-valued and the bound fits a
+        signed 31-bit accumulator).  None when the range is unproven.
+        """
+        spec = self.kernel_accumulator_spec(node, w_int)
+        if spec is None:
+            return None
+        exact = bool(self.range(node.inputs[0]).integer and spec.bits <= 31)
+        return spec.bits, exact
+
 
 def _dot_bound(node: Node, w: np.ndarray, a_lo: float, a_hi: float
                ) -> AccumulatorSpec:

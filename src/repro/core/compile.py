@@ -4,17 +4,20 @@
 dispatch, "not meant to provide high performance".  This module is the
 performance tier above it (the FINN-R / Jain-et-al. compiler approach):
 
-  1. **Partition** a cleaned graph into fused segments:
+  1. **Partition** a cleaned graph into fused segments by iterating the
+     declarative lowering-rule registry (``core/lowering``) in priority
+     order.  The built-in rules cover:
 
-     * ``Quant(w) -> MatMul/Gemm [-> Mul(descale)] [-> Add(bias)]`` and the
-       ``BipolarQuant(w) -> MatMul`` binary-weight variant lower onto
-       ``kernels.quant_matmul`` (int8) / ``kernels.quant_matmul_int4``
-       (packed sub-nibble weights) with *offline* integer weight packing —
-       the weights leave Python as int8 carriers once, at compile time.
+     * ``Quant|BipolarQuant|QCDQ(w) -> MatMul/Gemm [-> Mul] [-> Add]`` —
+       onto ``kernels.quant_matmul`` (int8) / ``quant_matmul_int4``
+       (packed sub-nibble weights) with *offline* integer weight packing;
+     * ``Quant|BipolarQuant|QCDQ(w) -> Conv [-> Relu] [-> Quant]`` —
+       onto the same integer matmul kernels via compile-time im2col weight
+       reshaping (block-diagonal for grouped/depthwise) and trace-time
+       patch extraction (``kernels.quant_conv2d``);
      * activation ``Quant`` nodes and ``QuantizeLinear -> Clip ->
-       DequantizeLinear`` chains lower onto the fused ``kernels.quant_dequant``
-       elementwise kernel (bit width recovered from the Clip bounds via
-       ``formats.bitwidth_from_bounds``).
+       DequantizeLinear`` chains — onto the fused ``kernels.quant_dequant``
+       elementwise kernel;
      * everything else falls back to the interpreted op registry, traced
        into the same computation.
 
@@ -31,10 +34,11 @@ ranges are, so
     when its declared bit width is larger;
   * weights whose declared width exceeds 8 bits still lower when their
     values fit the int8 carrier;
-  * the accumulator dtype per fused matmul is chosen from the worst-case
-    dot-product bound — int32 exact integer accumulation when the
-    activations are provably integer-valued and the bound fits 31 bits,
-    fp32 otherwise.
+  * the accumulator dtype per fused matmul/conv is chosen from the
+    worst-case dot-product bound (zero-padding-aware for Conv) via the
+    per-rule ``GraphAnalysis.kernel_accumulator`` hook — int32 exact
+    integer accumulation when the activations are provably integer-valued
+    and the bound fits 31 bits, fp32 otherwise.
 
 Pass ``use_analysis=False`` to fall back to the older syntactic
 (declared-bit-width) matching.  The interpreted engine remains the
@@ -43,7 +47,6 @@ the model zoo in all three formats.
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass, field
 from typing import Callable, Optional
 
@@ -51,12 +54,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import quant_ops
+from . import lowering
 from .executor import lookup_op
-from .formats import bitwidth_from_bounds
 from .graph import Node, QonnxGraph
-
-_MATMUL_OPS = ("MatMul", "Gemm")
+from .lowering import LoweringContext, LoweringRule, Segment  # noqa: F401
 
 # operand positions whose *values* must be concrete at trace time (the op
 # implementations call int()/np.asarray on them); such initializers are
@@ -64,36 +65,6 @@ _MATMUL_OPS = ("MatMul", "Gemm")
 # consts pytree, where they would arrive as tracers
 _STATIC_OPERANDS = {"Reshape": (1,), "Pad": (1, 2), "Squeeze": (1,),
                     "Unsqueeze": (1,)}
-
-
-# ------------------------------------------------------------ segment IR
-
-@dataclass
-class Segment:
-    """One fused unit of the plan.
-
-    kind      — "quant_matmul" | "quant_matmul_int4" | "quant_dequant"
-                | "interp"
-    nodes     — graph nodes this segment covers (for stats / debugging)
-    inputs    — env tensor names read;  outputs — env names written
-    run       — traceable fn(consts: dict, env: dict) -> None (writes env)
-    meta      — analysis annotations (acc dtype / minimal acc bits, ...)
-    """
-    kind: str
-    nodes: list[Node]
-    inputs: list[str]
-    outputs: list[str]
-    run: Callable[[dict, dict], None]
-    const_keys: tuple = ()         # consts-dict keys this segment reads
-    meta: dict = field(default_factory=dict)
-
-    def describe(self) -> str:
-        ops = "+".join(n.op_type for n in self.nodes)
-        extra = ""
-        if self.meta:
-            extra = " {" + ", ".join(f"{k}={v}"
-                                     for k, v in sorted(self.meta.items())) + "}"
-        return f"[{self.kind}] {ops} -> {', '.join(self.outputs)}{extra}"
 
 
 @dataclass
@@ -140,6 +111,16 @@ class CompiledPlan:
     def n_fused_nodes(self) -> int:
         return sum(len(s.nodes) for s in self.segments if s.kind != "interp")
 
+    def interp_op_counts(self) -> dict:
+        """op_type -> count over nodes left on the interpreted fallback."""
+        out: dict[str, int] = {}
+        for s in self.segments:
+            if s.kind != "interp":
+                continue
+            for n in s.nodes:
+                out[n.op_type] = out.get(n.op_type, 0) + 1
+        return out
+
     def describe(self) -> str:
         head = (f"CompiledPlan({self.graph.name}): {len(self.segments)} "
                 f"segments over {len(self.graph.nodes)} nodes "
@@ -147,375 +128,7 @@ class CompiledPlan:
         return "\n".join([head] + ["  " + s.describe() for s in self.segments])
 
 
-# ------------------------------------------------------- pattern helpers
-
-def _static(g: QonnxGraph, name: str) -> Optional[np.ndarray]:
-    v = g.initializers.get(name)
-    return None if v is None else np.asarray(v)
-
-
-def _scalar(a: Optional[np.ndarray]) -> Optional[float]:
-    if a is None or a.size != 1:
-        return None
-    return float(a.reshape(()))
-
-
-def _col_scale(a: np.ndarray, n: int) -> Optional[np.ndarray]:
-    """Normalize a scale to scalar () or per-output-column (N,); None if it
-    has any other (non-commuting) granularity.  Only the *last* axis may be
-    non-degenerate — a per-row (K, 1) scale on the contraction dim must not
-    be silently transposed into a column scale."""
-    a = np.asarray(a, np.float32)
-    if a.size == 1:
-        return a.reshape(())
-    if a.ndim >= 1 and a.shape[-1] == a.size == n:
-        return a.reshape(-1)
-    return None
-
-
-def _sole_consumer(g: QonnxGraph, tensor: str) -> Optional[Node]:
-    cons = g.consumers(tensor)
-    if len(cons) == 1 and tensor not in g.output_names:
-        return cons[0]
-    return None
-
-
-@dataclass
-class _QMMMatch:
-    nodes: list[Node]            # covered nodes (quant, matmul[, mul][, add])
-    x: str                       # activation tensor
-    out: str                     # tensor the fused segment produces
-    w_int: np.ndarray            # (K, N) integer-valued weights
-    scale: np.ndarray            # () or (N,) effective dequant scale
-    bias: Optional[np.ndarray]   # (N,) or None
-    int4_ok: bool
-    acc_dtype: object = jnp.float32   # analysis-selected accumulator
-    acc_bits: Optional[int] = None    # minimal accumulator width (if proven)
-
-
-def _match_quant_matmul(g: QonnxGraph, node: Node,
-                        ga=None) -> Optional[_QMMMatch]:
-    if node.op_type not in _MATMUL_OPS:
-        return None
-    if node.op_type == "Gemm":
-        a = node.attrs
-        if a.get("alpha", 1.0) != 1.0 or a.get("beta", 1.0) != 1.0 or \
-                a.get("transA", 0) or a.get("transB", 0):
-            return None
-    wq = g.producer(node.inputs[1])
-    if wq is None:
-        return None
-    if wq.op_type == "DequantizeLinear":
-        return _match_dq_weight_chain(g, node, wq)
-    if wq.op_type not in ("Quant", "BipolarQuant"):
-        return None
-    w = _static(g, wq.inputs[0])
-    if w is None or w.ndim != 2:
-        return None
-    kdim, n = w.shape
-
-    if wq.op_type == "BipolarQuant":
-        s = _static(g, wq.inputs[1])
-        if s is None:
-            return None
-        scale = _col_scale(s, n)
-        if scale is None:
-            return None
-        # w_q = s * (+1 if w >= 0 else -1)  — exact in int8
-        w_int = np.where(w >= 0, 1, -1).astype(np.int8)
-        int4_ok = True
-    else:
-        s, z, bw = (_static(g, i) for i in wq.inputs[1:4])
-        if s is None or z is None or bw is None:
-            return None
-        if np.any(z != 0):
-            return None                       # asymmetric weights: keep interp
-        nb = _scalar(bw)
-        if nb is None:
-            return None
-        signed = bool(wq.attrs.get("signed", 1))
-        narrow = bool(wq.attrs.get("narrow", 0))
-        rmode = str(wq.attrs.get("rounding_mode", "ROUND")).upper()
-        if rmode not in quant_ops.ROUNDING_MODES:
-            return None                       # unknown mode: keep interp
-        scale = _col_scale(s, n)
-        if scale is None:
-            return None
-        w_q = np.asarray(quant_ops.quantize_int(
-            jnp.asarray(w, jnp.float32), s, z, bw, signed=signed,
-            narrow=narrow, rounding_mode=rmode))
-        if ga is not None:
-            # analysis-driven carrier selection: the *actual* value range
-            # decides — declared-wide weights that happen to fit a narrower
-            # carrier still lower (and may take the packed int4 path)
-            w_lo, w_hi = (float(w_q.min()), float(w_q.max())) if w_q.size \
-                else (0.0, 0.0)
-        else:
-            # syntactic fallback: declared bit-width bounds
-            w_hi = float(quant_ops.max_int(signed, narrow, nb))
-            w_lo = float(quant_ops.min_int(signed, narrow, nb))
-        if w_lo < -128 or w_hi > 127:
-            return None                       # must fit the int8 carrier
-        w_int = w_q.astype(np.int8)
-        int4_ok = -8.0 <= w_lo and w_hi <= 7.0
-    int4_ok = int4_ok and kdim % 2 == 0
-
-    nodes = [node]
-    # only absorb the weight-Quant node when this matmul is its sole reader
-    if _sole_consumer(g, wq.outputs[0]) is node:
-        nodes.insert(0, wq)
-    return _finish_qmm_match(g, node, nodes, n, w_int, scale, int4_ok)
-
-
-def _match_dq_weight_chain(g: QonnxGraph, node: Node,
-                           dq: Node) -> Optional[_QMMMatch]:
-    """QCDQ-format weights: QuantizeLinear(w) [-> Clip] -> DequantizeLinear
-    feeding the matmul.  The integer weights are computed offline by
-    evaluating the Q(C) chain on the constant with the registered ops (so
-    the packed carrier is bit-identical to what the oracle would produce)."""
-    chain = [dq]
-    cur = g.producer(dq.inputs[0])
-    if cur is not None and cur.op_type == "Clip":
-        chain.insert(0, cur)
-        cur = g.producer(cur.inputs[0])
-    if cur is None or cur.op_type != "QuantizeLinear":
-        return None
-    ql = cur
-    chain.insert(0, ql)
-    w = _static(g, ql.inputs[0])
-    if w is None or w.ndim != 2:
-        return None
-    n = w.shape[1]
-    if ql.inputs[1] != dq.inputs[1]:
-        return None
-    s = _static(g, ql.inputs[1])
-    zp = _static(g, ql.inputs[2]) if len(ql.inputs) > 2 else None
-    if s is None or (zp is not None and np.any(zp != 0)):
-        return None
-    scale = _col_scale(s, n)
-    if scale is None:
-        return None
-    # evaluate QL [+ Clip] on the constant weight, offline
-    val = jnp.asarray(w, jnp.float32)
-    for cn in chain[:-1]:
-        args = [val] + [jnp.asarray(g.initializers[i])
-                        for i in cn.inputs[1:] if i]
-        val = lookup_op(cn)(cn, *args)
-    w_int = np.asarray(val)
-    if w_int.min() < -128 or w_int.max() > 127:
-        return None
-    w_int = w_int.astype(np.int8)
-    int4_ok = w_int.min() >= -8 and w_int.max() <= 7 and w.shape[0] % 2 == 0
-    nodes = [node]
-    # absorb the chain only when the matmul is its sole reader
-    if _sole_consumer(g, dq.outputs[0]) is node and \
-            all(_sole_consumer(g, c.outputs[0]) is not None
-                for c in chain[:-1]):
-        nodes = chain + nodes
-    return _finish_qmm_match(g, node, nodes, n, w_int, scale, int4_ok)
-
-
-def _finish_qmm_match(g: QonnxGraph, node: Node, nodes: list[Node], n: int,
-                      w_int: np.ndarray, scale, int4_ok: bool
-                      ) -> Optional[_QMMMatch]:
-    """Shared tail: Gemm bias operand, then optional constant descale Mul
-    and bias Add below the matmul."""
-    bias = None
-    if node.op_type == "Gemm" and len(node.inputs) > 2 and node.inputs[2]:
-        bias = _static(g, node.inputs[2])
-        if bias is None:
-            return None
-
-    out = node.outputs[0]
-    mul = _sole_consumer(g, out)
-    if mul is not None and mul.op_type == "Mul" and bias is None:
-        d = _static(g, mul.inputs[1] if mul.inputs[0] == out else mul.inputs[0])
-        d = None if d is None else _col_scale(d, n)
-        if d is not None:
-            scale = (scale * d).astype(np.float32)
-            nodes.append(mul)
-            out = mul.outputs[0]
-    add = _sole_consumer(g, out)
-    if add is not None and add.op_type == "Add":
-        b = _static(g, add.inputs[1] if add.inputs[0] == out else add.inputs[0])
-        # same orientation rule as _col_scale: only a scalar or a last-axis
-        # (N,)-broadcast constant is a fusable bias — an (N, 1) column
-        # constant broadcasts over rows and would change the output shape
-        if b is not None and (b.size == 1 or
-                              (b.ndim >= 1 and b.shape[-1] == b.size == n)):
-            bias = (np.zeros(n, np.float32) if bias is None else bias) + \
-                np.asarray(b, np.float32).reshape(-1 if b.size == n else 1)
-            nodes.append(add)
-            out = add.outputs[0]
-
-    return _QMMMatch(nodes, node.inputs[0], out, w_int,
-                     np.asarray(scale, np.float32), bias, int4_ok)
-
-
-def _select_accumulator(ga, node: Node, m: _QMMMatch) -> None:
-    """Analysis-driven accumulator dtype for a fused matmul segment.
-
-    The kernel computes ``x @ w_int`` (activation *values* against integer
-    weight carriers).  When the range analysis proves the activations are
-    integer-valued and the worst-case dot-product bound fits a signed
-    31-bit accumulator, exact int32 accumulation is selected; otherwise
-    fp32 (what the interpreted oracle uses).  The minimal accumulator
-    width is recorded either way for stats / the cost reporter.
-    """
-    spec = ga.kernel_accumulator_spec(node, m.w_int)
-    if spec is None:
-        return
-    m.acc_bits = spec.bits
-    if ga.range(node.inputs[0]).integer and spec.bits <= 31:
-        m.acc_dtype = jnp.int32
-
-
-@dataclass
-class _QDQMatch:
-    nodes: list[Node]
-    x: str
-    out: str
-    scale: np.ndarray            # () or (C,) last-dim channelwise
-    zero_point: np.ndarray
-    bit_width: float
-    signed: bool
-    narrow: bool
-    rounding_mode: str
-
-
-def _match_quant_node(g: QonnxGraph, node: Node) -> Optional[_QDQMatch]:
-    """A high-level activation Quant with static params -> fused QDQ kernel."""
-    if node.op_type != "Quant" or node.inputs[0] in g.initializers:
-        return None
-    s, z, bw = (_static(g, i) for i in node.inputs[1:4])
-    if s is None or z is None or bw is None:
-        return None
-    nb = _scalar(bw)
-    if nb is None:
-        return None
-    rmode = str(node.attrs.get("rounding_mode", "ROUND")).upper()
-    if rmode not in quant_ops.ROUNDING_MODES:
-        return None       # mode the QDQ kernel can't realize: keep interp
-    sh = g.get_shape(node.inputs[0])
-    lastdim = sh[-1] if sh else None
-    for p in (s, z):
-        if p.size != 1 and (lastdim is None or p.size != lastdim):
-            return None                       # kernel handles (), (N,) only
-    return _QDQMatch(
-        [node], node.inputs[0], node.outputs[0],
-        np.asarray(s, np.float32).reshape(-1),
-        np.asarray(z, np.float32).reshape(-1), nb,
-        bool(node.attrs.get("signed", 1)), bool(node.attrs.get("narrow", 0)),
-        rmode)
-
-
-def _match_qcdq_chain(g: QonnxGraph, node: Node) -> Optional[_QDQMatch]:
-    """QuantizeLinear [-> Clip] -> DequantizeLinear -> fused QDQ kernel."""
-    if node.op_type != "QuantizeLinear" or node.inputs[0] in g.initializers:
-        return None
-    seq = [node]
-    cur = _sole_consumer(g, node.outputs[0])
-    if cur is not None and cur.op_type == "Clip":
-        seq.append(cur)
-        cur = _sole_consumer(g, cur.outputs[0])
-    if cur is None or cur.op_type != "DequantizeLinear":
-        return None
-    dq = cur
-    seq.append(dq)
-    if node.inputs[1] != dq.inputs[1]:
-        return None
-    s = _static(g, node.inputs[1])
-    zp_name = node.inputs[2] if len(node.inputs) > 2 else None
-    z = _static(g, zp_name) if zp_name else np.zeros(1, np.float32)
-    if s is None or z is None or np.any(z != np.round(z)):
-        return None
-    # no zero-point input means a uint8 carrier (executor._quantize_linear)
-    signed = bool(np.issubdtype(z.dtype, np.signedinteger)) \
-        if zp_name else False
-    lo, hi = (-128.0, 127.0) if signed else (0.0, 255.0)
-    if len(seq) == 3:
-        clip = seq[1]
-        clo = _static(g, clip.inputs[1])
-        chi = _static(g, clip.inputs[2])
-        if clo is None or chi is None:
-            return None
-        lo, hi = float(clo), float(chi)
-    recovered = bitwidth_from_bounds(lo, hi, signed)
-    if recovered is None:
-        return None
-    nb, narrow = recovered
-    sh = g.get_shape(node.inputs[0])
-    lastdim = sh[-1] if sh else None
-    for p in (s, z):
-        if p.size != 1 and (lastdim is None or p.size != lastdim):
-            return None
-    return _QDQMatch(
-        seq, node.inputs[0], dq.outputs[0],
-        np.asarray(s, np.float32).reshape(-1),
-        np.asarray(z, np.float32).reshape(-1), float(nb), signed, narrow,
-        "ROUND")
-
-
-# --------------------------------------------------------- segment build
-
-def _make_qmm_segment(idx: int, m: _QMMMatch, consts: dict, *,
-                      use_int4: bool, interpret: bool) -> Segment:
-    from repro.kernels import ops as kernel_ops
-
-    kind = "quant_matmul_int4" if (use_int4 and m.int4_ok) else "quant_matmul"
-    w_key, s_key, b_key = f"__seg{idx}_w", f"__seg{idx}_s", f"__seg{idx}_b"
-    if kind == "quant_matmul_int4":
-        consts[w_key] = kernel_ops.pack_int4(jnp.asarray(m.w_int))
-        kernel = functools.partial(kernel_ops.quant_matmul_int4,
-                                   interpret=interpret,
-                                   acc_dtype=m.acc_dtype)
-    else:
-        consts[w_key] = jnp.asarray(m.w_int)
-        kernel = functools.partial(kernel_ops.quant_matmul,
-                                   interpret=interpret,
-                                   acc_dtype=m.acc_dtype)
-    consts[s_key] = jnp.asarray(m.scale)
-    if m.bias is not None:
-        consts[b_key] = jnp.asarray(m.bias, jnp.float32)
-    has_bias = m.bias is not None
-    x_name, out_name = m.x, m.out
-
-    def run(consts, env):
-        x = env.get(x_name, consts.get(x_name))
-        lead = x.shape[:-1]
-        x2 = x.reshape((-1, x.shape[-1])).astype(jnp.float32)
-        y = kernel(x2, consts[w_key], consts[s_key],
-                   consts[b_key] if has_bias else None)
-        env[out_name] = y.reshape(lead + (y.shape[-1],))
-
-    keys = (w_key, s_key, b_key) if has_bias else (w_key, s_key)
-    meta = {"acc": jnp.dtype(m.acc_dtype).name}
-    if m.acc_bits is not None:
-        meta["acc_bits"] = m.acc_bits
-    return Segment(kind, m.nodes, [x_name], [out_name], run, keys, meta)
-
-
-def _make_qdq_segment(idx: int, m: _QDQMatch, consts: dict, *,
-                      interpret: bool) -> Segment:
-    from repro.kernels import ops as kernel_ops
-
-    s_key, z_key = f"__seg{idx}_qs", f"__seg{idx}_qz"
-    consts[s_key] = jnp.asarray(m.scale)
-    consts[z_key] = jnp.asarray(m.zero_point)
-    kernel = functools.partial(
-        kernel_ops.quant_dequant, bit_width=m.bit_width, signed=m.signed,
-        narrow=m.narrow, rounding_mode=m.rounding_mode, interpret=interpret)
-    x_name, out_name = m.x, m.out
-
-    def run(consts, env):
-        x = env.get(x_name, consts.get(x_name))
-        x2 = x.reshape((1, -1)) if x.ndim < 2 else x
-        y = kernel(x2, consts[s_key], consts[z_key])
-        env[out_name] = y.reshape(x.shape)
-
-    return Segment("quant_dequant", m.nodes, [x_name], [out_name], run,
-                   (s_key, z_key))
-
+# --------------------------------------------------- interpreted fallback
 
 def _make_interp_segment(nodes: list[Node], static_consts: dict) -> Segment:
     fns = [lookup_op(n) for n in nodes]
@@ -572,38 +185,38 @@ def compile_graph(graph: QonnxGraph, *, run_cleanup: bool = True,
     if use_kernels and use_analysis:
         from repro.analysis import analyze
         ga = analyze(g)
+    ctx = LoweringContext(analysis=ga, use_int4=use_int4, interpret=interpret)
 
     consts: dict = {k: jnp.asarray(v) for k, v in g.initializers.items()}
 
-    # pass 1 — match fused patterns at their anchor nodes.  Anchors are the
-    # nodes whose external inputs are all live by their topo position (the
-    # MatMul/Gemm for weight-quant segments, the QuantizeLinear/Quant for
-    # QDQ segments); covered satellites (weight Quant above, descale Mul /
-    # bias Add below) are recorded so pass 2 skips them.
-    anchor_match: dict[int, object] = {}
+    # pass 1 — match the registered lowering rules at their anchor nodes.
+    # Anchors are the nodes whose external inputs are all live by their
+    # topo position (the MatMul/Gemm/Conv for weight-quant segments, the
+    # QuantizeLinear/Quant for QDQ segments); covered satellites (weight
+    # chains above, epilogues below) are recorded so pass 2 skips them.
+    anchor_match: dict[int, tuple[LoweringRule, lowering.Match]] = {}
     covered: set[int] = set()
+    rules_by_op: dict[str, list[LoweringRule]] = {}   # registry sorted once
     if use_kernels:
         for node in g.nodes:
             if id(node) in covered:
                 continue
-            m = _match_quant_matmul(g, node, ga)
-            kind = "qmm"
-            if m is None:
-                m = _match_quant_node(g, node) or _match_qcdq_chain(g, node)
-                kind = "qdq"
-            if m is None:
-                continue
-            if any(id(n) in covered or id(n) in anchor_match
-                   for n in m.nodes):
-                continue                       # overlaps an earlier match
-            if kind == "qmm" and ga is not None:
-                _select_accumulator(ga, node, m)
-            anchor_match[id(node)] = (kind, m)
-            covered.update(id(n) for n in m.nodes)
+            if node.op_type not in rules_by_op:
+                rules_by_op[node.op_type] = lowering.rules_for(node.op_type)
+            for rule in rules_by_op[node.op_type]:
+                m = rule.match(g, node, ctx)
+                if m is None:
+                    continue
+                if any(id(n) in covered or id(n) in anchor_match
+                       for n in m.nodes):
+                    continue               # overlaps an earlier match
+                anchor_match[id(node)] = (rule, m)
+                covered.update(id(n) for n in m.nodes)
+                break
 
     # pass 1.5 — compile-time folding of the *unmatched* static subgraphs
-    # (e.g. Conv weight Quants, which the matchers don't lower): evaluate
-    # them once now so the plan never re-executes constant work per call
+    # (e.g. weight chains of convs no rule supports): evaluate them once
+    # now so the plan never re-executes constant work per call
     folded: set[int] = set()
     changed = True
     while changed:
@@ -645,14 +258,8 @@ def compile_graph(graph: QonnxGraph, *, run_cleanup: bool = True,
     for node in g.nodes:
         if id(node) in anchor_match:
             flush_interp()
-            kind, m = anchor_match[id(node)]
-            if kind == "qmm":
-                segments.append(_make_qmm_segment(
-                    len(segments), m, consts, use_int4=use_int4,
-                    interpret=interpret))
-            else:
-                segments.append(_make_qdq_segment(
-                    len(segments), m, consts, interpret=interpret))
+            rule, m = anchor_match[id(node)]
+            segments.append(rule.emit(len(segments), m, consts, ctx))
         elif id(node) in covered or id(node) in folded:
             continue                  # satellite of a fused segment / folded
         else:

@@ -1,0 +1,202 @@
+"""Lowering rule: quantized Conv -> im2col onto the integer matmul kernels.
+
+Pattern (anchored at the Conv):
+
+    Quant|BipolarQuant|QCDQ(w) -> Conv [-> Relu] [-> Quant(act)]
+
+This is the lowering the conv-dominated Table III workloads need: CNV is
+57.9M MACs of 3x3 convs and MobileNet-w4a4 is 557M MACs of depthwise +
+pointwise convs, and until this rule every one of them ran on the
+interpreted fallback.
+
+How it lowers (FINN-R / TVM-quantization style):
+
+  * the integer conv weights (O, I/g, kH, kW) are reshaped **at compile
+    time** into a (C·kH·kW, O) matmul operand
+    (``kernels.im2col_weights``) — block-diagonal for grouped/depthwise
+    convs (MobileNet's ``group=cin`` layers), so the MXU kernels see one
+    dense int8/int4 carrier;
+  * at trace time the activation is unfolded into im2col patches and fed
+    through ``kernels.quant_conv2d`` -> ``quant_matmul[_int4]``; stride,
+    padding, dilation and 1x1-pointwise all reduce to how the patches are
+    sliced;
+  * a trailing Relu fuses as a max(0, ·) epilogue, and a trailing
+    per-tensor activation Quant fuses as a ``quant_dequant`` kernel call on
+    the still-2D matmul output — the common Conv->Relu->Quant block of the
+    zoo models becomes exactly one segment;
+  * the accumulator dtype comes from the analysis tier's zero-padding-aware
+    conv dot-product bound (``GraphAnalysis.kernel_accumulator`` with the
+    *conv-shaped* integer weights — border windows replace taps with 0 and
+    the bound accounts for it).
+
+Unsupported shapes (NHWC layout, auto_pad, per-input-channel scales,
+non-constant weights/bias, 1-D/3-D convs) simply don't match and stay on
+the interpreted path — the registry makes that fallback free.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..graph import Node, QonnxGraph
+from .base import (LoweringContext, LoweringRule, Segment, conv_channel_scale,
+                   register_rule, select_accumulator, sole_consumer,
+                   static_value)
+from .qdq import static_act_quant_params
+from .weights import (KernelMatch, chain_absorbable, resolve_quant_weight,
+                      stage_kernel_carriers)
+
+
+@dataclass
+class ActQuantParams:
+    """Static per-tensor activation-Quant params fused as an epilogue."""
+    scale: np.ndarray
+    zero_point: np.ndarray
+    bit_width: float
+    signed: bool
+    narrow: bool
+    rounding_mode: str
+
+
+@dataclass
+class QuantConvMatch(KernelMatch):
+    kernel_shape: tuple = (1, 1)
+    strides: tuple = (1, 1)
+    pads: tuple = (0, 0, 0, 0)
+    dilations: tuple = (1, 1)
+    group: int = 1
+    relu: bool = False
+    act: Optional[ActQuantParams] = None
+
+
+def _act_quant_params(g: QonnxGraph, node: Node) -> Optional[ActQuantParams]:
+    """Fusable activation Quant epilogue: the QDQ rule's static-param gate
+    (qdq.static_act_quant_params) tightened to *per-tensor* scale/zp —
+    channelwise act scales would sit on the non-minor channel axis of NCHW,
+    those stay on the QDQ rule / interp path."""
+    params = static_act_quant_params(g, node)
+    if params is None:
+        return None
+    s, z, nb, signed, narrow, rmode = params
+    if s.size != 1 or z.size != 1:
+        return None
+    return ActQuantParams(
+        np.asarray(s, np.float32).reshape(-1),
+        np.asarray(z, np.float32).reshape(-1), nb, signed, narrow, rmode)
+
+
+@register_rule
+class QuantConvRule(LoweringRule):
+    name = "quant_conv"
+    anchor_ops = ("Conv",)
+    priority = 20
+
+    def match(self, g: QonnxGraph, node: Node,
+              ctx: LoweringContext) -> Optional[QuantConvMatch]:
+        from repro.kernels.quant_conv import im2col_weights
+
+        if node.attrs.get("data_layout", "NCHW") != "NCHW":
+            return None
+        if node.attrs.get("auto_pad", "NOTSET") != "NOTSET":
+            return None
+        qw = resolve_quant_weight(g, node.inputs[1], ctx.analysis)
+        if qw is None or qw.w_int.ndim != 4:
+            return None                           # 2-D convs only
+        o, ipg, kh, kw = qw.w_int.shape
+        group = int(node.attrs.get("group", 1))
+        if group < 1 or o % group:
+            return None
+        ks = tuple(int(v) for v in node.attrs.get("kernel_shape", (kh, kw)))
+        if ks != (kh, kw):
+            return None
+        strides = tuple(int(v) for v in node.attrs.get("strides", (1, 1)))
+        pads = tuple(int(v) for v in node.attrs.get("pads", (0, 0, 0, 0)))
+        dilations = tuple(int(v) for v in node.attrs.get("dilations", (1, 1)))
+        if len(strides) != 2 or len(pads) != 4 or len(dilations) != 2:
+            return None
+        scale = conv_channel_scale(qw.scale, qw.w_int.shape)
+        if scale is None:
+            return None
+        bias = None
+        if len(node.inputs) > 2 and node.inputs[2]:
+            b = static_value(g, node.inputs[2])
+            if b is None or b.size != o:
+                return None
+            bias = np.asarray(b, np.float32).reshape(-1)
+
+        w2 = im2col_weights(qw.w_int, group)       # (C·kH·kW, O) int8
+        int4_ok = qw.int4_values and w2.shape[0] % 2 == 0
+        nodes = list(qw.chain) + [node] if chain_absorbable(g, qw.chain, node) \
+            else [node]
+
+        # epilogue absorption: [-> Relu] [-> Quant(act)]
+        out = node.outputs[0]
+        relu = False
+        act = None
+        nxt = sole_consumer(g, out)
+        if nxt is not None and nxt.op_type == "Relu":
+            relu = True
+            nodes.append(nxt)
+            out = nxt.outputs[0]
+            nxt = sole_consumer(g, out)
+        if nxt is not None and nxt.op_type == "Quant":
+            act = _act_quant_params(g, nxt)
+            if act is not None:
+                nodes.append(nxt)
+                out = nxt.outputs[0]
+
+        m = QuantConvMatch(
+            nodes, node.inputs[0], out, w2,
+            np.asarray(scale, np.float32), bias, int4_ok,
+            kernel_shape=ks, strides=strides, pads=pads, dilations=dilations,
+            group=group, relu=relu, act=act)
+        # zero-padding-aware bound wants the conv-shaped weights, not the
+        # staged im2col matrix
+        select_accumulator(ctx, node, m, w_int=qw.w_int)
+        return m
+
+    def emit(self, idx: int, m: QuantConvMatch, consts: dict,
+             ctx: LoweringContext) -> Segment:
+        from repro.kernels import ops as kernel_ops
+
+        kind, use_int4, w_key, s_key, b_key, meta = stage_kernel_carriers(
+            idx, m, consts, ctx, ("quant_conv", "quant_conv_int4"))
+        conv = functools.partial(
+            kernel_ops.quant_conv2d, kernel_shape=m.kernel_shape,
+            strides=m.strides, pads=m.pads, dilations=m.dilations,
+            packed=use_int4, interpret=ctx.interpret, acc_dtype=m.acc_dtype)
+
+        keys = [w_key, s_key] + ([b_key] if b_key else [])
+        qdq = None
+        if m.act is not None:
+            qs_key, qz_key = f"__seg{idx}_aqs", f"__seg{idx}_aqz"
+            consts[qs_key] = jnp.asarray(m.act.scale)
+            consts[qz_key] = jnp.asarray(m.act.zero_point)
+            keys += [qs_key, qz_key]
+            qdq = functools.partial(
+                kernel_ops.quant_dequant, bit_width=m.act.bit_width,
+                signed=m.act.signed, narrow=m.act.narrow,
+                rounding_mode=m.act.rounding_mode, interpret=ctx.interpret)
+        x_name, out_name, relu = m.x, m.out, m.relu
+
+        def run(consts, env):
+            x = env.get(x_name, consts.get(x_name))
+            y = conv(x, consts[w_key], consts[s_key],
+                     consts[b_key] if b_key else None)
+            if relu:
+                y = jnp.maximum(y, 0.0)
+            if qdq is not None:
+                # still elementwise: run the QDQ kernel on a 2-D view
+                y2 = qdq(y.reshape(y.shape[0], -1),
+                         consts[qs_key], consts[qz_key])
+                y = y2.reshape(y.shape)
+            env[out_name] = y
+
+        if m.group > 1:
+            meta["group"] = m.group
+        return Segment(kind, m.nodes, [x_name], [out_name], run,
+                       tuple(keys), meta)

@@ -1,0 +1,170 @@
+"""Lowering rules: activation quantizers -> the fused QDQ elementwise kernel.
+
+Two patterns, both producing the same segment shape:
+
+  * ``quant_qdq``   — a high-level activation ``Quant`` with static params;
+  * ``qcdq_chain``  — ``QuantizeLinear [-> Clip] -> DequantizeLinear`` with
+    the bit width recovered from the Clip bounds
+    (``formats.bitwidth_from_bounds``).
+
+Both lower onto ``kernels.quant_dequant``, which fuses quantize + clamp +
+dequantize into one VMEM round trip.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from .. import quant_ops
+from ..formats import bitwidth_from_bounds
+from ..graph import Node, QonnxGraph
+from .base import (LoweringContext, LoweringRule, Match, Segment,
+                   register_rule, scalar, sole_consumer, static_value)
+
+
+def static_act_quant_params(g: QonnxGraph, node: Node):
+    """Static params of an activation ``Quant`` the QDQ kernel can realize:
+    ``(s, z, nb, signed, narrow, rounding_mode)`` or None (non-static
+    params, channelwise bit width, unknown rounding mode).  Shared by the
+    QDQ rule and the conv rule's epilogue absorption — granularity
+    constraints beyond this (last-dim vs per-tensor) are the caller's."""
+    s, z, bw = (static_value(g, i) for i in node.inputs[1:4])
+    if s is None or z is None or bw is None:
+        return None
+    nb = scalar(bw)
+    if nb is None:
+        return None
+    rmode = str(node.attrs.get("rounding_mode", "ROUND")).upper()
+    if rmode not in quant_ops.ROUNDING_MODES:
+        return None       # mode the QDQ kernel can't realize: keep interp
+    return (s, z, nb, bool(node.attrs.get("signed", 1)),
+            bool(node.attrs.get("narrow", 0)), rmode)
+
+
+@dataclass
+class QDQMatch(Match):
+    x: str
+    out: str
+    scale: np.ndarray            # () or (C,) last-dim channelwise
+    zero_point: np.ndarray
+    bit_width: float
+    signed: bool
+    narrow: bool
+    rounding_mode: str
+
+
+def make_qdq_segment(idx: int, m: QDQMatch, consts: dict,
+                     ctx: LoweringContext) -> Segment:
+    from repro.kernels import ops as kernel_ops
+
+    s_key, z_key = f"__seg{idx}_qs", f"__seg{idx}_qz"
+    consts[s_key] = jnp.asarray(m.scale)
+    consts[z_key] = jnp.asarray(m.zero_point)
+    kernel = functools.partial(
+        kernel_ops.quant_dequant, bit_width=m.bit_width, signed=m.signed,
+        narrow=m.narrow, rounding_mode=m.rounding_mode,
+        interpret=ctx.interpret)
+    x_name, out_name = m.x, m.out
+
+    def run(consts, env):
+        x = env.get(x_name, consts.get(x_name))
+        x2 = x.reshape((1, -1)) if x.ndim < 2 else x
+        y = kernel(x2, consts[s_key], consts[z_key])
+        env[out_name] = y.reshape(x.shape)
+
+    return Segment("quant_dequant", m.nodes, [x_name], [out_name], run,
+                   (s_key, z_key))
+
+
+@register_rule
+class ActivationQuantRule(LoweringRule):
+    """A high-level activation Quant with static params -> fused QDQ kernel."""
+
+    name = "quant_qdq"
+    anchor_ops = ("Quant",)
+    priority = 30
+
+    def match(self, g: QonnxGraph, node: Node,
+              ctx: LoweringContext) -> Optional[QDQMatch]:
+        if node.inputs[0] in g.initializers:
+            return None                   # weight quantizer, not activation
+        params = static_act_quant_params(g, node)
+        if params is None:
+            return None
+        s, z, nb, signed, narrow, rmode = params
+        sh = g.get_shape(node.inputs[0])
+        lastdim = sh[-1] if sh else None
+        for p in (s, z):
+            if p.size != 1 and (lastdim is None or p.size != lastdim):
+                return None                       # kernel handles (), (N,) only
+        return QDQMatch(
+            [node], node.inputs[0], node.outputs[0],
+            np.asarray(s, np.float32).reshape(-1),
+            np.asarray(z, np.float32).reshape(-1), nb, signed, narrow, rmode)
+
+    def emit(self, idx: int, match: QDQMatch, consts: dict,
+             ctx: LoweringContext) -> Segment:
+        return make_qdq_segment(idx, match, consts, ctx)
+
+
+@register_rule
+class QCDQChainRule(LoweringRule):
+    """QuantizeLinear [-> Clip] -> DequantizeLinear -> fused QDQ kernel."""
+
+    name = "qcdq_chain"
+    anchor_ops = ("QuantizeLinear",)
+    priority = 40
+
+    def match(self, g: QonnxGraph, node: Node,
+              ctx: LoweringContext) -> Optional[QDQMatch]:
+        if node.inputs[0] in g.initializers:
+            return None                   # weight chain (matmul/conv rules)
+        seq = [node]
+        cur = sole_consumer(g, node.outputs[0])
+        if cur is not None and cur.op_type == "Clip":
+            seq.append(cur)
+            cur = sole_consumer(g, cur.outputs[0])
+        if cur is None or cur.op_type != "DequantizeLinear":
+            return None
+        dq = cur
+        seq.append(dq)
+        if node.inputs[1] != dq.inputs[1]:
+            return None
+        s = static_value(g, node.inputs[1])
+        zp_name = node.inputs[2] if len(node.inputs) > 2 else None
+        z = static_value(g, zp_name) if zp_name else np.zeros(1, np.float32)
+        if s is None or z is None or np.any(z != np.round(z)):
+            return None
+        # no zero-point input means a uint8 carrier (executor._quantize_linear)
+        signed = bool(np.issubdtype(z.dtype, np.signedinteger)) \
+            if zp_name else False
+        lo, hi = (-128.0, 127.0) if signed else (0.0, 255.0)
+        if len(seq) == 3:
+            clip = seq[1]
+            clo = static_value(g, clip.inputs[1])
+            chi = static_value(g, clip.inputs[2])
+            if clo is None or chi is None:
+                return None
+            lo, hi = float(clo), float(chi)
+        recovered = bitwidth_from_bounds(lo, hi, signed)
+        if recovered is None:
+            return None
+        nb, narrow = recovered
+        sh = g.get_shape(node.inputs[0])
+        lastdim = sh[-1] if sh else None
+        for p in (s, z):
+            if p.size != 1 and (lastdim is None or p.size != lastdim):
+                return None
+        return QDQMatch(
+            seq, node.inputs[0], dq.outputs[0],
+            np.asarray(s, np.float32).reshape(-1),
+            np.asarray(z, np.float32).reshape(-1), float(nb), signed, narrow,
+            "ROUND")
+
+    def emit(self, idx: int, match: QDQMatch, consts: dict,
+             ctx: LoweringContext) -> Segment:
+        return make_qdq_segment(idx, match, consts, ctx)

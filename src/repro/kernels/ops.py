@@ -9,7 +9,9 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from .quant_dequant import quant_dequant  # noqa: F401  (public re-export)
+from .quant_conv import (  # noqa: F401  (public re-exports)
+    extract_patches, im2col_weights, quant_conv2d)
+from .quant_dequant import quant_dequant  # noqa: F401
 from .quant_matmul import quant_matmul, quant_matmul_int4  # noqa: F401
 from . import ref
 

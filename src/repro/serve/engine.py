@@ -137,6 +137,13 @@ class CompiledGraphEngine:
         self.sample_shape = tuple(g.inputs[0].shape[1:])
         self.max_batch = max_batch
         self.queue: list[GraphRequest] = []
+        self._out_spec = None          # lazy eval_shape result (empty batch)
+        # fused-segment telemetry (includes the conv lowerings): how much of
+        # the served graph actually runs on the kernel tier
+        self.fused_counts = dict(self.plan.fused_counts)
+        self.conv_segments_fused = sum(
+            v for k, v in self.fused_counts.items()
+            if k.startswith("quant_conv"))
         self.cost_report = None
         if report_cost:
             # analysis-tier inference cost of the served model, logged once
@@ -148,12 +155,14 @@ class CompiledGraphEngine:
                 self.cost_report = infer_cost(g, ga=self.plan.analysis)
                 log.info(
                     "loaded %s: %d layers, %s MACs, %.3g BOPs, "
-                    "%s weight bits, %.1f KiB traffic/inference, fused=%s",
+                    "%s weight bits, %.1f KiB traffic/inference, fused=%s "
+                    "(%d conv segments on kernels, interp=%s)",
                     g.name, len(self.cost_report.layers),
                     f"{self.cost_report.macs:,}", self.cost_report.bops,
                     f"{int(self.cost_report.total_weight_bits):,}",
                     self.cost_report.total_mem_bytes / 1024,
-                    self.plan.fused_counts)
+                    self.fused_counts, self.conv_segments_fused,
+                    self.plan.interp_op_counts())
             except Exception:                  # cost is telemetry, not a gate
                 log.exception("cost analysis failed for %s", g.name)
 
@@ -167,17 +176,23 @@ class CompiledGraphEngine:
         self.queue.append(r)
         return r
 
+    def _pad_to_slot(self, x):
+        """Zero-pad a (<=max_batch, ...) chunk to the one static slot shape
+        every plan call uses — shared by run_pending and __call__ so both
+        paths hit the same jitted executable."""
+        if x.shape[0] == self.max_batch:
+            return x
+        pad = self.max_batch - x.shape[0]
+        return jnp.concatenate(
+            [x, jnp.zeros((pad,) + self.sample_shape, x.dtype)])
+
     def run_pending(self) -> int:
         """Flush the queue in max_batch-sized slots; returns #requests run."""
         n_done = 0
         while self.queue:
             batch = self.queue[:self.max_batch]
             self.queue = self.queue[self.max_batch:]
-            x = jnp.stack([r.x for r in batch])
-            if x.shape[0] < self.max_batch:          # pad to the static slot
-                pad = self.max_batch - x.shape[0]
-                x = jnp.concatenate(
-                    [x, jnp.zeros((pad,) + self.sample_shape, x.dtype)])
+            x = self._pad_to_slot(jnp.stack([r.x for r in batch]))
             out = self.plan({self.input_name: x})[self.output_name]
             for i, r in enumerate(batch):
                 r.result = out[i]
@@ -185,6 +200,39 @@ class CompiledGraphEngine:
         return n_done
 
     def __call__(self, x) -> np.ndarray:
-        """Synchronous single-batch convenience path."""
-        out = self.plan({self.input_name: jnp.asarray(x, jnp.float32)})
-        return np.asarray(out[self.output_name])
+        """Synchronous convenience path.
+
+        Routes through the same padded ``max_batch`` slot shape as
+        ``run_pending``: the batch is split into max_batch-sized chunks and
+        the tail chunk is zero-padded, so ad-hoc batch sizes reuse the one
+        jitted plan shape instead of each triggering a fresh retrace (a
+        (3, ...) call after an (8, ...) call used to recompile the whole
+        plan; now both hit the (max_batch, ...) executable).
+        """
+        x = jnp.asarray(x, jnp.float32)
+        unbatched = x.shape == self.sample_shape
+        if unbatched:
+            x = x[None]
+        if x.shape[1:] != self.sample_shape:
+            raise ValueError(
+                f"sample shape {x.shape[1:]} != {self.sample_shape}")
+        if x.shape[0] == 0:
+            # empty batch: abstract-eval the plan once for the output
+            # shape/dtype (no compute), return 0 rows of it
+            if self._out_spec is None:
+                sd = jax.eval_shape(
+                    lambda inp: self.plan(inp, jit=False),
+                    {self.input_name: jax.ShapeDtypeStruct(
+                        (self.max_batch,) + self.sample_shape, x.dtype)})
+                self._out_spec = sd[self.output_name]
+            spec = self._out_spec
+            return np.zeros((0,) + tuple(spec.shape[1:]), spec.dtype)
+        outs = []
+        for i in range(0, x.shape[0], self.max_batch):
+            chunk = x[i:i + self.max_batch]
+            n = chunk.shape[0]
+            out = self.plan(
+                {self.input_name: self._pad_to_slot(chunk)})[self.output_name]
+            outs.append(np.asarray(out[:n]))
+        result = np.concatenate(outs, axis=0)
+        return result[0] if unbatched else result

@@ -524,3 +524,49 @@ def test_engine_reports_cost_at_load(caplog):
     assert eng.cost_report is not None
     assert eng.cost_report.macs == 59_008
     assert any("59,008 MACs" in r.getMessage() for r in caplog.records)
+
+
+# ------------------------------------------- per-rule accumulator hook
+
+def test_kernel_accumulator_hook_matmul_and_conv():
+    """GraphAnalysis.kernel_accumulator — the lowering rules' accumulator
+    selection hook — returns (bits, exact_int32) for matmul and conv, with
+    the conv bound zero-padding-aware (pads widen each tap to include 0,
+    never shrinking the bound below the valid-window case)."""
+    rng = np.random.RandomState(0)
+    b = GraphBuilder("hook")
+    x = b.add_input("x", (1, 4, 6, 6))
+    h = b.quant(x, 1.0, 0.0, 8)                     # integer activations
+    w = b.add_initializer("w", (rng.randn(6, 4, 3, 3) * 2).astype(np.float32))
+    qw = b.quant(w, 1.0, 0.0, 4, narrow=True)
+    (y,) = b.add_node("Conv", [h, qw], 1,
+                      {"kernel_shape": [3, 3], "pads": [1, 1, 1, 1]})
+    b.mark_output(y)
+    g = run_pipeline(b.build(), "compile_prep")
+    ga = analysis.analyze(g)
+    conv = next(n for n in g.nodes if n.op_type == "Conv")
+    # scale 1.0 weights: the analysis' evaluated constant IS the integer
+    # carrier a lowering rule would stage
+    w_int = ga.constant(conv.inputs[1])
+    bits, exact = ga.kernel_accumulator(conv, w_int)
+    assert exact and bits <= 31
+    spec = ga.kernel_accumulator_spec(conv, w_int)
+    assert spec.bits == bits
+    # unpadded version of the same conv must not have a *larger* bound
+    conv_np = Node("Conv", list(conv.inputs), ["y2"],
+                   {"kernel_shape": [3, 3], "pads": [0, 0, 0, 0]})
+    spec_np = ga.kernel_accumulator_spec(conv_np, w_int)
+    assert spec_np.int_lo >= spec.int_lo and spec_np.int_hi <= spec.int_hi
+
+
+def test_kernel_accumulator_hook_unbounded_input_is_none():
+    rng = np.random.RandomState(1)
+    b = GraphBuilder("hook_unbounded")
+    x = b.add_input("x", (2, 8))                    # no quant: unbounded
+    w = b.add_initializer("w", rng.randn(8, 4).astype(np.float32))
+    (y,) = b.add_node("MatMul", [x, w], 1)
+    b.mark_output(y)
+    g = b.build()
+    ga = analysis.analyze(g)
+    mm = next(n for n in g.nodes if n.op_type == "MatMul")
+    assert ga.kernel_accumulator(mm, np.ones((8, 4), np.int8)) is None

@@ -29,20 +29,26 @@ def _compiled(plan, g, x):
     return np.asarray(plan({g.input_names[0]: x})[g.output_names[0]])
 
 
-def assert_zoo_parity(ref, out, act_step=0.5, atol=1e-4):
+def assert_zoo_parity(ref, out, act_step=0.5, atol=1e-4, mean_steps=1.0):
     """Exact-or-tie-flip agreement (see module docstring).
 
     A reassociation tie flip moves one activation by exactly one quant
     step; after propagation through the (random-weight, |s_w| << 1) final
     layers the output perturbation stays within a few activation steps.
-    Exact per-element parity is asserted separately on tie-free graphs.
+    With the conv layers now fused too (lowering/conv.py), every layer of
+    the CNV stack reassociates, so flips accumulate over ~9 fused layers
+    instead of 3 — conv-bearing callers pass ``mean_steps=1.5`` (measured:
+    <= 0.6 on CNV-w1a2, the worst case; a real math bug shows up orders of
+    magnitude larger) while the shallow TFC graphs keep the original 1.0
+    sensitivity.  Exact per-element parity is asserted separately on
+    tie-free graphs (tests/test_lowering.py covers the conv rule exactly).
     """
     diff = np.abs(ref - out)
     if diff.max() <= atol:
         return
     assert diff.max() <= 3 * act_step + atol, \
         f"diff {diff.max():.3f} exceeds the tie-flip envelope"
-    assert np.mean(diff) <= act_step, \
+    assert np.mean(diff) <= mean_steps * act_step, \
         f"mean diff {np.mean(diff):.3f} is not a measure-zero tie effect"
 
 
@@ -141,16 +147,45 @@ def test_compiled_matches_oracle_on_zoo(name, shape):
     # the quantized matmuls must actually hit the integer kernels
     assert plan.fused_counts.get("quant_matmul", 0) + \
         plan.fused_counts.get("quant_matmul_int4", 0) >= 3
+    if name.startswith("CNV"):
+        # conv-dominated models must run their convs on the kernel tier:
+        # every Conv lowers via the im2col rule, none stay interpreted
+        n_convs = sum(1 for n in g.nodes if n.op_type == "Conv")
+        assert sum(v for k, v in plan.fused_counts.items()
+                   if k.startswith("quant_conv")) == n_convs
+        assert plan.interp_op_counts().get("Conv", 0) == 0
     x = np.random.RandomState(7).randn(*shape).astype(np.float32)
-    assert_zoo_parity(_interp(gc, x), _compiled(plan, g, x))
+    assert_zoo_parity(_interp(gc, x), _compiled(plan, g, x),
+                      mean_steps=1.5 if name.startswith("CNV") else 1.0)
 
 
 def test_compiled_matches_oracle_mobilenet_small():
     g = zoo.build_mobilenet(4, 4, img=32)       # full topology, small image
     gc = transforms.cleanup(g)
     plan = compile_graph(g)
+    # all 27 convs — including the group=cin depthwise layers — fuse
+    n_convs = sum(1 for n in g.nodes if n.op_type == "Conv")
+    assert sum(v for k, v in plan.fused_counts.items()
+               if k.startswith("quant_conv")) == n_convs
+    assert plan.interp_op_counts().get("Conv", 0) == 0
+    assert any(s.meta.get("group", 1) > 1 for s in plan.segments
+               if s.kind.startswith("quant_conv"))      # depthwise proof
     x = np.random.RandomState(7).randn(1, 3, 32, 32).astype(np.float32)
-    assert_zoo_parity(_interp(gc, x), _compiled(plan, g, x))
+    assert_zoo_parity(_interp(gc, x), _compiled(plan, g, x), mean_steps=1.5)
+
+
+def test_zoo_cnv_qcdq_format_convs_fuse_and_match():
+    """CNV-style conv stack in QCDQ format: the QuantizeLinear->Clip->
+    DequantizeLinear weight chains resolve and the convs still lower."""
+    g = run_pipeline(zoo.build_cnv(2, 2), "compile_prep")
+    q = qonnx_to_qcdq(g)
+    plan = compile_graph(q)
+    n_convs = sum(1 for n in q.nodes if n.op_type == "Conv")
+    assert sum(v for k, v in plan.fused_counts.items()
+               if k.startswith("quant_conv")) == n_convs
+    assert plan.interp_op_counts().get("Conv", 0) == 0
+    x = np.random.RandomState(7).randn(1, 3, 32, 32).astype(np.float32)
+    assert_zoo_parity(_interp(q, x), _compiled(plan, q, x), mean_steps=1.5)
 
 
 def test_zoo_qcdq_format_compiles_and_matches():
@@ -358,3 +393,59 @@ def test_compiled_graph_engine_rejects_bad_shape():
     eng = CompiledGraphEngine(zoo.build_tfc(1, 1), max_batch=2)
     with pytest.raises(ValueError, match="sample shape"):
         eng.submit(np.zeros((3, 3), np.float32))
+    with pytest.raises(ValueError, match="sample shape"):
+        eng(np.zeros((2, 3, 3), np.float32))
+
+
+def test_engine_call_routes_through_padded_slot_shape():
+    """__call__ must feed the plan max_batch-padded slots — one static
+    jitted shape for every ad-hoc batch size — and slice the pad rows off."""
+    from repro.serve import CompiledGraphEngine
+    g = zoo.build_tfc(2, 2)
+    gc = transforms.cleanup(g)
+    eng = CompiledGraphEngine(g, max_batch=4)
+    seen = []
+    orig_plan = eng.plan
+
+    def spy(inputs, **kw):
+        seen.append(tuple(inputs["x"].shape))
+        return orig_plan(inputs, **kw)
+
+    eng.plan = spy
+    rng = np.random.RandomState(3)
+    for bsz in (1, 3, 4, 9):            # under / exact / multi-slot
+        x = rng.randn(bsz, 784).astype(np.float32)
+        out = eng(x)
+        assert out.shape == (bsz, 10)
+        assert_zoo_parity(_interp(gc, x), out)
+    assert seen and all(s == (4, 784) for s in seen)
+    assert len(seen) == 1 + 1 + 1 + 3   # ceil(bsz / max_batch) plan calls
+
+
+def test_engine_call_empty_batch_returns_empty_result():
+    from repro.serve import CompiledGraphEngine
+    eng = CompiledGraphEngine(zoo.build_tfc(2, 2), max_batch=4)
+    out = eng(np.zeros((0, 784), np.float32))
+    assert out.shape == (0, 10)
+
+
+def test_engine_call_accepts_single_unbatched_sample():
+    from repro.serve import CompiledGraphEngine
+    g = zoo.build_tfc(2, 2)
+    gc = transforms.cleanup(g)
+    eng = CompiledGraphEngine(g, max_batch=4)
+    x = np.random.RandomState(0).randn(784).astype(np.float32)
+    out = eng(x)
+    assert out.shape == (10,)
+    assert_zoo_parity(_interp(gc, x[None])[0], out)
+
+
+def test_engine_reports_conv_fusion_telemetry():
+    """The serving engine exposes how much of the graph runs on kernels —
+    conv segments included — for load-time telemetry."""
+    from repro.serve import CompiledGraphEngine
+    eng = CompiledGraphEngine(zoo.build_cnv(1, 1), max_batch=2,
+                              report_cost=False)
+    assert eng.conv_segments_fused == 6           # all CNV convs
+    assert sum(v for k, v in eng.fused_counts.items()
+               if k.startswith("quant_conv")) == 6

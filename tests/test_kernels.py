@@ -150,3 +150,132 @@ def test_quantize_weights_int4_end_to_end():
     exact = x @ w
     rel = float(jnp.linalg.norm(out - exact) / jnp.linalg.norm(exact))
     assert rel < 0.25, rel
+
+
+# ------------------------------------------- int4 blocking edge cases
+
+def test_pack_int4_rejects_odd_k():
+    w = np.random.RandomState(0).randint(-7, 8, size=(7, 8)).astype(np.int8)
+    with pytest.raises(AssertionError, match="K must be even"):
+        ops.pack_int4(jnp.asarray(w))
+
+
+@pytest.mark.parametrize("m,k,n,blocks", [
+    (3, 6, 5, (2, 2, 3)),      # odd bk -> the bk % 2 += 1 adjustment path
+    (2, 10, 4, (2, 2, 3)),     # odd bk AND K not a multiple of adjusted bk
+    (5, 14, 9, (4, 4, 6)),     # K=14 not a block multiple: padded nibbles
+    (1, 2, 1, (8, 8, 7)),      # degenerate tiny shapes, odd block request
+    (4, 258, 3, (4, 4, 129)),  # large odd bk adjusted to 130, kp=260
+], ids=["odd_bk", "odd_bk_partial_k", "partial_k", "tiny", "large_odd_bk"])
+def test_quant_matmul_int4_odd_blocks_and_partial_k(m, k, n, blocks):
+    """The bk%2 adjustment and K zero-nibble padding must stay exact: the
+    packed path must agree with the int8 path on non-block-multiple and
+    odd-block shapes (padding bytes hold two zero nibbles, contributing 0)."""
+    rng = np.random.RandomState(5)
+    x = jnp.asarray(rng.randn(m, k).astype(np.float32))
+    w = rng.randint(-8, 8, size=(k, n)).astype(np.int8)
+    packed = ops.pack_int4(jnp.asarray(w))
+    s = jnp.linspace(0.02, 0.09, n)
+    out = ops.quant_matmul_int4(x, packed, s, blocks=blocks)
+    want = ops.quant_matmul(x, jnp.asarray(w), s)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-4)
+
+
+def test_quant_matmul_int4_odd_blocks_with_bias():
+    rng = np.random.RandomState(6)
+    x = jnp.asarray(rng.randn(3, 10).astype(np.float32))
+    w = rng.randint(-8, 8, size=(10, 5)).astype(np.int8)
+    bias = jnp.asarray(rng.randn(5).astype(np.float32))
+    out = ops.quant_matmul_int4(x, ops.pack_int4(jnp.asarray(w)), 0.05, bias,
+                                blocks=(2, 2, 5))
+    want = ops.quant_matmul(x, jnp.asarray(w), 0.05, bias)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-4)
+
+
+# ---------------------------------------------------------- quant conv
+
+def _conv_ref(x, w, strides, pads, dilations, groups):
+    dn = jax.lax.conv_dimension_numbers(x.shape, w.shape,
+                                        ("NCHW", "OIHW", "NCHW"))
+    pad_pairs = [(pads[0], pads[2]), (pads[1], pads[3])]
+    return jax.lax.conv_general_dilated(
+        x, w, strides, pad_pairs, rhs_dilation=dilations,
+        dimension_numbers=dn, feature_group_count=groups)
+
+
+@pytest.mark.parametrize("cin,cout,img,k,stride,pads,dil,groups", [
+    (4, 6, 8, 3, 1, (0, 0, 0, 0), 1, 1),
+    (4, 6, 9, 3, 2, (1, 1, 1, 1), 1, 1),
+    (6, 8, 7, 1, 1, (0, 0, 0, 0), 1, 1),     # pointwise
+    (6, 8, 7, 1, 2, (0, 0, 0, 0), 1, 1),     # strided pointwise
+    (4, 4, 8, 3, 1, (1, 1, 1, 1), 1, 4),     # depthwise
+    (6, 9, 8, 3, 1, (1, 1, 1, 1), 1, 3),     # grouped, cout != cin
+    (4, 6, 10, 3, 1, (0, 0, 0, 0), 2, 1),    # dilated
+    (4, 6, 8, 3, 1, (2, 0, 1, 1), 1, 1),     # asymmetric pads
+], ids=["3x3", "stride_pad", "pw", "pw_s2", "dw", "grouped", "dilated",
+        "asym"])
+def test_quant_conv2d_matches_lax_conv(cin, cout, img, k, stride, pads, dil,
+                                       groups):
+    """im2col weights + patch extraction + integer matmul == the real conv
+    over the dequantized weights (exactly, modulo fp32 reassociation)."""
+    rng = np.random.RandomState(7)
+    w_int = rng.randint(-8, 8, size=(cout, cin // groups, k, k)) \
+        .astype(np.int8)
+    scale = np.linspace(0.02, 0.08, cout).astype(np.float32)
+    x = jnp.asarray(rng.randn(2, cin, img, img).astype(np.float32))
+    w2 = ops.im2col_weights(w_int, groups)
+    assert w2.shape == (cin * k * k, cout) and w2.dtype == np.int8
+    out = ops.quant_conv2d(x, jnp.asarray(w2), jnp.asarray(scale),
+                           kernel_shape=(k, k), strides=(stride, stride),
+                           pads=pads, dilations=(dil, dil))
+    w_fq = jnp.asarray(w_int, jnp.float32) * scale.reshape(-1, 1, 1, 1)
+    want = _conv_ref(x, w_fq, (stride, stride), pads, (dil, dil), groups)
+    assert out.shape == want.shape
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-4)
+
+
+def test_quant_conv2d_int4_packed_path_matches_int8():
+    rng = np.random.RandomState(8)
+    w_int = rng.randint(-8, 8, size=(6, 4, 3, 3)).astype(np.int8)
+    x = jnp.asarray(rng.randn(2, 4, 8, 8).astype(np.float32))
+    w2 = ops.im2col_weights(w_int)                  # K = 36, even
+    kw = dict(kernel_shape=(3, 3), strides=(1, 1), pads=(1, 1, 1, 1))
+    out8 = ops.quant_conv2d(x, jnp.asarray(w2), 0.05, **kw)
+    out4 = ops.quant_conv2d(x, ops.pack_int4(jnp.asarray(w2)), 0.05,
+                            packed=True, **kw)
+    np.testing.assert_allclose(np.asarray(out4), np.asarray(out8),
+                               rtol=2e-5, atol=2e-4)
+
+
+def test_quant_conv2d_bias():
+    rng = np.random.RandomState(9)
+    w_int = rng.randint(-8, 8, size=(5, 3, 3, 3)).astype(np.int8)
+    bias = jnp.asarray(rng.randn(5).astype(np.float32))
+    x = jnp.asarray(rng.randn(1, 3, 6, 6).astype(np.float32))
+    w2 = jnp.asarray(ops.im2col_weights(w_int))
+    out = ops.quant_conv2d(x, w2, 0.1, bias, kernel_shape=(3, 3))
+    plain = ops.quant_conv2d(x, w2, 0.1, kernel_shape=(3, 3))
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(plain) +
+        np.asarray(bias).reshape(1, 5, 1, 1), rtol=1e-6, atol=1e-6)
+
+
+def test_im2col_weights_block_diagonal_structure():
+    """Grouped weights: off-block entries are exactly zero and each group's
+    block is the plain im2col of its slice."""
+    rng = np.random.RandomState(10)
+    w = rng.randint(-8, 8, size=(4, 2, 3, 3)).astype(np.int8)   # groups=2
+    w2 = ops.im2col_weights(w, groups=2)
+    assert w2.shape == (4 * 9, 4)                  # cin=4 -> 36 rows
+    kg, opg = 2 * 9, 2
+    for gi in range(2):
+        block = w2[gi * kg:(gi + 1) * kg, gi * opg:(gi + 1) * opg]
+        np.testing.assert_array_equal(
+            block, w[gi * opg:(gi + 1) * opg].reshape(opg, -1).T)
+    w2[9 * 2:, :2] = 1                              # scribble on a block
+    w2 = ops.im2col_weights(w, groups=2)            # rebuild
+    off = w2[kg:, :opg]
+    assert np.all(off == 0) and np.all(w2[:kg, opg:] == 0)

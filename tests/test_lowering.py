@@ -1,0 +1,399 @@
+"""Lowering-rule registry mechanics + the quantized-Conv lowering rule.
+
+The registry half checks the declarative layer itself (priority order,
+registration errors, a custom rule end to end); the conv half checks the
+rule the registry refactor exists to enable — ``Quant(w) -> Conv [-> Relu]
+[-> Quant]`` onto the integer matmul kernels via im2col — against the
+interpreted oracle on tie-free scales (exact to float tolerance), across
+stride / padding / dilation / pointwise / grouped / depthwise configs.
+"""
+import numpy as np
+import pytest
+
+from repro.core import GraphBuilder, execute, transforms
+from repro.core import lowering
+from repro.core.compile import compile_graph
+from repro.core.formats import qonnx_to_qcdq, qonnx_to_quantized_op
+from repro.core.lowering import (LoweringRule, Segment, iter_rules,
+                                 register_rule, rules_for, unregister_rule)
+from repro.core.passes import run_pipeline
+
+# tie-free scales from the streamline property tests: no compiled-vs-interp
+# reassociation difference can land on an exact .5 rounding boundary
+W_SCALE, A_SCALE = 0.0517, 0.0973
+
+
+def _interp(g, x):
+    return np.asarray(execute(g, {g.input_names[0]: x})[g.output_names[0]])
+
+
+def _compiled(plan, g, x):
+    return np.asarray(plan({g.input_names[0]: x})[g.output_names[0]])
+
+
+# ------------------------------------------------------------- registry
+
+def test_builtin_rules_registered_in_priority_order():
+    names = [r.name for r in iter_rules()]
+    assert names.index("quant_matmul") < names.index("quant_conv") \
+        < names.index("quant_qdq") < names.index("qcdq_chain")
+    prios = [r.priority for r in iter_rules()]
+    assert prios == sorted(prios)
+
+
+def test_rules_for_filters_by_anchor_op():
+    assert [r.name for r in rules_for("Conv")] == ["quant_conv"]
+    assert "quant_matmul" in [r.name for r in rules_for("MatMul")]
+    assert "quant_matmul" in [r.name for r in rules_for("Gemm")]
+    assert rules_for("MaxPool") == []
+
+
+def test_duplicate_registration_raises():
+    class Dup(LoweringRule):
+        name = "quant_conv"            # collides with the built-in
+        anchor_ops = ("Conv",)
+
+    with pytest.raises(ValueError, match="already registered"):
+        register_rule(Dup)
+
+
+def test_unnamed_or_anchorless_rule_rejected():
+    class NoName(LoweringRule):
+        anchor_ops = ("Relu",)
+
+    class NoAnchor(LoweringRule):
+        name = "no_anchor"
+
+    with pytest.raises(ValueError, match="no name"):
+        register_rule(NoName)
+    with pytest.raises(ValueError, match="no anchor"):
+        register_rule(NoAnchor)
+
+
+def test_custom_rule_end_to_end():
+    """A downstream-registered rule participates in partitioning: a toy
+    Relu rule claims Relu anchors ahead of the interp fallback, and the
+    emitted segment runs inside the jitted plan."""
+
+    class ReluRule(LoweringRule):
+        name = "test_relu"
+        anchor_ops = ("Relu",)
+        priority = 5
+
+        def match(self, g, node, ctx):
+            return lowering.Match([node])
+
+        def emit(self, idx, m, consts, ctx):
+            x_name, out_name = m.nodes[0].inputs[0], m.nodes[0].outputs[0]
+
+            def run(consts, env):
+                import jax.numpy as jnp
+                x = env.get(x_name, consts.get(x_name))
+                env[out_name] = jnp.maximum(x, 0.0)
+
+            return Segment("test_relu", m.nodes, [x_name], [out_name], run)
+
+    b = GraphBuilder("relu_only")
+    x = b.add_input("x", (2, 8))
+    (y,) = b.add_node("Relu", [x], 1)
+    b.mark_output(y)
+    g = b.build()
+
+    register_rule(ReluRule)
+    try:
+        plan = compile_graph(g)
+        assert plan.fused_counts.get("test_relu") == 1
+        xv = np.random.RandomState(0).randn(2, 8).astype(np.float32)
+        np.testing.assert_allclose(_compiled(plan, g, xv),
+                                   np.maximum(xv, 0.0))
+    finally:
+        unregister_rule("test_relu")
+    # back to the interpreted fallback once unregistered
+    assert "test_relu" not in compile_graph(g).fused_counts
+
+
+# ------------------------------------------------------- conv rule: exact
+
+def _conv_graph(cin=4, cout=6, img=8, k=3, stride=1, pads=(0, 0, 0, 0),
+                group=1, dilation=1, w_bits=4, bias=False, relu=True,
+                a_bits=4, bipolar=False, per_channel=False, seed=0,
+                batch=2):
+    rng = np.random.RandomState(seed)
+    b = GraphBuilder("conv_t")
+    x = b.add_input("x", (batch, cin, img, img))
+    h = b.quant(x, A_SCALE, 0.0, 8)
+    w = (rng.randn(cout, cin // group, k, k) * 0.4).astype(np.float32)
+    wname = b.add_initializer("w", w)
+    if bipolar:
+        qw = b.bipolar_quant(wname, W_SCALE)
+    elif per_channel:
+        s = np.linspace(0.031, 0.071, cout, dtype=np.float32) \
+            .reshape(cout, 1, 1, 1)
+        qw = b.quant(wname, s, np.zeros((cout, 1, 1, 1), np.float32),
+                     w_bits, narrow=True)
+    else:
+        qw = b.quant(wname, W_SCALE, 0.0, w_bits, narrow=True)
+    ins = [h, qw]
+    if bias:
+        ins.append(b.add_initializer(
+            "b", (rng.randn(cout) * 0.2).astype(np.float32)))
+    attrs = {"kernel_shape": [k, k], "strides": [stride, stride],
+             "pads": list(pads)}
+    if group != 1:
+        attrs["group"] = group
+    if dilation != 1:
+        attrs["dilations"] = [dilation, dilation]
+    (h,) = b.add_node("Conv", ins, 1, attrs)
+    if relu:
+        (h,) = b.add_node("Relu", [h], 1)
+    if a_bits:
+        h = b.quant(h, A_SCALE, 0.0, a_bits)
+    b.mark_output(h)
+    return b.build()
+
+
+def _assert_conv_fused_and_exact(g, *, expect_kind_prefix="quant_conv",
+                                 seeds=range(3), **compile_kw):
+    plan = compile_graph(g, **compile_kw)
+    conv_fused = sum(v for kk, v in plan.fused_counts.items()
+                     if kk.startswith(expect_kind_prefix))
+    assert conv_fused >= 1, plan.describe()
+    assert plan.interp_op_counts().get("Conv", 0) == 0, plan.describe()
+    gc = transforms.cleanup(g)
+    shape = tuple(g.inputs[0].shape)
+    for seed in seeds:
+        x = np.random.RandomState(100 + seed).randn(*shape) \
+            .astype(np.float32)
+        np.testing.assert_allclose(_interp(gc, x), _compiled(plan, g, x),
+                                   atol=1e-4)
+    return plan
+
+
+@pytest.mark.parametrize("kw", [
+    dict(),                                            # plain 3x3 valid
+    dict(stride=2, pads=(1, 1, 1, 1)),                 # strided + padded
+    dict(k=1, cin=6, cout=8),                          # 1x1 pointwise
+    dict(k=1, cin=6, cout=8, stride=2),                # strided pointwise
+    dict(group=2, cin=4, cout=6),                      # grouped
+    dict(group=4, cin=4, cout=4, pads=(1, 1, 1, 1)),   # depthwise, padded
+    dict(dilation=2, img=10),                          # dilated
+    dict(pads=(2, 0, 1, 1)),                           # asymmetric pads
+    dict(bias=True),                                   # conv bias operand
+    dict(relu=False, a_bits=0),                        # bare conv output
+    dict(bipolar=True),                                # 1-bit weights
+    dict(per_channel=True),                            # per-channel scale
+    dict(w_bits=8),                                    # int8 carrier
+], ids=["3x3", "stride_pad", "pointwise", "pointwise_s2", "grouped",
+        "depthwise_pad", "dilated", "asym_pad", "bias", "no_epilogue",
+        "bipolar", "per_channel_scale", "w8"])
+def test_conv_lowering_matches_oracle_exact(kw):
+    _assert_conv_fused_and_exact(_conv_graph(**kw))
+
+
+def test_conv_relu_act_quant_fuse_into_one_segment():
+    g = _conv_graph()
+    plan = compile_graph(g)
+    seg = next(s for s in plan.segments if s.kind.startswith("quant_conv"))
+    ops = [n.op_type for n in seg.nodes]
+    assert ops == ["Quant", "Conv", "Relu", "Quant"]
+    # the epilogue Quant is inside the conv segment, not a separate kernel:
+    # the only quant_dequant segment left is the graph-input quantizer
+    assert plan.fused_counts.get("quant_dequant", 0) == 1
+
+
+def test_conv_odd_receptive_field_falls_back_to_int8_carrier():
+    """C·kH·kW odd (3·3·3=27) cannot pack two-per-byte: int8 carrier, not
+    the packed int4 kind, even for int4-valued weights."""
+    g = _conv_graph(cin=3, cout=6)
+    plan = _assert_conv_fused_and_exact(g)
+    assert "quant_conv" in plan.fused_counts
+    assert "quant_conv_int4" not in plan.fused_counts
+
+
+def test_conv_even_receptive_field_takes_int4_path():
+    g = _conv_graph(cin=4, cout=6, w_bits=4)
+    plan = _assert_conv_fused_and_exact(g, expect_kind_prefix="quant_conv_int4")
+    assert "quant_conv_int4" in plan.fused_counts
+
+
+def test_conv_without_analysis_still_lowers():
+    g = _conv_graph()
+    plan = _assert_conv_fused_and_exact(g, use_analysis=False)
+    assert all(s.meta.get("acc") == "float32" for s in plan.segments
+               if s.kind.startswith("quant_conv"))
+
+
+def test_conv_int32_accumulator_for_integer_activations():
+    """Integer-valued activations (scale 1.0) + proven dot bound < 2^31:
+    the analysis hook selects exact int32 accumulation for the conv."""
+    rng = np.random.RandomState(0)
+    b = GraphBuilder("conv_int_acc")
+    x = b.add_input("x", (1, 4, 6, 6))
+    h = b.quant(x, 1.0, 0.0, 8)                    # integer grid, scale 1
+    w = b.add_initializer("w", (rng.randn(6, 4, 3, 3) * 2).astype(np.float32))
+    qw = b.quant(w, 1.0, 0.0, 4, narrow=True)      # integer weights
+    (y,) = b.add_node("Conv", [h, qw], 1,
+                      {"kernel_shape": [3, 3], "strides": [1, 1],
+                       "pads": [1, 1, 1, 1]})
+    b.mark_output(y)
+    g = b.build()
+    plan = compile_graph(g)
+    seg = next(s for s in plan.segments if s.kind.startswith("quant_conv"))
+    assert seg.meta["acc"] == "int32"
+    assert seg.meta["acc_bits"] <= 31
+    xv = (rng.randn(1, 4, 6, 6) * 40).astype(np.float32)
+    ref = _interp(transforms.cleanup(g), xv)
+    np.testing.assert_array_equal(ref, _compiled(plan, g, xv))
+
+
+def test_conv_nhwc_layout_stays_interpreted():
+    """The im2col lowering is NCHW-only; a channels-last Conv must keep the
+    interpreted fallback rather than silently transposing."""
+    g = _conv_graph()
+    for n in g.nodes:
+        if n.op_type == "Conv":
+            n.attrs["data_layout"] = "NHWC"
+    plan = compile_graph(g, run_cleanup=False)
+    assert not any(k.startswith("quant_conv") for k in plan.fused_counts)
+
+
+def test_conv_shared_weight_chain_not_absorbed_but_still_lowered():
+    """A weight-Quant read by two convs can't be covered by either segment,
+    but both convs still lower (the chain folds to a const for any other
+    reader)."""
+    rng = np.random.RandomState(0)
+    b = GraphBuilder("shared_w")
+    x = b.add_input("x", (1, 4, 6, 6))
+    h = b.quant(x, A_SCALE, 0.0, 8)
+    w = b.add_initializer("w", (rng.randn(4, 4, 3, 3) * 0.4)
+                          .astype(np.float32))
+    qw = b.quant(w, W_SCALE, 0.0, 4, narrow=True)
+    (c1,) = b.add_node("Conv", [h, qw], 1,
+                       {"kernel_shape": [3, 3], "pads": [1, 1, 1, 1]})
+    (c2,) = b.add_node("Conv", [c1, qw], 1,
+                       {"kernel_shape": [3, 3], "pads": [1, 1, 1, 1]})
+    b.mark_output(c2)
+    g = b.build()
+    plan = compile_graph(g)
+    conv_segs = [s for s in plan.segments
+                 if s.kind.startswith("quant_conv")]
+    assert len(conv_segs) == 2
+    assert all("Quant" not in [n.op_type for n in s.nodes]
+               for s in conv_segs)
+    xv = rng.randn(1, 4, 6, 6).astype(np.float32)
+    np.testing.assert_allclose(_interp(transforms.cleanup(g), xv),
+                               _compiled(plan, g, xv), atol=1e-4)
+
+
+def test_conv_1d_scale_broadcasts_along_kw_and_declines():
+    """A bare (O,)-shaped weight scale with O == kW is *per-kW* under the
+    oracle's right-aligned broadcasting, not per-output-channel — the conv
+    rule must decline (interp fallback keeps parity) rather than silently
+    dequantize per channel."""
+    rng = np.random.RandomState(0)
+    b = GraphBuilder("kw_scale")
+    x = b.add_input("x", (1, 4, 6, 6))
+    h = b.quant(x, A_SCALE, 0.0, 8)
+    w = b.add_initializer("w", (rng.randn(3, 4, 3, 3) * 0.4)
+                          .astype(np.float32))
+    s = np.asarray([0.031, 0.047, 0.071], np.float32)      # (3,) == kW
+    qw = b.quant(w, s, 0.0, 4, narrow=True)
+    (y,) = b.add_node("Conv", [h, qw], 1,
+                      {"kernel_shape": [3, 3], "pads": [0, 0, 0, 0]})
+    b.mark_output(y)
+    g = b.build()
+    plan = compile_graph(g)
+    assert not any(k.startswith("quant_conv") for k in plan.fused_counts), \
+        plan.describe()
+    xv = rng.randn(1, 4, 6, 6).astype(np.float32)
+    np.testing.assert_allclose(_interp(transforms.cleanup(g), xv),
+                               _compiled(plan, g, xv), atol=1e-4)
+
+
+def test_conv_nonbroadcastable_scale_declines_match_instead_of_raising():
+    """An ONNX-style per-axis (O,) scale that doesn't broadcast onto the
+    weight must make the matcher return None, not blow up compile_graph
+    mid-partitioning (the graph is equally un-executable by the oracle;
+    the error belongs to execution, not matching)."""
+    from repro.core.graph import Node as GNode
+    from repro.core.lowering import (LoweringContext, get_rule)
+    rng = np.random.RandomState(1)
+    b = GraphBuilder("per_axis_scale")
+    x = b.add_input("x", (1, 4, 6, 6))
+    w = b.add_initializer("w", (rng.randn(5, 4, 3, 3) * 0.4)
+                          .astype(np.float32))
+    s = b.add_initializer("s", np.linspace(0.03, 0.07, 5)
+                          .astype(np.float32))             # (5,): no broadcast
+    z = b.add_initializer("z", np.zeros(5, np.int8))
+    (q,) = b.add_node("QuantizeLinear", [w, s, z], 1)
+    (dq,) = b.add_node("DequantizeLinear", [q, s, z], 1)
+    (y,) = b.add_node("Conv", [x, dq], 1,
+                      {"kernel_shape": [3, 3], "pads": [0, 0, 0, 0]})
+    b.mark_output(y)
+    g = b.build()
+    conv = next(n for n in g.nodes if n.op_type == "Conv")
+    assert get_rule("quant_conv").match(g, conv, LoweringContext()) is None
+    # the high-level Quant path must decline identically
+    b2 = GraphBuilder("per_axis_quant")
+    x2 = b2.add_input("x", (1, 4, 6, 6))
+    w2 = b2.add_initializer("w", (rng.randn(5, 4, 3, 3) * 0.4)
+                            .astype(np.float32))
+    qw2 = b2.quant(w2, np.linspace(0.03, 0.07, 5).astype(np.float32),
+                   0.0, 4, narrow=True)
+    (y2,) = b2.add_node("Conv", [x2, qw2], 1,
+                        {"kernel_shape": [3, 3], "pads": [0, 0, 0, 0]})
+    b2.mark_output(y2)
+    g2 = b2.build()
+    conv2 = next(n for n in g2.nodes if n.op_type == "Conv")
+    assert get_rule("quant_conv").match(g2, conv2, LoweringContext()) is None
+
+
+# --------------------------------------------------- conv in all formats
+
+def test_conv_qcdq_weight_chain_lowers():
+    """QCDQ-format conv weights (QuantizeLinear -> Clip -> DequantizeLinear)
+    resolve to the same integer carriers and fuse."""
+    g = run_pipeline(_conv_graph(cin=4, cout=6, w_bits=4), "compile_prep")
+    q = qonnx_to_qcdq(g)
+    plan = compile_graph(q)
+    conv_fused = sum(v for k, v in plan.fused_counts.items()
+                     if k.startswith("quant_conv"))
+    assert conv_fused == 1, plan.describe()
+    assert plan.interp_op_counts().get("Conv", 0) == 0
+    for seed in range(3):
+        x = np.random.RandomState(seed).randn(2, 4, 8, 8).astype(np.float32)
+        np.testing.assert_allclose(_interp(q, x), _compiled(plan, q, x),
+                                   atol=1e-4)
+
+
+def test_conv_quantized_op_format_parity():
+    """Quantized-op lowering rewrites the MatMul head onto MatMulInteger
+    (§IV has no integer Conv); the Quant->Conv block survives unchanged and
+    still fuses, parity holds over the mixed graph."""
+    rng = np.random.RandomState(0)
+    b = GraphBuilder("conv_qop")
+    x = b.add_input("x", (2, 4, 6, 6))
+    h = b.quant(x, A_SCALE, 0.0, 8)
+    w = b.add_initializer("w", (rng.randn(6, 4, 3, 3) * 0.4)
+                          .astype(np.float32))
+    qw = b.quant(w, W_SCALE, 0.0, 4, narrow=True)
+    (h,) = b.add_node("Conv", [h, qw], 1,
+                      {"kernel_shape": [3, 3], "strides": [1, 1],
+                       "pads": [0, 0, 0, 0]})
+    (h,) = b.add_node("Relu", [h], 1)
+    (h,) = b.add_node("Flatten", [h], 1, {"axis": 1})
+    h = b.quant(h, A_SCALE, 0.0, 4)                 # feeds the MatMul
+    wm = b.add_initializer("wm", (rng.randn(96, 5) * 0.4).astype(np.float32))
+    qwm = b.quant(wm, W_SCALE, 0.0, 4, narrow=True)
+    (h,) = b.add_node("MatMul", [h, qwm], 1)
+    b.mark_output(h)
+    g = run_pipeline(b.build(), "compile_prep")
+    qo = qonnx_to_quantized_op(g)
+    assert any(n.op_type == "MatMulInteger" for n in qo.nodes)
+    plan = compile_graph(qo)
+    assert sum(v for k, v in plan.fused_counts.items()
+               if k.startswith("quant_conv")) == 1
+    for seed in range(3):
+        x = np.random.RandomState(seed).randn(2, 4, 6, 6).astype(np.float32)
+        np.testing.assert_allclose(_interp(qo, x), _compiled(plan, qo, x),
+                                   atol=1e-4)
