@@ -11,7 +11,10 @@ interpreted fallback.
 wall times, speedup, fused-segment counts) so the perf trajectory is
 tracked across PRs; ``--check-conv MODEL`` is the CI regression gate that
 asserts the conv lowering still fires (≥1 conv segment fused, 0 Conv nodes
-left interpreted).
+left interpreted); ``--check-grouped MODEL`` additionally gates the
+grouped/depthwise kernel tier (every group>1 conv on the dedicated
+kernels, 0 block-diagonal carriers, cost-report MACs below the
+dense-equivalent block-diagonal count by exactly the reclaimed amount).
 """
 from __future__ import annotations
 
@@ -104,12 +107,54 @@ def check_conv_lowering(name: str) -> dict:
     }
 
 
+def check_grouped_lowering(name: str) -> dict:
+    """Regression gate for the grouped/depthwise kernel tier.
+
+    ``name`` (MobileNet-w4a4 in CI) must compile with
+
+      * every Conv fused on the kernel tier (0 interpreted),
+      * every group>1 conv on the dedicated grouped/depthwise kernels —
+        0 block-diagonal dense carriers left for grouped layers,
+      * a positive reclaimed-MAC count whose analysis-side mirror agrees:
+        the cost report's MAC total (true I/g·kH·kW contraction, no
+        O(groups) inflation) must sit below the dense-equivalent
+        block-diagonal number by exactly the plan's reclaimed MACs.
+    """
+    from repro.analysis import infer_cost
+
+    g = zoo.ZOO[name]()
+    plan = compile_graph(g)
+    n_convs = sum(1 for n in plan.graph.nodes if n.op_type == "Conv")
+    conv_fused = sum(v for k, v in plan.fused_counts.items()
+                     if k.startswith("quant_conv"))
+    conv_interp = plan.interp_op_counts().get("Conv", 0)
+    stats = plan.grouped_conv_stats()
+    report = infer_cost(plan.graph, ga=plan.analysis)
+    macs_drop = report.dense_equiv_macs - report.macs
+    return {
+        "model": name,
+        "conv_nodes": n_convs,
+        "conv_segments_fused": conv_fused,
+        "conv_nodes_interpreted": conv_interp,
+        "fused_counts": dict(sorted(plan.fused_counts.items())),
+        "grouped_stats": stats,
+        "report_macs": report.macs,
+        "dense_equiv_macs": report.dense_equiv_macs,
+        "ok": (conv_fused == n_convs and conv_interp == 0 and
+               stats["grouped_segments"] >= 1 and
+               stats["block_diagonal_grouped"] == 0 and
+               stats["reclaimed_macs"] > 0 and
+               macs_drop == stats["reclaimed_macs"]),
+    }
+
+
 def main(argv=None) -> int:
     """CLI used by the CI smoke job: exit 0 iff every row was produced and
-    every ``--check-conv`` gate holds.
+    every ``--check-conv`` / ``--check-grouped`` gate holds.
 
         python benchmarks/bench_compile.py [--quick] [--json PATH]
                                            [--check-conv MODEL ...]
+                                           [--check-grouped MODEL ...]
     """
     import argparse
     import json
@@ -124,6 +169,12 @@ def main(argv=None) -> int:
                     default=[],
                     help="assert MODEL compiles with ≥1 conv segment fused "
                          "and 0 interpreted Conv nodes (repeatable)")
+    ap.add_argument("--check-grouped", metavar="MODEL", action="append",
+                    default=[],
+                    help="assert MODEL's grouped convs all lower onto the "
+                         "grouped/depthwise kernels (0 block-diagonal "
+                         "carriers) and the cost report's MAC count drops "
+                         "vs the dense-equivalent number (repeatable)")
     args = ap.parse_args(argv)
     cases = QUICK_CASES if args.quick else CASES
     rows, records = run_detailed(cases)
@@ -131,19 +182,29 @@ def main(argv=None) -> int:
         print(row)
 
     ok = len(rows) == 3 * len(cases)
-    checks = []
-    for name in args.check_conv:
+    checks, grouped_checks = [], []
+    for name, check, bucket, tag in (
+            [(n, check_conv_lowering, checks, "check_conv")
+             for n in args.check_conv] +
+            [(n, check_grouped_lowering, grouped_checks, "check_grouped")
+             for n in args.check_grouped]):
         # a failing/crashing check must still reach the JSON artifact —
         # that's exactly when CI needs the diagnostics
         try:
-            c = check_conv_lowering(name)
+            c = check(name)
         except Exception as e:  # noqa: BLE001  (unknown model, compile crash)
             c = {"model": name, "ok": False, "error": f"{type(e).__name__}: {e}"}
-        checks.append(c)
+        bucket.append(c)
         verdict = "OK" if c["ok"] else "FAIL"
         detail = c.get("error") or (f"interp_convs="
                                     f"{c['conv_nodes_interpreted']}")
-        print(f"check_conv/{name},{c.get('conv_segments_fused', 0)},"
+        if not c.get("error") and tag == "check_grouped":
+            gs = c["grouped_stats"]
+            detail += (f";block_diag={gs['block_diagonal_grouped']};"
+                       f"reclaimed_macs={gs['reclaimed_macs']};"
+                       f"macs={c['report_macs']}<"
+                       f"dense_equiv={c['dense_equiv_macs']}")
+        print(f"{tag}/{name},{c.get('conv_segments_fused', 0)},"
               f"{detail};{verdict}")
         ok = ok and c["ok"]
 
@@ -151,6 +212,8 @@ def main(argv=None) -> int:
         payload = {"models": records}
         if checks:
             payload["conv_checks"] = checks
+        if grouped_checks:
+            payload["grouped_checks"] = grouped_checks
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2, sort_keys=True)
         print(f"# wrote {args.json}")

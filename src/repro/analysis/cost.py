@@ -35,7 +35,7 @@ from .ranges import GraphAnalysis, analyze
 class LayerReport:
     name: str
     op_type: str
-    macs: int
+    macs: int                   # true contraction: I/g·kH·kW per output
     bops: float
     weights: int
     weight_bits: float          # total bits of this layer's weights
@@ -45,6 +45,7 @@ class LayerReport:
     b_a: float = 32.0
     acc_bits: Optional[int] = None
     mem_bytes: float = 0.0
+    groups: int = 1             # Conv group attribute (1 for FC layers)
 
 
 @dataclass
@@ -73,6 +74,21 @@ class CostReport:
     def total_mem_bytes(self):
         return sum(l.mem_bytes for l in self.layers)
 
+    @property
+    def dense_equiv_macs(self):
+        """MACs if every grouped conv ran as a dense (block-diagonal
+        im2col) matmul: each grouped layer inflates by its group count.
+        This is what the kernel tier actually executed before the dedicated
+        grouped/depthwise kernels existed; ``macs`` is the true
+        I/g·kH·kW-contraction count."""
+        return sum(l.macs * l.groups for l in self.layers)
+
+    @property
+    def grouped_macs_reclaimed(self):
+        """MACs the grouped/depthwise kernels reclaim vs the dense
+        block-diagonal carrier (0 when the model has no grouped convs)."""
+        return self.dense_equiv_macs - self.macs
+
     def table(self) -> str:
         head = (f"{'layer':24s} {'op':8s} {'MACs':>12s} {'wbits':>5s} "
                 f"{'abits':>5s} {'acc':>4s} {'BOPs':>12s} {'KiB':>9s}")
@@ -91,15 +107,23 @@ class CostReport:
         lines.append(
             f"weights={self.weights:,}  total_weight_bits="
             f"{int(self.total_weight_bits):,}")
+        reclaimed = self.grouped_macs_reclaimed
+        if reclaimed:
+            n_grouped = sum(1 for l in self.layers if l.groups > 1)
+            lines.append(
+                f"grouped: {n_grouped} layers, {reclaimed:,} MACs reclaimed "
+                f"by the grouped/depthwise kernels vs a dense block-diagonal "
+                f"carrier ({self.dense_equiv_macs:,} dense-equivalent)")
         return "\n".join(lines)
 
     def csv(self) -> str:
-        rows = ["layer,op,macs,weights,b_w,b_a,acc_bits,bops,mem_bytes"]
+        rows = ["layer,op,macs,weights,b_w,b_a,acc_bits,bops,mem_bytes,"
+                "groups"]
         for l in self.layers:
             rows.append(f"{l.name},{l.op_type},{l.macs},{l.weights},"
                         f"{l.b_w:g},{l.b_a:g},"
                         f"{l.acc_bits if l.acc_bits is not None else ''},"
-                        f"{l.bops:.6g},{l.mem_bytes:.1f}")
+                        f"{l.bops:.6g},{l.mem_bytes:.1f},{l.groups}")
         return "\n".join(rows)
 
 
@@ -164,10 +188,12 @@ def infer_cost(graph: QonnxGraph, act_bits: float = 8.0,
             mem += _numel(in_shape) * b_a / 8.0
         if out_shape is not None:
             mem += _numel(out_shape) * 32.0 / 8.0    # fp32 accumulator out
+        groups = int(node.attrs.get("group", 1)) if node.op_type == "Conv" \
+            else 1
         report.layers.append(LayerReport(
             base.name, node.op_type, base.macs, base.bops, base.weights,
             base.weight_bits, w_dt, a_dt, b_w, b_a,
-            None if spec is None else spec.bits, mem))
+            None if spec is None else spec.bits, mem, groups))
     return report
 
 

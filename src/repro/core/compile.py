@@ -121,6 +121,29 @@ class CompiledPlan:
                 out[n.op_type] = out.get(n.op_type, 0) + 1
         return out
 
+    def grouped_conv_stats(self) -> dict:
+        """Grouped/depthwise-lowering telemetry aggregated over segments.
+
+        ``reclaimed_macs`` / ``carrier_bytes_saved`` — what the dedicated
+        grouped/depthwise kernels saved vs the dense block-diagonal im2col
+        fallback (per inference sample);  ``grouped_segments`` — segments on
+        those kernels;  ``block_diagonal_grouped`` — group>1 convs that
+        still ride the dense carrier (the fallback path; 0 on the Table III
+        models is the bench_compile ``--check-grouped`` gate).
+        """
+        out = {"grouped_segments": 0, "block_diagonal_grouped": 0,
+               "reclaimed_macs": 0, "carrier_bytes_saved": 0}
+        for s in self.segments:
+            if s.kind in ("quant_conv", "quant_conv_int4") and \
+                    s.meta.get("group", 1) > 1:
+                out["block_diagonal_grouped"] += 1
+            if s.kind.startswith(("quant_conv_grouped", "quant_conv_dw")):
+                out["grouped_segments"] += 1
+                out["reclaimed_macs"] += s.meta.get("reclaimed_macs", 0)
+                out["carrier_bytes_saved"] += s.meta.get(
+                    "carrier_bytes_saved", 0)
+        return out
+
     def describe(self) -> str:
         head = (f"CompiledPlan({self.graph.name}): {len(self.segments)} "
                 f"segments over {len(self.graph.nodes)} nodes "

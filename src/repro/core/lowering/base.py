@@ -24,12 +24,18 @@ const pruning, stats and the jitted plan emission are shared.
 
 Built-in rules (imported by ``lowering/__init__``):
 
-  priority 10  quant_matmul   Quant/BipolarQuant/QCDQ(w) -> MatMul/Gemm
-                              [-> Mul][-> Add]       (lowering/matmul.py)
-  priority 20  quant_conv     Quant/BipolarQuant/QCDQ(w) -> Conv
-                              [-> Relu][-> Quant]    (lowering/conv.py)
-  priority 30  quant_qdq      activation Quant       (lowering/qdq.py)
-  priority 40  qcdq_chain     QuantizeLinear [-> Clip] -> DequantizeLinear
+  priority 10  quant_matmul        Quant/BipolarQuant/QCDQ(w) -> MatMul/Gemm
+                                   [-> Mul][-> Add]    (lowering/matmul.py)
+  priority 15  quant_grouped_conv  the Conv pattern below with group > 1 ->
+                                   per-group / depthwise kernels
+                                   (lowering/grouped_conv.py)
+  priority 20  quant_conv          Quant/BipolarQuant/QCDQ(w) -> Conv
+                                   [-> Relu][-> Quant] (lowering/conv.py;
+                                   block-diagonal fallback for group counts
+                                   the grouped rule declines)
+  priority 30  quant_qdq           activation Quant    (lowering/qdq.py)
+  priority 40  qcdq_chain          QuantizeLinear [-> Clip]
+                                   -> DequantizeLinear
 """
 from __future__ import annotations
 

@@ -14,8 +14,7 @@ How it lowers (FINN-R / TVM-quantization style):
   * the integer conv weights (O, I/g, kH, kW) are reshaped **at compile
     time** into a (C·kH·kW, O) matmul operand
     (``kernels.im2col_weights``) — block-diagonal for grouped/depthwise
-    convs (MobileNet's ``group=cin`` layers), so the MXU kernels see one
-    dense int8/int4 carrier;
+    convs, so the MXU kernels see one dense int8/int4 carrier;
   * at trace time the activation is unfolded into im2col patches and fed
     through ``kernels.quant_conv2d`` -> ``quant_matmul[_int4]``; stride,
     padding, dilation and 1x1-pointwise all reduce to how the patches are
@@ -28,6 +27,19 @@ How it lowers (FINN-R / TVM-quantization style):
     conv dot-product bound (``GraphAnalysis.kernel_accumulator`` with the
     *conv-shaped* integer weights — border windows replace taps with 0 and
     the bound accounts for it).
+
+Grouped/depthwise convs normally lower through the dedicated per-group /
+depthwise kernels (``lowering/grouped_conv.py``, priority 15, i.e. tried
+first); this dense rule's block-diagonal carrier is the **fallback** for
+group counts those kernels decline — correct for any ``group``, at
+O(groups) extra MACs/carrier bytes.
+
+``match_conv_common`` holds the shared half of the pattern — attribute
+gates, the Quant/BipolarQuant/QCDQ weight-chain resolution
+(``lowering/weights.py``), scale-granularity checks, bias, and the
+[-> Relu] [-> Quant] epilogue absorption — so the grouped rule matches the
+exact same graph neighbourhoods and differs only in carrier layout and
+kernel choice.
 
 Unsupported shapes (NHWC layout, auto_pad, per-input-channel scales,
 non-constant weights/bias, 1-D/3-D convs) simply don't match and stay on
@@ -46,9 +58,9 @@ from ..graph import Node, QonnxGraph
 from .base import (LoweringContext, LoweringRule, Segment, conv_channel_scale,
                    register_rule, select_accumulator, sole_consumer,
                    static_value)
-from .qdq import static_act_quant_params
-from .weights import (KernelMatch, chain_absorbable, resolve_quant_weight,
-                      stage_kernel_carriers)
+from .qdq import stage_qdq_epilogue, static_act_quant_params
+from .weights import (KernelMatch, QuantWeight, chain_absorbable,
+                      resolve_quant_weight, stage_kernel_carriers)
 
 
 @dataclass
@@ -63,14 +75,22 @@ class ActQuantParams:
 
 
 @dataclass
-class QuantConvMatch(KernelMatch):
-    kernel_shape: tuple = (1, 1)
-    strides: tuple = (1, 1)
-    pads: tuple = (0, 0, 0, 0)
-    dilations: tuple = (1, 1)
-    group: int = 1
-    relu: bool = False
-    act: Optional[ActQuantParams] = None
+class ConvNeighbourhood:
+    """Shared result of ``match_conv_common``: the resolved weight chain,
+    normalized conv attributes, and the absorbed epilogue — everything a
+    conv-lowering rule needs except its carrier layout."""
+    qw: QuantWeight
+    nodes: list[Node]            # covered nodes (chain? + conv + epilogue)
+    out: str                     # tensor the fused segment produces
+    scale: np.ndarray            # () or per-output-channel (O,)
+    bias: Optional[np.ndarray]
+    kernel_shape: tuple
+    strides: tuple
+    pads: tuple
+    dilations: tuple
+    group: int
+    relu: bool
+    act: Optional[ActQuantParams]
 
 
 def _act_quant_params(g: QonnxGraph, node: Node) -> Optional[ActQuantParams]:
@@ -89,6 +109,78 @@ def _act_quant_params(g: QonnxGraph, node: Node) -> Optional[ActQuantParams]:
         np.asarray(z, np.float32).reshape(-1), nb, signed, narrow, rmode)
 
 
+def match_conv_common(g: QonnxGraph, node: Node,
+                      ctx: LoweringContext) -> Optional[ConvNeighbourhood]:
+    """The carrier-agnostic half of the quantized-Conv pattern.
+
+    Resolves the weight chain, validates attributes/granularities, and
+    absorbs the [-> Relu] [-> Quant] epilogue.  Returns None when the Conv
+    can't lower onto *any* integer-carrier kernel; the caller decides the
+    carrier layout (dense im2col, per-group, depthwise taps)."""
+    if node.attrs.get("data_layout", "NCHW") != "NCHW":
+        return None
+    if node.attrs.get("auto_pad", "NOTSET") != "NOTSET":
+        return None
+    qw = resolve_quant_weight(g, node.inputs[1], ctx.analysis)
+    if qw is None or qw.w_int.ndim != 4:
+        return None                           # 2-D convs only
+    o, ipg, kh, kw = qw.w_int.shape
+    group = int(node.attrs.get("group", 1))
+    if group < 1 or o % group:
+        return None
+    ks = tuple(int(v) for v in node.attrs.get("kernel_shape", (kh, kw)))
+    if ks != (kh, kw):
+        return None
+    strides = tuple(int(v) for v in node.attrs.get("strides", (1, 1)))
+    pads = tuple(int(v) for v in node.attrs.get("pads", (0, 0, 0, 0)))
+    dilations = tuple(int(v) for v in node.attrs.get("dilations", (1, 1)))
+    if len(strides) != 2 or len(pads) != 4 or len(dilations) != 2:
+        return None
+    scale = conv_channel_scale(qw.scale, qw.w_int.shape)
+    if scale is None:
+        return None
+    bias = None
+    if len(node.inputs) > 2 and node.inputs[2]:
+        b = static_value(g, node.inputs[2])
+        if b is None or b.size != o:
+            return None
+        bias = np.asarray(b, np.float32).reshape(-1)
+
+    nodes = list(qw.chain) + [node] if chain_absorbable(g, qw.chain, node) \
+        else [node]
+
+    # epilogue absorption: [-> Relu] [-> Quant(act)]
+    out = node.outputs[0]
+    relu = False
+    act = None
+    nxt = sole_consumer(g, out)
+    if nxt is not None and nxt.op_type == "Relu":
+        relu = True
+        nodes.append(nxt)
+        out = nxt.outputs[0]
+        nxt = sole_consumer(g, out)
+    if nxt is not None and nxt.op_type == "Quant":
+        act = _act_quant_params(g, nxt)
+        if act is not None:
+            nodes.append(nxt)
+            out = nxt.outputs[0]
+
+    return ConvNeighbourhood(
+        qw, nodes, out, np.asarray(scale, np.float32), bias,
+        ks, strides, pads, dilations, group, relu, act)
+
+
+@dataclass
+class QuantConvMatch(KernelMatch):
+    kernel_shape: tuple = (1, 1)
+    strides: tuple = (1, 1)
+    pads: tuple = (0, 0, 0, 0)
+    dilations: tuple = (1, 1)
+    group: int = 1
+    relu: bool = False
+    act: Optional[ActQuantParams] = None
+
+
 @register_rule
 class QuantConvRule(LoweringRule):
     name = "quant_conv"
@@ -99,64 +191,19 @@ class QuantConvRule(LoweringRule):
               ctx: LoweringContext) -> Optional[QuantConvMatch]:
         from repro.kernels.quant_conv import im2col_weights
 
-        if node.attrs.get("data_layout", "NCHW") != "NCHW":
+        nb = match_conv_common(g, node, ctx)
+        if nb is None:
             return None
-        if node.attrs.get("auto_pad", "NOTSET") != "NOTSET":
-            return None
-        qw = resolve_quant_weight(g, node.inputs[1], ctx.analysis)
-        if qw is None or qw.w_int.ndim != 4:
-            return None                           # 2-D convs only
-        o, ipg, kh, kw = qw.w_int.shape
-        group = int(node.attrs.get("group", 1))
-        if group < 1 or o % group:
-            return None
-        ks = tuple(int(v) for v in node.attrs.get("kernel_shape", (kh, kw)))
-        if ks != (kh, kw):
-            return None
-        strides = tuple(int(v) for v in node.attrs.get("strides", (1, 1)))
-        pads = tuple(int(v) for v in node.attrs.get("pads", (0, 0, 0, 0)))
-        dilations = tuple(int(v) for v in node.attrs.get("dilations", (1, 1)))
-        if len(strides) != 2 or len(pads) != 4 or len(dilations) != 2:
-            return None
-        scale = conv_channel_scale(qw.scale, qw.w_int.shape)
-        if scale is None:
-            return None
-        bias = None
-        if len(node.inputs) > 2 and node.inputs[2]:
-            b = static_value(g, node.inputs[2])
-            if b is None or b.size != o:
-                return None
-            bias = np.asarray(b, np.float32).reshape(-1)
-
-        w2 = im2col_weights(qw.w_int, group)       # (C·kH·kW, O) int8
-        int4_ok = qw.int4_values and w2.shape[0] % 2 == 0
-        nodes = list(qw.chain) + [node] if chain_absorbable(g, qw.chain, node) \
-            else [node]
-
-        # epilogue absorption: [-> Relu] [-> Quant(act)]
-        out = node.outputs[0]
-        relu = False
-        act = None
-        nxt = sole_consumer(g, out)
-        if nxt is not None and nxt.op_type == "Relu":
-            relu = True
-            nodes.append(nxt)
-            out = nxt.outputs[0]
-            nxt = sole_consumer(g, out)
-        if nxt is not None and nxt.op_type == "Quant":
-            act = _act_quant_params(g, nxt)
-            if act is not None:
-                nodes.append(nxt)
-                out = nxt.outputs[0]
+        w2 = im2col_weights(nb.qw.w_int, nb.group)     # (C·kH·kW, O) int8
+        int4_ok = nb.qw.int4_values and w2.shape[0] % 2 == 0
 
         m = QuantConvMatch(
-            nodes, node.inputs[0], out, w2,
-            np.asarray(scale, np.float32), bias, int4_ok,
-            kernel_shape=ks, strides=strides, pads=pads, dilations=dilations,
-            group=group, relu=relu, act=act)
+            nb.nodes, node.inputs[0], nb.out, w2, nb.scale, nb.bias, int4_ok,
+            kernel_shape=nb.kernel_shape, strides=nb.strides, pads=nb.pads,
+            dilations=nb.dilations, group=nb.group, relu=nb.relu, act=nb.act)
         # zero-padding-aware bound wants the conv-shaped weights, not the
         # staged im2col matrix
-        select_accumulator(ctx, node, m, w_int=qw.w_int)
+        select_accumulator(ctx, node, m, w_int=nb.qw.w_int)
         return m
 
     def emit(self, idx: int, m: QuantConvMatch, consts: dict,
@@ -173,14 +220,12 @@ class QuantConvRule(LoweringRule):
         keys = [w_key, s_key] + ([b_key] if b_key else [])
         qdq = None
         if m.act is not None:
-            qs_key, qz_key = f"__seg{idx}_aqs", f"__seg{idx}_aqz"
-            consts[qs_key] = jnp.asarray(m.act.scale)
-            consts[qz_key] = jnp.asarray(m.act.zero_point)
-            keys += [qs_key, qz_key]
-            qdq = functools.partial(
-                kernel_ops.quant_dequant, bit_width=m.act.bit_width,
+            qdq, (qs_key, qz_key) = stage_qdq_epilogue(
+                idx, consts, ctx, scale=m.act.scale,
+                zero_point=m.act.zero_point, bit_width=m.act.bit_width,
                 signed=m.act.signed, narrow=m.act.narrow,
-                rounding_mode=m.act.rounding_mode, interpret=ctx.interpret)
+                rounding_mode=m.act.rounding_mode)
+            keys += [qs_key, qz_key]
         x_name, out_name, relu = m.x, m.out, m.relu
 
         def run(consts, env):

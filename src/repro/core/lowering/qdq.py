@@ -57,17 +57,36 @@ class QDQMatch(Match):
     rounding_mode: str
 
 
-def make_qdq_segment(idx: int, m: QDQMatch, consts: dict,
-                     ctx: LoweringContext) -> Segment:
+def stage_qdq_epilogue(idx: int, consts: dict, ctx: LoweringContext, *,
+                       scale, zero_point, bit_width, signed, narrow,
+                       rounding_mode):
+    """Stage one activation-QDQ's constants and build its kernel closure.
+
+    The single place a Quant node's realization on ``kernels.quant_dequant``
+    is staged — used by the standalone QDQ rules and by the conv rules'
+    epilogue absorption, so a Quant lowers to identical staged constants
+    (``__seg{idx}_qs`` / ``__seg{idx}_qz``) and an identically-specialized
+    kernel no matter which segment absorbs it.
+
+    Returns ``(kernel_fn, (s_key, z_key))``.
+    """
     from repro.kernels import ops as kernel_ops
 
     s_key, z_key = f"__seg{idx}_qs", f"__seg{idx}_qz"
-    consts[s_key] = jnp.asarray(m.scale)
-    consts[z_key] = jnp.asarray(m.zero_point)
+    consts[s_key] = jnp.asarray(scale)
+    consts[z_key] = jnp.asarray(zero_point)
     kernel = functools.partial(
-        kernel_ops.quant_dequant, bit_width=m.bit_width, signed=m.signed,
-        narrow=m.narrow, rounding_mode=m.rounding_mode,
-        interpret=ctx.interpret)
+        kernel_ops.quant_dequant, bit_width=bit_width, signed=signed,
+        narrow=narrow, rounding_mode=rounding_mode, interpret=ctx.interpret)
+    return kernel, (s_key, z_key)
+
+
+def make_qdq_segment(idx: int, m: QDQMatch, consts: dict,
+                     ctx: LoweringContext) -> Segment:
+    kernel, (s_key, z_key) = stage_qdq_epilogue(
+        idx, consts, ctx, scale=m.scale, zero_point=m.zero_point,
+        bit_width=m.bit_width, signed=m.signed, narrow=m.narrow,
+        rounding_mode=m.rounding_mode)
     x_name, out_name = m.x, m.out
 
     def run(consts, env):

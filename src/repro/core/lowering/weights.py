@@ -44,13 +44,16 @@ class KernelMatch(Match):
 
 
 def stage_kernel_carriers(idx: int, m: KernelMatch, consts: dict, ctx,
-                          kinds: tuple[str, str]):
+                          kinds: tuple[str, str], pack=None):
     """Stage a KernelMatch's constants into the plan's consts pytree.
 
     Packs the int4 carrier when the context allows it, stages the dequant
     scale and optional bias under the segment's ``__seg{idx}_*`` keys, and
     assembles the accumulator meta.  Shared by every rule that lowers onto
-    the integer matmul kernels (matmul directly, conv via im2col).
+    the integer matmul kernels (matmul directly, conv via im2col, grouped
+    conv via its per-group carriers).  ``pack`` overrides the int4 packer
+    for carriers whose layout isn't the plain (K, N) operand (the grouped
+    rule packs along each group's Kg).
 
     Returns ``(kind, use_int4, w_key, s_key, b_key_or_None, meta)`` where
     ``kinds`` is the (int8, int4) segment-kind pair.
@@ -60,7 +63,7 @@ def stage_kernel_carriers(idx: int, m: KernelMatch, consts: dict, ctx,
     use_int4 = ctx.use_int4 and m.int4_ok
     kind = kinds[1] if use_int4 else kinds[0]
     w_key, s_key, b_key = f"__seg{idx}_w", f"__seg{idx}_s", f"__seg{idx}_b"
-    consts[w_key] = kernel_ops.pack_int4(jnp.asarray(m.w_int)) \
+    consts[w_key] = (pack or kernel_ops.pack_int4)(jnp.asarray(m.w_int)) \
         if use_int4 else jnp.asarray(m.w_int)
     consts[s_key] = jnp.asarray(m.scale)
     if m.bias is not None:

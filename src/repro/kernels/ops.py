@@ -12,6 +12,10 @@ import jax.numpy as jnp
 from .quant_conv import (  # noqa: F401  (public re-exports)
     extract_patches, im2col_weights, quant_conv2d)
 from .quant_dequant import quant_dequant  # noqa: F401
+from .quant_grouped_conv import (  # noqa: F401
+    depthwise_weights, extract_depthwise_taps, grouped_weights,
+    pack_int4_grouped, quant_depthwise_conv2d, quant_grouped_conv2d,
+    quant_grouped_matmul, unpack_int4_grouped)
 from .quant_matmul import quant_matmul, quant_matmul_int4  # noqa: F401
 from . import ref
 

@@ -64,28 +64,23 @@ def im2col_weights(w, groups: int = 1) -> np.ndarray:
     return out
 
 
-def extract_patches(x, kernel_shape, strides=(1, 1), pads=(0, 0, 0, 0),
+def conv_tap_slices(x, kernel_shape, strides=(1, 1), pads=(0, 0, 0, 0),
                     dilations=(1, 1)):
-    """Unfold NCHW ``x`` into an im2col patch matrix.
+    """Zero-pad NCHW ``x`` and take its kH·kW strided/dilated tap slices.
 
-    Returns ``(patches, (OH, OW))`` where patches has shape
-    (N·OH·OW, C·kH·kW), feature axis ordered (c, kh, kw) with c slowest —
-    matching ``im2col_weights``.  ``pads`` follows the ONNX convention
-    [top, left, bottom, right]; padded positions are exactly 0, matching
-    both the interpreted Conv and the analysis tier's zero-pad-widened
-    dot-product bound.
+    The one implementation of the conv unfold geometry — the dense im2col
+    path (``extract_patches``) and the depthwise path
+    (``quant_grouped_conv.extract_depthwise_taps``) differ only in how they
+    lay the taps out afterwards.  Returns ``(taps, (OH, OW))`` with taps a
+    list of kH·kW arrays, each (N, C, OH, OW), in (kh, kw) row-major
+    order.  ``pads`` is ONNX [top, left, bottom, right]; padded positions
+    are exactly 0, matching both the interpreted Conv and the analysis
+    tier's zero-pad-widened dot-product bound.
     """
-    n, c, h, w = x.shape
     kh, kw = (int(v) for v in kernel_shape)
     sh, sw = (int(v) for v in strides)
     dh, dw = (int(v) for v in dilations)
     pt, pl, pb, pr = (int(v) for v in pads)
-    if kh == kw == 1 and (pt, pl, pb, pr) == (0, 0, 0, 0):
-        # pointwise fast path: no unfold, just (optional) stride subsampling
-        xs = x[:, :, ::sh, ::sw]
-        oh, ow = xs.shape[2], xs.shape[3]
-        return (jnp.transpose(xs, (0, 2, 3, 1)).reshape(n * oh * ow, c),
-                (oh, ow))
     xp = jnp.pad(x, ((0, 0), (0, 0), (pt, pb), (pl, pr)))
     hp, wp = xp.shape[2], xp.shape[3]
     oh = (hp - (dh * (kh - 1) + 1)) // sh + 1
@@ -96,6 +91,28 @@ def extract_patches(x, kernel_shape, strides=(1, 1), pads=(0, 0, 0, 0),
             taps.append(xp[:, :,
                            i * dh: i * dh + sh * (oh - 1) + 1: sh,
                            j * dw: j * dw + sw * (ow - 1) + 1: sw])
+    return taps, (oh, ow)
+
+
+def extract_patches(x, kernel_shape, strides=(1, 1), pads=(0, 0, 0, 0),
+                    dilations=(1, 1)):
+    """Unfold NCHW ``x`` into an im2col patch matrix.
+
+    Returns ``(patches, (OH, OW))`` where patches has shape
+    (N·OH·OW, C·kH·kW), feature axis ordered (c, kh, kw) with c slowest —
+    matching ``im2col_weights``.
+    """
+    n, c, h, w = x.shape
+    kh, kw = (int(v) for v in kernel_shape)
+    sh, sw = (int(v) for v in strides)
+    if kh == kw == 1 and tuple(int(v) for v in pads) == (0, 0, 0, 0):
+        # pointwise fast path: no unfold, just (optional) stride subsampling
+        xs = x[:, :, ::sh, ::sw]
+        oh, ow = xs.shape[2], xs.shape[3]
+        return (jnp.transpose(xs, (0, 2, 3, 1)).reshape(n * oh * ow, c),
+                (oh, ow))
+    taps, (oh, ow) = conv_tap_slices(x, kernel_shape, strides, pads,
+                                     dilations)
     p = jnp.stack(taps, axis=2)                  # (N, C, kH·kW, OH, OW)
     p = jnp.transpose(p, (0, 3, 4, 1, 2))        # (N, OH, OW, C, kH·kW)
     return p.reshape(n * oh * ow, c * kh * kw), (oh, ow)

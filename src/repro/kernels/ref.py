@@ -59,3 +59,41 @@ def quant_matmul_int4_ref(x, w_packed, w_scale, bias=None):
     """Oracle for the packed-int4 matmul: unpack then quant_matmul."""
     w_int = unpack_int4_ref(w_packed)
     return quant_matmul_ref(x, w_int, w_scale, bias)
+
+
+def quant_grouped_matmul_ref(xg, wg, w_scale):
+    """Oracle for the per-group blocked matmul.
+
+    xg: (G, M, Kg) f32;  wg: (G, Kg, Ng) int8;  w_scale: scalar or (G·Ng,)
+    group-major.  out: (G, M, Ng) f32 — per group, x[g] @ (s[g] * w[g]).
+    """
+    g, _, _ = xg.shape
+    ng = wg.shape[-1]
+    s = jnp.asarray(w_scale, jnp.float32)
+    s = jnp.full((g, 1, ng), s.reshape(())) if s.size == 1 \
+        else s.reshape(g, 1, ng)
+    acc = jnp.einsum("gmk,gkn->gmn", xg.astype(jnp.float32),
+                     wg.astype(jnp.float32))
+    return acc * s
+
+
+def quant_depthwise_conv_ref(taps, w_taps, w_scale, bias=None, *,
+                             relu=False, act=None):
+    """Oracle for the depthwise tap-reduce kernel (pre-unfolded taps).
+
+    taps: (T, M, C) f32;  w_taps: (T, C) int8;  w_scale: scalar or (C,).
+    ``act`` is None or (scale, zero_point, bit_width, signed, narrow,
+    rounding_mode) for the fused requant epilogue.
+    """
+    acc = jnp.sum(taps.astype(jnp.float32) *
+                  w_taps.astype(jnp.float32)[:, None, :], axis=0)
+    out = acc * jnp.asarray(w_scale, jnp.float32)
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    if act is not None:
+        s, z, nb, signed, narrow, rmode = act
+        out = quant_ops.quant(out, s, z, nb, signed=signed, narrow=narrow,
+                              rounding_mode=rmode)
+    return out

@@ -126,26 +126,35 @@ class CompiledGraphEngine:
     def __init__(self, graph, *, max_batch: int = 8, use_kernels: bool = True,
                  use_int4: bool = True, interpret: bool = True,
                  report_cost: bool = True):
+        self.max_batch = max_batch
+        self.queue: list[GraphRequest] = []
+        self._compile_kw = dict(use_kernels=use_kernels, use_int4=use_int4,
+                                interpret=interpret)
+        self._report_cost = report_cost
+        self.reload(graph)
+
+    def reload(self, graph) -> None:
+        """(Re)compile ``graph`` and swap it in as the served plan.
+
+        Used at construction and for hot model swaps; the fused-count
+        telemetry properties read through to whatever plan is current, so
+        monitoring never sees a stale snapshot of the previous model.
+        Requests still queued were submitted *for the old model* — they are
+        flushed through it first, never silently answered by the new one.
+        """
         from repro.core.compile import compile_graph
-        self.plan = compile_graph(graph, use_kernels=use_kernels,
-                                  use_int4=use_int4, interpret=interpret)
+        if self.queue:
+            self.run_pending()
+        self.plan = compile_graph(graph, **self._compile_kw)
         g = self.plan.graph
         if len(g.inputs) != 1:
             raise ValueError("CompiledGraphEngine serves single-input graphs")
         self.input_name = g.input_names[0]
         self.output_name = g.output_names[0]
         self.sample_shape = tuple(g.inputs[0].shape[1:])
-        self.max_batch = max_batch
-        self.queue: list[GraphRequest] = []
         self._out_spec = None          # lazy eval_shape result (empty batch)
-        # fused-segment telemetry (includes the conv lowerings): how much of
-        # the served graph actually runs on the kernel tier
-        self.fused_counts = dict(self.plan.fused_counts)
-        self.conv_segments_fused = sum(
-            v for k, v in self.fused_counts.items()
-            if k.startswith("quant_conv"))
         self.cost_report = None
-        if report_cost:
+        if self._report_cost:
             # analysis-tier inference cost of the served model, logged once
             # at load (the compile_prep graph keeps quantizers unfolded, so
             # the datatype inference sees the real bit widths)
@@ -153,18 +162,41 @@ class CompiledGraphEngine:
                 from repro.analysis import infer_cost
                 # reuse the GraphAnalysis the compiler already ran
                 self.cost_report = infer_cost(g, ga=self.plan.analysis)
+                gstats = self.plan.grouped_conv_stats()
                 log.info(
                     "loaded %s: %d layers, %s MACs, %.3g BOPs, "
                     "%s weight bits, %.1f KiB traffic/inference, fused=%s "
-                    "(%d conv segments on kernels, interp=%s)",
+                    "(%d conv segments on kernels, %d grouped/depthwise "
+                    "reclaiming %s MACs + %s carrier bytes vs block-diagonal,"
+                    " interp=%s)",
                     g.name, len(self.cost_report.layers),
                     f"{self.cost_report.macs:,}", self.cost_report.bops,
                     f"{int(self.cost_report.total_weight_bits):,}",
                     self.cost_report.total_mem_bytes / 1024,
                     self.fused_counts, self.conv_segments_fused,
+                    gstats["grouped_segments"],
+                    f"{gstats['reclaimed_macs']:,}",
+                    f"{gstats['carrier_bytes_saved']:,}",
                     self.plan.interp_op_counts())
             except Exception:                  # cost is telemetry, not a gate
                 log.exception("cost analysis failed for %s", g.name)
+
+    # fused-segment telemetry (includes the conv lowerings): how much of
+    # the served graph actually runs on the kernel tier.  Read-through
+    # properties of the *current* plan — a reload() is reflected
+    # immediately, no snapshot to invalidate.
+    @property
+    def fused_counts(self) -> dict:
+        return dict(self.plan.fused_counts)
+
+    @property
+    def conv_segments_fused(self) -> int:
+        return sum(v for k, v in self.plan.fused_counts.items()
+                   if k.startswith("quant_conv"))
+
+    @property
+    def grouped_conv_stats(self) -> dict:
+        return self.plan.grouped_conv_stats()
 
     def submit(self, x) -> GraphRequest:
         x = jnp.asarray(x, jnp.float32)

@@ -449,3 +449,65 @@ def test_engine_reports_conv_fusion_telemetry():
     assert eng.conv_segments_fused == 6           # all CNV convs
     assert sum(v for k, v in eng.fused_counts.items()
                if k.startswith("quant_conv")) == 6
+
+
+def test_engine_telemetry_reads_through_plan_after_reload():
+    """fused_counts / conv_segments_fused are read-through properties of
+    the *current* plan, not construction-time snapshots: after a reload()
+    they must reflect the newly served model."""
+    from repro.serve import CompiledGraphEngine
+    eng = CompiledGraphEngine(zoo.build_tfc(2, 2), max_batch=2,
+                              report_cost=False)
+    assert eng.conv_segments_fused == 0           # TFC has no convs
+    tfc_counts = eng.fused_counts
+    assert tfc_counts.get("quant_matmul_int4", 0) >= 3
+
+    eng.reload(zoo.build_cnv(1, 1))
+    assert eng.conv_segments_fused == 6           # now serving CNV
+    assert eng.fused_counts != tfc_counts
+    assert eng.sample_shape == (3, 32, 32)        # serving state re-derived
+    # the swapped-in plan actually serves
+    x = np.random.RandomState(0).randn(3, 32, 32).astype(np.float32)
+    assert eng(x).shape == (10,)
+
+
+def test_engine_reload_flushes_pending_requests_through_old_model():
+    """Requests queued before a reload were submitted for the old model:
+    reload() must flush them through it, not hand them to the new plan
+    (whose input shape may not even match)."""
+    from repro.serve import CompiledGraphEngine
+    g = zoo.build_tfc(2, 2)
+    gc = transforms.cleanup(g)
+    eng = CompiledGraphEngine(g, max_batch=2, report_cost=False)
+    x = np.random.RandomState(1).randn(784).astype(np.float32)
+    req = eng.submit(x)
+    eng.reload(zoo.build_cnv(1, 1))               # different input shape
+    assert req.result is not None                 # answered by the old model
+    assert_zoo_parity(_interp(gc, x[None])[0], np.asarray(req.result))
+    assert eng.queue == [] and eng.sample_shape == (3, 32, 32)
+
+
+def test_engine_telemetry_reflects_manual_plan_swap():
+    """Even a direct plan swap (no reload call) is visible — the properties
+    hold no state of their own."""
+    from repro.core.compile import compile_graph
+    from repro.serve import CompiledGraphEngine
+    eng = CompiledGraphEngine(zoo.build_tfc(1, 1), max_batch=2,
+                              report_cost=False)
+    before = eng.fused_counts
+    eng.plan = compile_graph(zoo.build_cnv(1, 1))
+    assert eng.conv_segments_fused == 6
+    assert eng.fused_counts != before
+
+
+def test_engine_exposes_grouped_conv_stats():
+    """Grouped/depthwise load telemetry: MobileNet serves with all its
+    depthwise convs on the dedicated kernels and the reclaimed-MAC count
+    visible to monitoring."""
+    from repro.serve import CompiledGraphEngine
+    eng = CompiledGraphEngine(zoo.build_mobilenet(4, 4, img=32), max_batch=2,
+                              report_cost=False)
+    stats = eng.grouped_conv_stats
+    assert stats["grouped_segments"] == 13
+    assert stats["block_diagonal_grouped"] == 0
+    assert stats["reclaimed_macs"] > 0

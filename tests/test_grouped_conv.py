@@ -1,0 +1,426 @@
+"""Differential test harness for the grouped/depthwise compiled tier.
+
+Three layers of differential checking, each against an independent oracle:
+
+  * **kernel vs jax.lax** — ``quant_grouped_conv2d`` /
+    ``quant_depthwise_conv2d`` against ``lax.conv_general_dilated`` with
+    ``feature_group_count`` on dequantized weights (a conv implementation
+    that shares no code with the kernels or the interpreted executor);
+  * **kernel vs pure-jnp refs** — the per-group blocked matmul against
+    ``ref.quant_grouped_matmul_ref`` on deliberately non-block-multiple
+    K/N/M with tiny explicit blocks, int4-packed and int8 carriers;
+  * **compiled graph vs interpreted oracle** — whole
+    ``Quant(w) -> Conv [-> Relu] [-> Quant]`` graphs through
+    ``compile_graph``, exact to float tolerance on tie-free scales, across
+    group ∈ {2, 3, 4, cin}, bit widths 1–8, stride/pads/dilation, odd
+    channel counts and bias; plus the zoo-level MobileNet-w4a4 end-to-end
+    parity inside the documented tie-flip envelope.
+
+The deterministic sweeps always run; when ``hypothesis`` is installed
+(requirements-dev.txt) a randomized property drives the same graph-level
+differential across the full config space.
+"""
+import numpy as np
+import pytest
+from jax import lax
+import jax.numpy as jnp
+
+from repro.core import GraphBuilder, execute, quant_ops, transforms
+from repro.core.compile import compile_graph
+from repro.core.lowering import rules_for
+from repro.kernels import ops as K
+from repro.kernels import ref
+from repro.models import zoo
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                     # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+# tie-free scales (see test_lowering.py): no compiled-vs-interp
+# reassociation difference can land on an exact .5 rounding boundary
+W_SCALE, A_SCALE = 0.0517, 0.0973
+
+GROUPED_KINDS = ("quant_conv_grouped", "quant_conv_grouped_int4",
+                 "quant_conv_dw")
+
+
+def _interp(g, x):
+    return np.asarray(execute(g, {g.input_names[0]: x})[g.output_names[0]])
+
+def _compiled(plan, g, x):
+    return np.asarray(plan({g.input_names[0]: x})[g.output_names[0]])
+
+
+def _lax_conv(x, w_float, strides, pads, dilations, groups, bias=None,
+              relu=False):
+    """Independent conv oracle: lax.conv_general_dilated, NCHW/OIHW."""
+    y = lax.conv_general_dilated(
+        jnp.asarray(x, jnp.float32), jnp.asarray(w_float, jnp.float32),
+        tuple(strides), ((pads[0], pads[2]), (pads[1], pads[3])),
+        rhs_dilation=tuple(dilations), feature_group_count=groups,
+        dimension_numbers=("NCHW", "OIHW", "NCHW"))
+    if bias is not None:
+        y = y + jnp.asarray(bias, jnp.float32)[None, :, None, None]
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    return np.asarray(y)
+
+
+# ---------------------------------------------------- kernel vs pure-jnp ref
+
+@pytest.mark.parametrize("g,m,kg,ng", [
+    (2, 13, 10, 5),          # nothing block-multiple
+    (3, 8, 4, 4),
+    (5, 7, 18, 3),           # odd M/N, even Kg (int4-packable)
+])
+def test_grouped_matmul_matches_ref_nonaligned(g, m, kg, ng):
+    rng = np.random.RandomState(g * 100 + m)
+    xg = rng.randn(g, m, kg).astype(np.float32)
+    wg = rng.randint(-7, 8, size=(g, kg, ng)).astype(np.int8)
+    s = np.linspace(0.02, 0.09, g * ng).astype(np.float32)
+    want = np.asarray(ref.quant_grouped_matmul_ref(xg, wg, s))
+    # tiny blocks force partial-block padding on every axis
+    got = np.asarray(K.quant_grouped_matmul(xg, wg, s, blocks=(8, 8, 8)))
+    np.testing.assert_allclose(want, got, atol=1e-4)
+    if kg % 2 == 0:
+        got4 = np.asarray(K.quant_grouped_matmul(
+            xg, K.pack_int4_grouped(wg), s, packed=True, blocks=(8, 8, 8)))
+        np.testing.assert_allclose(want, got4, atol=1e-4)
+
+
+def test_pack_unpack_int4_grouped_roundtrip():
+    rng = np.random.RandomState(0)
+    wg = rng.randint(-8, 8, size=(3, 10, 5)).astype(np.int8)
+    packed = K.pack_int4_grouped(wg)
+    assert packed.shape == (3, 5, 5)
+    np.testing.assert_array_equal(np.asarray(K.unpack_int4_grouped(packed)),
+                                  wg)
+
+
+# ------------------------------------------------------- kernel vs jax.lax
+
+@pytest.mark.parametrize("cin,cout,groups,k,stride,pads,dil", [
+    (4, 6, 2, 3, 1, (0, 0, 0, 0), 1),
+    (6, 9, 3, 3, 2, (1, 2, 0, 1), 1),       # odd per-group channels, asym pad
+    (8, 8, 4, 1, 1, (0, 0, 0, 0), 1),       # grouped pointwise
+    (10, 20, 5, 3, 1, (1, 1, 1, 1), 2),     # dilated
+    (6, 12, 6, 3, 1, (1, 1, 1, 1), 1),      # group == cin with multiplier 2
+], ids=["g2", "g3_asym", "g4_pw", "g5_dil", "cin_mult2"])
+def test_quant_grouped_conv2d_matches_lax(cin, cout, groups, k, stride,
+                                          pads, dil):
+    rng = np.random.RandomState(cin + cout)
+    w = rng.randint(-7, 8, size=(cout, cin // groups, k, k)).astype(np.int8)
+    s = np.linspace(0.03, 0.07, cout).astype(np.float32)
+    b = rng.randn(cout).astype(np.float32)
+    x = rng.randn(2, cin, 9, 9).astype(np.float32)
+    y = K.quant_grouped_conv2d(
+        x, jnp.asarray(K.grouped_weights(w, groups)), s, jnp.asarray(b),
+        groups=groups, kernel_shape=(k, k), strides=(stride, stride),
+        pads=pads, dilations=(dil, dil))
+    want = _lax_conv(x, w.astype(np.float32) * s[:, None, None, None],
+                     (stride, stride), pads, (dil, dil), groups, bias=b)
+    np.testing.assert_allclose(want, np.asarray(y), atol=1e-4)
+
+
+def test_quant_grouped_conv2d_int4_matches_int8():
+    rng = np.random.RandomState(1)
+    w = rng.randint(-7, 8, size=(8, 2, 3, 3)).astype(np.int8)   # Kg=18 even
+    wg = K.grouped_weights(w, 4)
+    x = rng.randn(1, 8, 7, 7).astype(np.float32)
+    y8 = K.quant_grouped_conv2d(x, jnp.asarray(wg), 0.05, groups=4,
+                                kernel_shape=(3, 3))
+    y4 = K.quant_grouped_conv2d(x, K.pack_int4_grouped(wg), 0.05, groups=4,
+                                kernel_shape=(3, 3), packed=True)
+    np.testing.assert_allclose(np.asarray(y8), np.asarray(y4), atol=1e-5)
+
+
+@pytest.mark.parametrize("c,k,stride,pads,dil,relu,bias", [
+    (5, 3, 1, (1, 1, 1, 1), 1, True, True),      # odd channel count
+    (7, 3, 2, (1, 0, 2, 1), 2, False, False),    # strided, dilated, asym pad
+    (130, 3, 1, (1, 1, 1, 1), 1, True, False),   # > one 128-lane block
+], ids=["c5", "c7_s2_d2", "c130"])
+def test_depthwise_kernel_matches_lax(c, k, stride, pads, dil, relu, bias):
+    rng = np.random.RandomState(c)
+    w = rng.randint(-7, 8, size=(c, 1, k, k)).astype(np.int8)
+    s = np.linspace(0.02, 0.08, c).astype(np.float32)
+    b = rng.randn(c).astype(np.float32) if bias else None
+    x = rng.randn(2, c, 10, 10).astype(np.float32)
+    y = K.quant_depthwise_conv2d(
+        x, jnp.asarray(K.depthwise_weights(w)), s,
+        None if b is None else jnp.asarray(b), kernel_shape=(k, k),
+        strides=(stride, stride), pads=pads, dilations=(dil, dil), relu=relu)
+    want = _lax_conv(x, w.astype(np.float32) * s[:, None, None, None],
+                     (stride, stride), pads, (dil, dil), c, bias=b, relu=relu)
+    np.testing.assert_allclose(want, np.asarray(y), atol=1e-4)
+
+
+def test_depthwise_fused_requant_matches_quant_ops():
+    """The in-kernel dequant->ReLU->requant epilogue must agree bit-for-bit
+    with the standalone quant_ops.quant the oracle applies."""
+    rng = np.random.RandomState(2)
+    c = 6
+    w = rng.randint(-7, 8, size=(c, 1, 3, 3)).astype(np.int8)
+    x = rng.randn(1, c, 8, 8).astype(np.float32)
+    y = K.quant_depthwise_conv2d(
+        x, jnp.asarray(K.depthwise_weights(w)), W_SCALE, relu=True,
+        act_scale=A_SCALE, act_zero_point=0.0, kernel_shape=(3, 3),
+        pads=(1, 1, 1, 1), act_bits=4, act_signed=True, act_narrow=False)
+    want = _lax_conv(x, w.astype(np.float32) * W_SCALE, (1, 1), (1, 1, 1, 1),
+                     (1, 1), c, relu=True)
+    want = np.asarray(quant_ops.quant(want, A_SCALE, 0.0, 4, signed=True,
+                                      narrow=False, rounding_mode="ROUND"))
+    np.testing.assert_array_equal(want, np.asarray(y))
+
+
+# ------------------------------------------- compiled graph vs interp oracle
+
+def _conv_graph(cin=4, cout=6, img=8, k=3, stride=1, pads=(0, 0, 0, 0),
+                group=1, dilation=1, w_bits=4, bias=False, relu=True,
+                a_bits=4, per_channel=False, seed=0, batch=2):
+    rng = np.random.RandomState(seed)
+    b = GraphBuilder("gconv_t")
+    x = b.add_input("x", (batch, cin, img, img))
+    h = b.quant(x, A_SCALE, 0.0, 8)
+    w = (rng.randn(cout, cin // group, k, k) * 0.4).astype(np.float32)
+    wname = b.add_initializer("w", w)
+    if w_bits == 1:
+        qw = b.bipolar_quant(wname, W_SCALE)
+    elif per_channel:
+        s = np.linspace(0.031, 0.071, cout, dtype=np.float32) \
+            .reshape(cout, 1, 1, 1)
+        qw = b.quant(wname, s, np.zeros((cout, 1, 1, 1), np.float32),
+                     w_bits, narrow=True)
+    else:
+        qw = b.quant(wname, W_SCALE, 0.0, w_bits, narrow=True)
+    ins = [h, qw]
+    if bias:
+        ins.append(b.add_initializer(
+            "b", (rng.randn(cout) * 0.2).astype(np.float32)))
+    attrs = {"kernel_shape": [k, k], "strides": [stride, stride],
+             "pads": list(pads), "group": group}
+    if dilation != 1:
+        attrs["dilations"] = [dilation, dilation]
+    (h,) = b.add_node("Conv", ins, 1, attrs)
+    if relu:
+        (h,) = b.add_node("Relu", [h], 1)
+    if a_bits:
+        h = b.quant(h, A_SCALE, 0.0, a_bits)
+    b.mark_output(h)
+    return b.build()
+
+
+def _assert_grouped_fused_and_exact(g, expect_kinds=GROUPED_KINDS,
+                                    seeds=range(3)):
+    plan = compile_graph(g)
+    fused = sum(v for kk, v in plan.fused_counts.items()
+                if kk in expect_kinds)
+    assert fused >= 1, plan.describe()
+    assert plan.interp_op_counts().get("Conv", 0) == 0, plan.describe()
+    assert plan.grouped_conv_stats()["block_diagonal_grouped"] == 0
+    gc = transforms.cleanup(g)
+    shape = tuple(g.inputs[0].shape)
+    for seed in seeds:
+        x = np.random.RandomState(100 + seed).randn(*shape) \
+            .astype(np.float32)
+        np.testing.assert_allclose(_interp(gc, x), _compiled(plan, g, x),
+                                   atol=1e-4)
+    return plan
+
+
+GRAPH_SWEEP = {
+    "g2": dict(group=2, cin=4, cout=6),
+    "g2_w1_bipolar": dict(group=2, cin=4, cout=4, w_bits=1),
+    "g2_w8": dict(group=2, cin=4, cout=4, w_bits=8),
+    "g4_stride_pad": dict(group=4, cin=8, cout=8, stride=2,
+                          pads=(1, 1, 1, 1)),
+    "g2_odd_channels": dict(group=2, cin=6, cout=6, w_bits=3),  # Kg=27 odd
+    "g2_dilated": dict(group=2, cin=4, cout=4, dilation=2, img=10),
+    "g2_bias_per_channel": dict(group=2, cin=4, cout=6, bias=True,
+                                per_channel=True),
+    "g3_asym_pad": dict(group=3, cin=6, cout=9, pads=(2, 0, 1, 1)),
+    "dw": dict(group=4, cin=4, cout=4),
+    "dw_w1_bipolar": dict(group=4, cin=4, cout=4, w_bits=1),
+    "dw_w2_a2": dict(group=4, cin=4, cout=4, w_bits=2, a_bits=2),
+    "dw_stride_pad_bias": dict(group=5, cin=5, cout=5, stride=2,
+                               pads=(1, 1, 1, 1), bias=True),
+    "dw_dilated": dict(group=4, cin=4, cout=4, dilation=2, img=10),
+    "dw_no_epilogue": dict(group=4, cin=4, cout=4, relu=False, a_bits=0),
+    "dw_relu_only": dict(group=4, cin=4, cout=4, a_bits=0),
+    "dw_a8": dict(group=4, cin=4, cout=4, a_bits=8),
+    "dw_per_channel": dict(group=4, cin=4, cout=4, per_channel=True),
+    "cin_multiplier": dict(group=4, cin=4, cout=8),   # dw shape, mult 2
+    "pointwise_grouped": dict(group=2, cin=8, cout=8, k=1),
+}
+
+
+@pytest.mark.parametrize("kw", list(GRAPH_SWEEP.values()),
+                         ids=list(GRAPH_SWEEP.keys()))
+def test_grouped_lowering_matches_oracle_exact(kw):
+    _assert_grouped_fused_and_exact(_conv_graph(**kw))
+
+
+def test_grouped_int4_and_int8_carriers_agree():
+    """Even per-group Kg takes the packed path; both carriers match the
+    oracle and each other."""
+    g = _conv_graph(group=2, cin=4, cout=6, w_bits=4)      # Kg=2·9=18 even
+    p4 = compile_graph(g, use_int4=True)
+    p8 = compile_graph(g, use_int4=False)
+    assert "quant_conv_grouped_int4" in p4.fused_counts
+    assert "quant_conv_grouped" in p8.fused_counts
+    x = np.random.RandomState(0).randn(2, 4, 8, 8).astype(np.float32)
+    np.testing.assert_allclose(_compiled(p4, g, x), _compiled(p8, g, x),
+                               atol=1e-5)
+
+
+def test_grouped_graph_three_way_vs_lax():
+    """Compiled plan == interpreted oracle == lax.conv_general_dilated on
+    the same integer weights (weights re-quantized independently here)."""
+    kw = dict(group=2, cin=4, cout=6, relu=False, a_bits=0, seed=3)
+    g = _conv_graph(**kw)
+    plan = _assert_grouped_fused_and_exact(g, seeds=range(1))
+    # reconstruct the integer weights the Quant chain produces
+    w = np.asarray(g.initializers[next(
+        n for n in g.nodes if n.op_type == "Quant"
+        and n.inputs[0] in g.initializers).inputs[0]])
+    w_int = np.asarray(quant_ops.quantize_int(
+        jnp.asarray(w), W_SCALE, 0.0, 4.0, signed=True, narrow=True,
+        rounding_mode="ROUND"))
+    x = np.random.RandomState(100).randn(2, 4, 8, 8).astype(np.float32)
+    xq = np.asarray(quant_ops.quant(x, A_SCALE, 0.0, 8))
+    want = _lax_conv(xq, w_int * W_SCALE, (1, 1), (0, 0, 0, 0), (1, 1), 2)
+    np.testing.assert_allclose(want, _compiled(plan, g, x), atol=1e-4)
+
+
+def test_depthwise_epilogue_inside_one_segment():
+    """Conv->Relu->Quant fuses into a single depthwise segment (the requant
+    runs inside the kernel, not as a separate quant_dequant call)."""
+    g = _conv_graph(group=4, cin=4, cout=4)
+    plan = compile_graph(g)
+    seg = next(s for s in plan.segments if s.kind == "quant_conv_dw")
+    assert [n.op_type for n in seg.nodes] == ["Quant", "Conv", "Relu",
+                                              "Quant"]
+    # only the graph-input quantizer is left as a standalone QDQ segment
+    assert plan.fused_counts.get("quant_dequant", 0) == 1
+
+
+def test_grouped_rule_tried_before_dense_conv_rule():
+    names = [r.name for r in rules_for("Conv")]
+    assert names == ["quant_grouped_conv", "quant_conv"]
+
+
+def test_large_group_count_declines_to_block_diagonal():
+    """group > MAX_BLOCKED_GROUPS with a channel multiplier: the grouped
+    rule declines and the dense block-diagonal carrier (the documented
+    fallback) takes it — still fused, still exact."""
+    from repro.core.lowering.grouped_conv import MAX_BLOCKED_GROUPS
+    grp = MAX_BLOCKED_GROUPS + 2
+    g = _conv_graph(group=grp, cin=2 * grp, cout=grp, k=1, img=4,
+                    relu=False, a_bits=0)
+    plan = compile_graph(g)
+    seg = next(s for s in plan.segments
+               if s.kind.startswith("quant_conv"))
+    assert seg.kind in ("quant_conv", "quant_conv_int4"), plan.describe()
+    assert seg.meta.get("group") == grp
+    stats = plan.grouped_conv_stats()
+    assert stats["block_diagonal_grouped"] == 1
+    assert stats["grouped_segments"] == 0
+    x = np.random.RandomState(0).randn(2, 2 * grp, 4, 4).astype(np.float32)
+    np.testing.assert_allclose(_interp(transforms.cleanup(g), x),
+                               _compiled(plan, g, x), atol=1e-4)
+
+
+def test_reclaimed_macs_meta_matches_cost_report_mirror():
+    """Segment-meta reclaimed MACs must equal the analysis cost report's
+    dense-equivalent minus true MACs — the two independent accountings of
+    the same O(groups) saving."""
+    from repro.analysis import infer_cost
+    g = zoo.build_mobilenet(4, 4, img=32)
+    plan = compile_graph(g)
+    report = infer_cost(plan.graph, ga=plan.analysis)
+    stats = plan.grouped_conv_stats()
+    assert stats["reclaimed_macs"] > 0
+    assert stats["reclaimed_macs"] == \
+        report.dense_equiv_macs - report.macs == \
+        report.grouped_macs_reclaimed
+    # the report's grouped-layer MACs are the true I/g·kH·kW contraction:
+    # first depthwise layer at img=32 sees a 16x16 map of 32 channels ->
+    # 32·(32/32)·3·3·16·16 MACs, not the O(groups)-inflated 32·32·3·3·16·16
+    dw = [l for l in report.layers if l.groups > 1]
+    assert len(dw) == 13
+    first = dw[0]
+    assert (first.groups, first.weights) == (32, 32 * 9)
+    assert first.macs == 32 * 1 * 3 * 3 * 16 * 16
+
+
+# --------------------------------------------------------- zoo end to end
+
+def _assert_tie_flip_envelope(ref_out, out, act_step=0.5, atol=1e-4,
+                              mean_steps=1.5):
+    """Zoo-graph parity policy (see tests/test_compile.py): exact, or a
+    measure-zero .5-tie flip bounded in max and mean."""
+    diff = np.abs(ref_out - out)
+    if diff.max() <= atol:
+        return
+    assert diff.max() <= 3 * act_step + atol, \
+        f"diff {diff.max():.3f} exceeds the tie-flip envelope"
+    assert np.mean(diff) <= mean_steps * act_step, \
+        f"mean diff {np.mean(diff):.3f} is not a measure-zero tie effect"
+
+
+def test_mobilenet_w4a4_rides_grouped_kernels_end_to_end():
+    """Zoo-level gate: all 27 MobileNet convs fuse, the 13 depthwise layers
+    on the depthwise kernel with zero block-diagonal carriers, and the
+    output matches the oracle within the documented tie-flip envelope."""
+    g = zoo.build_mobilenet(4, 4, img=32)      # full topology, small image
+    plan = compile_graph(g)
+    n_convs = sum(1 for n in g.nodes if n.op_type == "Conv")
+    assert sum(v for k, v in plan.fused_counts.items()
+               if k.startswith("quant_conv")) == n_convs == 27
+    assert plan.fused_counts.get("quant_conv_dw") == 13
+    assert plan.interp_op_counts().get("Conv", 0) == 0
+    stats = plan.grouped_conv_stats()
+    assert stats["block_diagonal_grouped"] == 0
+    assert stats["grouped_segments"] == 13
+    assert stats["reclaimed_macs"] > 0 and stats["carrier_bytes_saved"] > 0
+    gc = transforms.cleanup(g)
+    x = np.random.RandomState(7).randn(1, 3, 32, 32).astype(np.float32)
+    _assert_tie_flip_envelope(_interp(gc, x), _compiled(plan, g, x))
+
+
+# ----------------------------------------------------- hypothesis property
+
+if HAVE_HYPOTHESIS:
+    @st.composite
+    def conv_configs(draw):
+        kind = draw(st.sampled_from(["g2", "g4", "dw"]))
+        if kind == "dw":
+            group = draw(st.integers(2, 6))
+            ipg, opg = 1, 1
+        else:
+            group = {"g2": 2, "g4": 4}[kind]
+            ipg = draw(st.integers(1, 3))
+            opg = draw(st.integers(1, 3))
+        k = draw(st.sampled_from([1, 3]))
+        return dict(
+            group=group, cin=group * ipg, cout=group * opg, k=k,
+            stride=draw(st.integers(1, 2)),
+            pads=tuple(draw(st.lists(st.integers(0, 2), min_size=4,
+                                     max_size=4))) if k > 1 else (0, 0, 0, 0),
+            dilation=draw(st.integers(1, 2)) if k > 1 else 1,
+            w_bits=draw(st.integers(1, 8)),
+            a_bits=draw(st.sampled_from([0, 2, 4, 8])),
+            bias=draw(st.booleans()),
+            relu=draw(st.booleans()),
+            img=draw(st.integers(7, 10)),
+            seed=draw(st.integers(0, 1000)),
+        )
+
+    @settings(max_examples=15, deadline=None)
+    @given(conv_configs())
+    def test_grouped_lowering_property(kw):
+        """Randomized graph-level differential: every grouped/depthwise
+        config the rule accepts must fuse onto the dedicated kernels and
+        match the interpreted oracle exactly (tie-free scales)."""
+        _assert_grouped_fused_and_exact(_conv_graph(**kw), seeds=range(1))

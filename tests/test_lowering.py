@@ -35,14 +35,17 @@ def _compiled(plan, g, x):
 
 def test_builtin_rules_registered_in_priority_order():
     names = [r.name for r in iter_rules()]
-    assert names.index("quant_matmul") < names.index("quant_conv") \
-        < names.index("quant_qdq") < names.index("qcdq_chain")
+    assert names.index("quant_matmul") < names.index("quant_grouped_conv") \
+        < names.index("quant_conv") < names.index("quant_qdq") \
+        < names.index("qcdq_chain")
     prios = [r.priority for r in iter_rules()]
     assert prios == sorted(prios)
 
 
 def test_rules_for_filters_by_anchor_op():
-    assert [r.name for r in rules_for("Conv")] == ["quant_conv"]
+    # the grouped rule is tried before the dense (block-diagonal) fallback
+    assert [r.name for r in rules_for("Conv")] == \
+        ["quant_grouped_conv", "quant_conv"]
     assert "quant_matmul" in [r.name for r in rules_for("MatMul")]
     assert "quant_matmul" in [r.name for r in rules_for("Gemm")]
     assert rules_for("MaxPool") == []
@@ -346,6 +349,42 @@ def test_conv_nonbroadcastable_scale_declines_match_instead_of_raising():
     g2 = b2.build()
     conv2 = next(n for n in g2.nodes if n.op_type == "Conv")
     assert get_rule("quant_conv").match(g2, conv2, LoweringContext()) is None
+
+
+# ------------------------------------------- shared QDQ-epilogue staging
+
+def test_conv_epilogue_and_qdq_rule_stage_identical_constants():
+    """Both the standalone QDQ rule and the conv rules' epilogue absorption
+    go through ``qdq.stage_qdq_epilogue``: the same Quant node must stage
+    the same ``__seg{idx}_qs``/``__seg{idx}_qz`` constants, whichever
+    segment absorbs it."""
+    # standalone activation Quant -> the QDQ rule stages it
+    b = GraphBuilder("act_only")
+    x = b.add_input("x", (2, 8))
+    y = b.quant(x, A_SCALE, 0.0, 4)
+    b.mark_output(y)
+    qdq_plan = compile_graph(b.build())
+    assert qdq_plan.fused_counts.get("quant_dequant") == 1
+
+    def staged(plan, idx):
+        return (np.asarray(plan.consts[f"__seg{idx}_qs"]),
+                np.asarray(plan.consts[f"__seg{idx}_qz"]))
+
+    qs_ref, qz_ref = staged(qdq_plan, 0)
+
+    # the same Quant params absorbed as a dense-conv epilogue
+    dense_plan = compile_graph(_conv_graph(a_bits=4))
+    i = next(i for i, s in enumerate(dense_plan.segments)
+             if s.kind.startswith("quant_conv"))
+    np.testing.assert_array_equal(qs_ref, staged(dense_plan, i)[0])
+    np.testing.assert_array_equal(qz_ref, staged(dense_plan, i)[1])
+
+    # ... and as a depthwise in-kernel epilogue
+    dw_plan = compile_graph(_conv_graph(group=4, cin=4, cout=4, a_bits=4))
+    i = next(i for i, s in enumerate(dw_plan.segments)
+             if s.kind == "quant_conv_dw")
+    np.testing.assert_array_equal(qs_ref, staged(dw_plan, i)[0])
+    np.testing.assert_array_equal(qz_ref, staged(dw_plan, i)[1])
 
 
 # --------------------------------------------------- conv in all formats
