@@ -20,6 +20,7 @@ from __future__ import annotations
 
 import time
 
+import jax
 import numpy as np
 
 from repro.core import execute, transforms
@@ -55,8 +56,13 @@ def run_detailed(cases=None) -> tuple[list[str], dict]:
         x = np.random.RandomState(0).randn(*shape).astype(np.float32)
         out_name = gc.output_names[0]
 
-        us_interp = _time(lambda: np.asarray(execute(gc, {"x": x})[out_name]))
-        us_comp = _time(lambda: np.asarray(
+        # block_until_ready, not np.asarray: the plan returns un-forced
+        # device arrays (async dispatch — what the serving tier pipelines
+        # on), so timing must wait for the *compute*, not just the enqueue;
+        # a host copy would also pollute the measurement
+        us_interp = _time(lambda: jax.block_until_ready(
+            execute(gc, {"x": x})[out_name]))
+        us_comp = _time(lambda: jax.block_until_ready(
             plan({"x": x})[plan.graph.output_names[0]]))
         fused = ";".join(f"{k}={v}" for k, v in sorted(
             plan.fused_counts.items()))
@@ -69,7 +75,7 @@ def run_detailed(cases=None) -> tuple[list[str], dict]:
 
         # batched serving amortizes the fixed per-call overhead further
         xb = np.random.RandomState(1).randn(8, *shape[1:]).astype(np.float32)
-        us_b = _time(lambda: np.asarray(
+        us_b = _time(lambda: jax.block_until_ready(
             plan({"x": xb})[plan.graph.output_names[0]]))
         rows.append(f"compile/{name}_compiled_b8,{us_b:.0f},"
                     f"us_per_sample={us_b / 8:.0f}")

@@ -5,6 +5,8 @@ Prints ``name,us_per_call,derived`` CSV rows:
   * bench_formats — Table I: lowering correctness + expressiveness gaps
   * bench_kernels — Pallas kernel oracles + TPU byte-traffic analytics
   * bench_compile — compiled plan vs node-by-node interpreter wall time
+  * bench_serve   — serving tier: pipelined vs per-chunk-sync dispatch,
+                    scheduler round-trip p50/p99
   * roofline      — assignment §Roofline (reads the dry-run artifacts)
 """
 from __future__ import annotations
@@ -15,11 +17,11 @@ import traceback
 
 def main() -> None:
     from benchmarks import (bench_compile, bench_formats, bench_kernels,
-                            bench_zoo, roofline)
+                            bench_serve, bench_zoo, roofline)
     print("name,us_per_call,derived")
     failures = 0
     for mod in (bench_zoo, bench_formats, bench_kernels, bench_compile,
-                roofline):
+                bench_serve, roofline):
         try:
             for row in mod.run():
                 print(row, flush=True)

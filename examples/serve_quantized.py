@@ -6,8 +6,9 @@
   4. offline weight quantization to int8/int4 via the Pallas quantizers
      (the packed-int4 path is what halves decode HBM traffic on TPU)
   5. compiled-QONNX-graph serving: a zoo graph partitioned onto the
-     integer kernels (core/compile.py) behind the slot-batched
-     CompiledGraphEngine, checked against the interpreted §V oracle
+     integer kernels (core/compile.py) behind the ServeScheduler
+     (submit -> future, pipelined slot dispatch), checked against the
+     interpreted §V oracle
 
 Run:  PYTHONPATH=src python examples/serve_quantized.py
 """
@@ -23,7 +24,8 @@ from repro.kernels import ops
 from repro.models import api, zoo
 from repro.quantize import calibrate
 from repro.quantize.config import QuantRecipe, TensorQuant
-from repro.serve import CompiledGraphEngine, GenerationEngine, greedy_generate
+from repro.serve import (CompiledGraphEngine, GenerationEngine,
+                         ServeScheduler, greedy_generate)
 
 
 def main():
@@ -78,15 +80,22 @@ def main():
     print(f"compiled TFC-w2a2: segments {eng_g.plan.fused_counts}")
     rng = np.random.default_rng(0)
     samples = [rng.standard_normal(784).astype(np.float32) for _ in range(6)]
-    reqs_g = [eng_g.submit(s) for s in samples]
+    # the scheduler is the primary serving path: submit -> future,
+    # background flushes, pipelined slot dispatch
     t0 = time.time()
-    eng_g.run_pending()
+    with ServeScheduler(eng_g, window_ms=2.0) as sched:
+        reqs_g = [sched.submit(s) for s in samples]
+        for r in reqs_g:
+            r.wait(timeout=120)
     dt = (time.time() - t0) * 1e3
     gc = transforms.cleanup(g)
     oracle = execute(gc, {"x": np.stack(samples)})[gc.output_names[0]]
     md = max(float(np.max(np.abs(np.asarray(r.result) - np.asarray(oracle[i]))))
              for i, r in enumerate(reqs_g))
-    print(f"graph serving: {len(reqs_g)} reqs in {dt:.0f}ms, "
+    stats = eng_g.latency_stats()
+    print(f"graph serving: {len(reqs_g)} reqs in {dt:.0f}ms "
+          f"(p50={stats['latency_p50_ms']:.1f}ms "
+          f"p99={stats['latency_p99_ms']:.1f}ms), "
           f"maxdiff vs interpreted oracle = {md:.2e}")
 
 

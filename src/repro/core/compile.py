@@ -79,8 +79,10 @@ class CompiledPlan:
     def __post_init__(self):
         segments = self.segments
         output_names = list(self.graph.output_names)
+        trace_cell = [0]
 
         def plan(consts, inputs):
+            trace_cell[0] += 1
             env = dict(inputs)
             for seg in segments:
                 seg.run(consts, env)
@@ -88,16 +90,46 @@ class CompiledPlan:
             return {name: env.get(name, consts.get(name))
                     for name in output_names}
 
+        self._trace_cell = trace_cell
         self._plan = plan
         self._jitted = jax.jit(plan)
+        self._jitted_donated = None        # built lazily on first donate call
 
-    def __call__(self, inputs: dict, *, jit: bool = True) -> dict:
+    @property
+    def trace_count(self) -> int:
+        """Times the plan body has executed in Python.
+
+        Under jit that is once per new input shape — the no-retrace probe
+        the serving tests assert on (a slot-padded engine must hold this
+        constant across ad-hoc batch sizes).  ``jit=False`` calls and
+        ``eval_shape`` traces also count, one each.
+        """
+        return self._trace_cell[0]
+
+    def __call__(self, inputs: dict, *, jit: bool = True,
+                 donate: bool = False) -> dict:
+        """Run the plan.  Results are returned **un-forced**: under JAX's
+        async dispatch they are device arrays whose compute may still be in
+        flight — call ``jax.block_until_ready``/``np.asarray`` when the
+        values are needed.  This is what lets the serving tier enqueue
+        every slot-shaped call before a single trailing sync.
+
+        ``donate=True`` hands the ``inputs`` buffers to XLA for reuse
+        (consts are never donated).  Only honored on accelerator backends —
+        CPU has no donation support, so the flag is ignored there — and the
+        caller must not touch the donated buffers afterwards.
+        """
         inputs = {k: jnp.asarray(v) for k, v in inputs.items()}
         for t in self.graph.inputs:
             if t.name not in inputs:
                 raise ValueError(f"missing graph input {t.name!r}")
-        fn = self._jitted if jit else self._plan
-        return fn(self.consts, inputs)
+        if not jit:
+            return self._plan(self.consts, inputs)
+        if donate and jax.default_backend() in ("gpu", "tpu"):
+            if self._jitted_donated is None:
+                self._jitted_donated = jax.jit(self._plan, donate_argnums=(1,))
+            return self._jitted_donated(self.consts, inputs)
+        return self._jitted(self.consts, inputs)
 
     # ------------------------------------------------------------- stats
     @property

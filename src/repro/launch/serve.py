@@ -1,6 +1,14 @@
-"""Production serving launcher: sharded params + batched engine.
+"""Production serving launcher: sharded LM engine or compiled-graph tier.
+
+LM generation (default):
 
   python -m repro.launch.serve --arch qwen2-1.5b --smoke --requests 8
+
+Compiled-QONNX-graph serving (the scheduler/registry stack — submit ->
+future lifecycle over the pipelined engine, p50/p99 report at the end):
+
+  python -m repro.launch.serve --graph TFC-w2a2 --requests 64
+  python -m repro.launch.serve --graph TFC-w2a2 --requests 64 --no-pipeline
 """
 from __future__ import annotations
 
@@ -15,23 +23,44 @@ from repro.configs import get_config, get_smoke_config
 from repro.dist.fault import elastic_mesh
 from repro.models import api
 from repro.quantize.config import FP32, QuantRecipe
-from repro.serve import GenerationEngine
+from repro.serve import EngineRegistry, GenerationEngine, ServeScheduler
 
 log = logging.getLogger("repro.launch.serve")
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen2-1.5b")
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--max-new-tokens", type=int, default=16)
-    ap.add_argument("--wbits", type=float, default=8)
-    ap.add_argument("--abits", type=float, default=8)
-    ap.add_argument("--kv-bits", type=float, default=8)
-    args = ap.parse_args()
-    logging.basicConfig(level=logging.INFO)
+def serve_graph(args) -> None:
+    """Serve a zoo graph behind EngineRegistry + ServeScheduler."""
+    from repro.models import zoo
 
+    registry = EngineRegistry(max_batch=args.max_batch,
+                              pipeline=not args.no_pipeline)
+    eng = registry.register(args.graph, zoo.ZOO[args.graph]())
+    rng = np.random.default_rng(0)
+    xs = [rng.standard_normal(eng.sample_shape, dtype=np.float32)
+          for _ in range(args.requests)]
+    eng(xs[0])                                 # warm the jitted slot shape
+
+    with ServeScheduler(eng, window_ms=args.window_ms,
+                        max_queue=max(args.max_batch * 4,
+                                      args.requests)) as sched:
+        t0 = time.time()
+        reqs = [sched.submit(x, deadline_ms=args.deadline_ms)
+                for x in xs]
+        for r in reqs:
+            r.wait(timeout=300)
+        dt = time.time() - t0
+    stats = sched.stats()
+    log.info(
+        "graph %s (%s): %d requests in %.2fs (%.1f req/s), "
+        "latency p50=%.2fms p99=%.2fms, queued p50=%.2fms, "
+        "%d flushes, %d deadline miss(es)",
+        args.graph, "pipelined" if not args.no_pipeline else "per-chunk sync",
+        len(reqs), dt, len(reqs) / dt,
+        stats["latency_p50_ms"], stats["latency_p99_ms"],
+        stats["queued_p50_ms"], stats["flushes"], stats["deadline_misses"])
+
+
+def serve_lm(args) -> None:
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     recipe = (QuantRecipe.w_a(args.wbits, args.abits,
                               kv_cache_bits=args.kv_bits)
@@ -54,6 +83,34 @@ def main():
         n_tok = sum(r.result.shape[0] for r in reqs)
         log.info("%d requests, %d tokens in %.2fs (%.1f tok/s)",
                  len(reqs), n_tok, dt, n_tok / dt)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new-tokens", type=int, default=16)
+    ap.add_argument("--wbits", type=float, default=8)
+    ap.add_argument("--abits", type=float, default=8)
+    ap.add_argument("--kv-bits", type=float, default=8)
+    # compiled-graph serving tier
+    ap.add_argument("--graph", metavar="MODEL",
+                    help="serve a zoo graph (e.g. TFC-w2a2) behind the "
+                         "scheduler/registry stack instead of the LM engine")
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--window-ms", type=float, default=2.0)
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request deadline passed to submit()")
+    ap.add_argument("--no-pipeline", action="store_true",
+                    help="per-chunk-sync dispatch (the benchmark baseline)")
+    args = ap.parse_args()
+    logging.basicConfig(level=logging.INFO)
+
+    if args.graph:
+        serve_graph(args)
+    else:
+        serve_lm(args)
 
 
 if __name__ == "__main__":

@@ -1,7 +1,30 @@
-"""repro.serve — batched generation + compiled QONNX graph serving."""
-from .engine import (  # noqa: F401
-    CompiledGraphEngine,
+"""repro.serve — the async, pipelined serving tier.
+
+* ``generation``  — batched LM generation (``GenerationEngine``)
+* ``engine``      — compiled-QONNX-graph serving (``CompiledGraphEngine``:
+                    slot batching, pipelined multi-chunk dispatch,
+                    request futures with latency telemetry)
+* ``scheduler``   — ``ServeScheduler``: background flush loop with bounded
+                    queue backpressure and deadline-aware flush windows
+* ``registry``    — ``EngineRegistry``: multi-model routing + atomic
+                    hot-swap reloads
+"""
+from .engine import CompiledGraphEngine, GraphRequest  # noqa: F401
+from .generation import (  # noqa: F401
     GenerationEngine,
-    GraphRequest,
+    Request,
     greedy_generate,
 )
+from .registry import EngineRegistry  # noqa: F401
+from .scheduler import QueueFull, ServeScheduler  # noqa: F401
+
+__all__ = [
+    "CompiledGraphEngine",
+    "EngineRegistry",
+    "GenerationEngine",
+    "GraphRequest",
+    "QueueFull",
+    "Request",
+    "ServeScheduler",
+    "greedy_generate",
+]

