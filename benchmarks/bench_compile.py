@@ -14,7 +14,15 @@ asserts the conv lowering still fires (≥1 conv segment fused, 0 Conv nodes
 left interpreted); ``--check-grouped MODEL`` additionally gates the
 grouped/depthwise kernel tier (every group>1 conv on the dedicated
 kernels, 0 block-diagonal carriers, cost-report MACs below the
-dense-equivalent block-diagonal count by exactly the reclaimed amount).
+dense-equivalent block-diagonal count by exactly the reclaimed amount);
+``--check-integer-requant MODEL`` gates the integer-only dyadic
+requantization path (every kernel segment on the int32 multiplier+shift
+epilogue, coverage recorded in the JSON artifact).
+
+Per model the JSON record also carries ``requant``: the plan's
+integer-path coverage (``CompiledPlan.requant_stats``) plus the measured
+epilogue speedup vs the same plan compiled with
+``use_integer_requant=False`` (the fp32 dequant->round->requant chain).
 """
 from __future__ import annotations
 
@@ -73,6 +81,19 @@ def run_detailed(cases=None) -> tuple[list[str], dict]:
             f"speedup={us_interp / us_comp:.1f}x;{fused};"
             f"compile_us={compile_us:.0f}")
 
+        # integer-requant coverage + epilogue speedup vs the fp32 baseline:
+        # the same graph compiled with the integer path disabled isolates
+        # the dequant->round->requant chain the dyadic path eliminates
+        rq = plan.requant_stats()
+        plan_fp32 = compile_graph(g, use_integer_requant=False)
+        us_fp32 = _time(lambda: jax.block_until_ready(
+            plan_fp32({"x": x})[plan_fp32.graph.output_names[0]]))
+        rows.append(
+            f"compile/{name}_fp32_requant,{us_fp32:.0f},"
+            f"int_coverage={rq['coverage']:.2f};"
+            f"epilogue_speedup={us_fp32 / us_comp:.2f}x;"
+            f"fp32_ops_eliminated={rq['fp32_ops_eliminated']}")
+
         # batched serving amortizes the fixed per-call overhead further
         xb = np.random.RandomState(1).randn(8, *shape[1:]).astype(np.float32)
         us_b = _time(lambda: jax.block_until_ready(
@@ -88,6 +109,11 @@ def run_detailed(cases=None) -> tuple[list[str], dict]:
             "interp_op_counts": dict(sorted(plan.interp_op_counts().items())),
             "batch8_us": round(us_b, 1),
             "batch8_us_per_sample": round(us_b / 8, 1),
+            "requant": {
+                **rq,
+                "fp32_requant_us": round(us_fp32, 1),
+                "epilogue_speedup": round(us_fp32 / us_comp, 3),
+            },
         }
     return rows, records
 
@@ -154,13 +180,38 @@ def check_grouped_lowering(name: str) -> dict:
     }
 
 
+def check_integer_requant(name: str) -> dict:
+    """Regression gate for the integer-only dyadic requantization path.
+
+    ``name`` (TFC-w1a1 / CNV-w1a1 in CI) must compile with **every**
+    kernel-family segment on the int32 multiplier+shift epilogue —
+    coverage 1.0, zero fp32-requant segments, and a positive count of
+    eliminated fp32 epilogue ops.  The zoo's scales are exact powers of
+    two by construction, so anything less means the dyadic detection or
+    the exactness proof regressed.
+    """
+    plan = compile_graph(zoo.ZOO[name]())
+    stats = plan.requant_stats()
+    return {
+        "model": name,
+        "requant_stats": stats,
+        "fused_counts": dict(sorted(plan.fused_counts.items())),
+        "ok": (stats["kernel_segments"] >= 1 and
+               stats["fp32_segments"] == 0 and
+               stats["coverage"] == 1.0 and
+               stats["fp32_ops_eliminated"] > 0),
+    }
+
+
 def main(argv=None) -> int:
     """CLI used by the CI smoke job: exit 0 iff every row was produced and
-    every ``--check-conv`` / ``--check-grouped`` gate holds.
+    every ``--check-conv`` / ``--check-grouped`` /
+    ``--check-integer-requant`` gate holds.
 
         python benchmarks/bench_compile.py [--quick] [--json PATH]
                                            [--check-conv MODEL ...]
                                            [--check-grouped MODEL ...]
+                                           [--check-integer-requant MODEL ...]
     """
     import argparse
     import json
@@ -181,19 +232,27 @@ def main(argv=None) -> int:
                          "grouped/depthwise kernels (0 block-diagonal "
                          "carriers) and the cost report's MAC count drops "
                          "vs the dense-equivalent number (repeatable)")
+    ap.add_argument("--check-integer-requant", metavar="MODEL",
+                    action="append", default=[],
+                    help="assert MODEL compiles with every kernel segment "
+                         "on the int32 dyadic requant epilogue (coverage "
+                         "1.0, 0 fp32-requant segments; repeatable)")
     args = ap.parse_args(argv)
     cases = QUICK_CASES if args.quick else CASES
     rows, records = run_detailed(cases)
     for row in rows:
         print(row)
 
-    ok = len(rows) == 3 * len(cases)
-    checks, grouped_checks = [], []
+    ok = len(rows) == 4 * len(cases)
+    checks, grouped_checks, requant_checks = [], [], []
     for name, check, bucket, tag in (
             [(n, check_conv_lowering, checks, "check_conv")
              for n in args.check_conv] +
             [(n, check_grouped_lowering, grouped_checks, "check_grouped")
-             for n in args.check_grouped]):
+             for n in args.check_grouped] +
+            [(n, check_integer_requant, requant_checks,
+              "check_integer_requant")
+             for n in args.check_integer_requant]):
         # a failing/crashing check must still reach the JSON artifact —
         # that's exactly when CI needs the diagnostics
         try:
@@ -202,14 +261,22 @@ def main(argv=None) -> int:
             c = {"model": name, "ok": False, "error": f"{type(e).__name__}: {e}"}
         bucket.append(c)
         verdict = "OK" if c["ok"] else "FAIL"
-        detail = c.get("error") or (f"interp_convs="
-                                    f"{c['conv_nodes_interpreted']}")
-        if not c.get("error") and tag == "check_grouped":
-            gs = c["grouped_stats"]
-            detail += (f";block_diag={gs['block_diagonal_grouped']};"
-                       f"reclaimed_macs={gs['reclaimed_macs']};"
-                       f"macs={c['report_macs']}<"
-                       f"dense_equiv={c['dense_equiv_macs']}")
+        if c.get("error"):
+            detail = c["error"]
+        elif tag == "check_integer_requant":
+            rs = c["requant_stats"]
+            detail = (f"coverage={rs['coverage']:.2f};"
+                      f"int32={rs['int32_segments']}/"
+                      f"{rs['kernel_segments']};"
+                      f"fp32_ops_eliminated={rs['fp32_ops_eliminated']}")
+        else:
+            detail = f"interp_convs={c['conv_nodes_interpreted']}"
+            if tag == "check_grouped":
+                gs = c["grouped_stats"]
+                detail += (f";block_diag={gs['block_diagonal_grouped']};"
+                           f"reclaimed_macs={gs['reclaimed_macs']};"
+                           f"macs={c['report_macs']}<"
+                           f"dense_equiv={c['dense_equiv_macs']}")
         print(f"{tag}/{name},{c.get('conv_segments_fused', 0)},"
               f"{detail};{verdict}")
         ok = ok and c["ok"]
@@ -220,6 +287,8 @@ def main(argv=None) -> int:
             payload["conv_checks"] = checks
         if grouped_checks:
             payload["grouped_checks"] = grouped_checks
+        if requant_checks:
+            payload["integer_requant_checks"] = requant_checks
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2, sort_keys=True)
         print(f"# wrote {args.json}")

@@ -17,8 +17,10 @@ passes, and ``serve.CompiledGraphEngine`` (per-model cost at load).
 """
 from .cost import CostReport, LayerReport, infer_cost  # noqa: F401
 from .datatypes import BIPOLAR, FLOAT32, DataType  # noqa: F401
-from .infer import infer_datatype_map, infer_datatypes  # noqa: F401
-from .ranges import (AccumulatorSpec, GraphAnalysis, QuantGrid,  # noqa: F401
-                     RangeInfo, analyze)
+from .infer import (infer_datatype_map, infer_datatypes,  # noqa: F401
+                    infer_dyadic_map)
+from .ranges import (DYADIC_MAX_MULT, AccumulatorSpec,  # noqa: F401
+                     GraphAnalysis, QuantGrid, RangeInfo, analyze,
+                     dyadic_decompose, is_power_of_two)
 from .validate import (QuantValidationError, ValidationIssue,  # noqa: F401
                        check_graph, validate_quantization)

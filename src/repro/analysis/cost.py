@@ -46,6 +46,8 @@ class LayerReport:
     acc_bits: Optional[int] = None
     mem_bytes: float = 0.0
     groups: int = 1             # Conv group attribute (1 for FC layers)
+    requant: Optional[str] = None     # "int32"/"fp32" when a plan is given
+    fp32_ops_eliminated: int = 0      # per-inference, from the segment meta
 
 
 @dataclass
@@ -89,16 +91,39 @@ class CostReport:
         block-diagonal carrier (0 when the model has no grouped convs)."""
         return self.dense_equiv_macs - self.macs
 
+    @property
+    def integer_segment_fraction(self) -> Optional[float]:
+        """Fraction of kernel-lowered layers whose requantization runs on
+        the integer (multiplier, shift) path; None when the report was
+        built without a compiled plan (no requant annotations)."""
+        annotated = [l for l in self.layers if l.requant is not None]
+        if not annotated:
+            return None
+        return sum(1 for l in annotated if l.requant == "int32") / \
+            len(annotated)
+
+    @property
+    def fp32_ops_eliminated(self) -> int:
+        """fp32 epilogue ops per inference removed by the integer path."""
+        return sum(l.fp32_ops_eliminated for l in self.layers)
+
     def table(self) -> str:
+        rq = any(l.requant is not None for l in self.layers)
         head = (f"{'layer':24s} {'op':8s} {'MACs':>12s} {'wbits':>5s} "
                 f"{'abits':>5s} {'acc':>4s} {'BOPs':>12s} {'KiB':>9s}")
+        if rq:
+            head += f" {'requant':>7s} {'fp32-elim':>10s}"
         lines = [head, "-" * len(head)]
         for l in self.layers:
-            lines.append(
+            line = (
                 f"{l.name[:24]:24s} {l.op_type:8s} {l.macs:12,d} "
                 f"{l.b_w:5.3g} {l.b_a:5.3g} "
                 f"{l.acc_bits if l.acc_bits is not None else '-':>4} "
                 f"{l.bops:12.4g} {l.mem_bytes / 1024:9.1f}")
+            if rq:
+                line += (f" {l.requant or '-':>7s} "
+                         f"{l.fp32_ops_eliminated:10,d}")
+            lines.append(line)
         lines.append("-" * len(head))
         lines.append(
             f"{self.graph_name[:24]:24s} {'TOTAL':8s} {self.macs:12,d} "
@@ -114,16 +139,25 @@ class CostReport:
                 f"grouped: {n_grouped} layers, {reclaimed:,} MACs reclaimed "
                 f"by the grouped/depthwise kernels vs a dense block-diagonal "
                 f"carrier ({self.dense_equiv_macs:,} dense-equivalent)")
+        frac = self.integer_segment_fraction
+        if frac is not None:
+            n_ann = sum(1 for l in self.layers if l.requant is not None)
+            n_int = sum(1 for l in self.layers if l.requant == "int32")
+            lines.append(
+                f"integer requant: {n_int}/{n_ann} kernel layers "
+                f"({frac:.0%} integer-only), fp32 epilogue ops eliminated "
+                f"per inference: {self.fp32_ops_eliminated:,}")
         return "\n".join(lines)
 
     def csv(self) -> str:
         rows = ["layer,op,macs,weights,b_w,b_a,acc_bits,bops,mem_bytes,"
-                "groups"]
+                "groups,requant,fp32_ops_eliminated"]
         for l in self.layers:
             rows.append(f"{l.name},{l.op_type},{l.macs},{l.weights},"
                         f"{l.b_w:g},{l.b_a:g},"
                         f"{l.acc_bits if l.acc_bits is not None else ''},"
-                        f"{l.bops:.6g},{l.mem_bytes:.1f},{l.groups}")
+                        f"{l.bops:.6g},{l.mem_bytes:.1f},{l.groups},"
+                        f"{l.requant or ''},{l.fp32_ops_eliminated}")
         return "\n".join(rows)
 
 
@@ -143,16 +177,35 @@ def _numel(shape) -> int:
 
 def infer_cost(graph: QonnxGraph, act_bits: float = 8.0,
                default_weight_bits: float = 8.0,
-               ga: Optional[GraphAnalysis] = None) -> CostReport:
+               ga: Optional[GraphAnalysis] = None,
+               plan=None) -> CostReport:
     """Analysis-driven inference cost of every MatMul/Gemm/Conv layer.
 
     Shapes must be known (run ``infer_shapes`` / the cleanup pipeline
     first); unknown-shape layers are skipped, matching the historical
     ``bops.graph_cost`` behaviour.  ``act_bits``/``default_weight_bits``
     are the fallbacks for tensors whose datatype inference says FLOAT32.
+
+    ``plan`` (an optional ``CompiledPlan`` over the same graph) annotates
+    each kernel-lowered layer with its requantization path
+    (``requant_path`` segment meta: ``"int32"`` for the exact dyadic
+    multiplier+shift epilogue, ``"fp32"`` for the float
+    dequant->round->requant chain) and the per-inference fp32 epilogue ops
+    the integer path eliminates; the report then exposes
+    ``integer_segment_fraction`` / ``fp32_ops_eliminated`` and grows the
+    matching table/CSV columns.
     """
     ga = ga or analyze(graph)
     dtypes, qbits = infer_datatype_map(graph, ga)
+    requant_by_node: dict = {}
+    if plan is not None:
+        for seg in getattr(plan, "segments", ()):
+            path = seg.meta.get("requant_path")
+            if path is None:
+                continue
+            elim = int(seg.meta.get("fp32_ops_eliminated", 0))
+            for n in seg.nodes:
+                requant_by_node[n.name] = (path, elim)
     report = CostReport(graph.name)
 
     for node in graph.nodes:
@@ -190,10 +243,12 @@ def infer_cost(graph: QonnxGraph, act_bits: float = 8.0,
             mem += _numel(out_shape) * 32.0 / 8.0    # fp32 accumulator out
         groups = int(node.attrs.get("group", 1)) if node.op_type == "Conv" \
             else 1
+        rq_path, rq_elim = requant_by_node.get(node.name, (None, 0))
         report.layers.append(LayerReport(
             base.name, node.op_type, base.macs, base.bops, base.weights,
             base.weight_bits, w_dt, a_dt, b_w, b_a,
-            None if spec is None else spec.bits, mem, groups))
+            None if spec is None else spec.bits, mem, groups,
+            rq_path, rq_elim))
     return report
 
 

@@ -108,6 +108,37 @@ def infer_datatype_map(graph: QonnxGraph,
     return dtypes, qbits
 
 
+def infer_dyadic_map(graph: QonnxGraph,
+                     ga: Optional[GraphAnalysis] = None
+                     ) -> dict[str, tuple[np.ndarray, int]]:
+    """{tensor: (multiplier, shift)} for every tensor on a dyadic grid.
+
+    A tensor qualifies when the range analysis knows its quantization grid
+    and the grid's scale decomposes exactly as ``mult * 2**-shift``
+    (``QuantGrid.dyadic``, odd multipliers bounded by ``DYADIC_MAX_MULT``)
+    — per-tensor scales give a scalar-shaped multiplier, per-channel
+    scales a multiplier in the scale's shape with one common shift.
+    These are exactly the tensors eligible (on their input side) for the
+    compiled tier's integer-only requantization path; the lowering's
+    ``select_requant`` layers its accumulation-headroom proof on top.
+    """
+    ga = ga or analyze(graph)
+    out: dict[str, tuple[np.ndarray, int]] = {}
+    seen = set()
+    for node in graph.nodes:
+        for t in node.outputs:
+            if not t or t in seen:
+                continue
+            seen.add(t)
+            grid = ga.range(t).grid
+            if grid is None:
+                continue
+            d = grid.dyadic()
+            if d is not None:
+                out[t] = d
+    return out
+
+
 def infer_datatypes(graph: QonnxGraph) -> QonnxGraph:
     """Registered pass: annotate ``value_info[t].qdtype`` on a graph copy."""
     g = graph.copy()

@@ -43,6 +43,56 @@ _SHUFFLE_OPS = {"Reshape", "Flatten", "Transpose", "Squeeze", "Unsqueeze",
                 "Identity"}
 
 
+# A scale only counts as dyadic when its odd multiplier fits this many
+# values.  Technically *every* float32 is m/2**t for some integer m, so an
+# unbounded decomposition would label near-dyadic floats like 0.1
+# (13421773/2**27) dyadic too; bounding the multiplier is what makes the
+# annotation mean "usefully dyadic" — small-m scales whose integer
+# requantization can also satisfy the kernel tier's 2**24 exactness bounds.
+DYADIC_MAX_MULT = 1 << 16
+
+
+def dyadic_decompose(scale, max_mult: int = DYADIC_MAX_MULT
+                     ) -> Optional[tuple[np.ndarray, int]]:
+    """Exact ``(multiplier, shift)`` decomposition of a dyadic scale array.
+
+    Returns ``(m, t)`` with ``scale == m * 2.0**-t`` elementwise and
+    *bit-exactly* in float32 (the reconstruction is verified — that is the
+    exactness proof the integer requant path builds on), where ``m`` is a
+    positive int64 array of ``scale``'s shape and ``t`` a single shared
+    shift (per-channel scales are aligned to a common shift so one rounding
+    right-shift serves every channel).  None when any element is
+    non-positive/non-finite, any aligned multiplier exceeds ``max_mult``,
+    or the reconstruction is not bit-exact.
+    """
+    a = np.asarray(scale, np.float64)
+    if a.size == 0 or not np.all(np.isfinite(a)) or np.any(a <= 0):
+        return None
+    mults, shifts = [], []
+    for v in a.reshape(-1):
+        num, den = float(v).as_integer_ratio()   # den is a power of two
+        t_i = den.bit_length() - 1
+        while num % 2 == 0:                      # odd-normalize
+            num //= 2
+            t_i -= 1
+        mults.append(num)
+        shifts.append(t_i)
+    t = max(shifts)
+    m = [num << (t - t_i) for num, t_i in zip(mults, shifts)]
+    if max(m) > max_mult:
+        return None
+    mult = np.asarray(m, np.int64).reshape(a.shape)
+    if not np.array_equal(np.asarray(mult * 2.0 ** -t, np.float32),
+                          np.asarray(scale, np.float32)):
+        return None                              # exactness proof failed
+    return mult, t
+
+
+def is_power_of_two(scale) -> bool:
+    """True iff every element of ``scale`` is exactly ``2**-t`` (m == 1)."""
+    return dyadic_decompose(scale, max_mult=1) is not None
+
+
 @dataclass(frozen=True)
 class QuantGrid:
     """A uniform grid x = scale * (q - zero_point), q in [int_lo, int_hi].
@@ -59,6 +109,24 @@ class QuantGrid:
     def int_bits(self) -> int:
         """Bits of the minimal signed/unsigned container of [int_lo, int_hi]."""
         return DataType.from_bounds(self.int_lo, self.int_hi).bits
+
+    def dyadic(self) -> Optional[tuple[np.ndarray, int]]:
+        """``(multiplier, shift)`` of a dyadic scale, else None.
+
+        The annotation the integer-requant lowering consumes: when every
+        scale feeding a fused segment decomposes, the fp32 epilogue can be
+        replaced by an int32 multiply + rounding right shift
+        (``quant_ops.round_shift``) with a machine-checked exactness proof.
+        """
+        return dyadic_decompose(self.scale)
+
+    @property
+    def is_dyadic(self) -> bool:
+        return self.dyadic() is not None
+
+    @property
+    def is_power_of_two(self) -> bool:
+        return is_power_of_two(self.scale)
 
 
 @dataclass(frozen=True)

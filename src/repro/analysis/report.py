@@ -1,35 +1,74 @@
 """Inference-cost report CLI over the model zoo (or a serialized graph).
 
     python -m repro.analysis.report --model TFC-w2a2
-    python -m repro.analysis.report --all [--quick] [--csv]
+    python -m repro.analysis.report --all [--quick] [--csv | --json]
     python -m repro.analysis.report --graph path/to/graph.json
 
 Per model: the per-layer cost table (MACs, weight/activation bit widths,
 minimal accumulator widths, Eq. 5 BOPs, memory traffic) computed from the
 analysis subsystem, plus a Table III comparison when the model has a
-reference row.  Exit status 0 iff every requested report was produced.
+reference row.  Each model is also compiled so every kernel-lowered layer
+reports its requantization path (``int32`` dyadic multiplier+shift vs the
+``fp32`` dequant->round->requant chain) and the report's integer-path
+summary is populated.  ``--json`` emits machine-readable per-layer rows
+plus the integer-path summary per model.  Exit status 0 iff every
+requested report was produced.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 
 from repro.core import transforms
 from repro.models import zoo
 
-from .cost import compare_table3, infer_cost
+from .cost import CostReport, compare_table3, infer_cost
 
 # models cheap enough for CI smoke runs (MobileNet-224 shape inference and
 # weight-quant evaluation dominate full runs)
 QUICK_MODELS = ("TFC-w1a1", "TFC-w2a2", "CNV-w2a2")
 
 
-def report_model(name: str, csv: bool = False) -> str:
-    g = zoo.ZOO[name]()
-    g = transforms.infer_shapes(g)
-    rep = infer_cost(g)
+def _analyzed(g):
+    """Shape-inferred report graph + the compiled plan for requant meta."""
+    from repro.core.compile import compile_graph
+    plan = compile_graph(g)
+    gs = transforms.infer_shapes(g)
+    return infer_cost(gs, plan=plan), plan
+
+
+def _layer_rows(rep: CostReport) -> list:
+    return [{
+        "layer": l.name, "op": l.op_type, "macs": l.macs,
+        "weights": l.weights, "b_w": l.b_w, "b_a": l.b_a,
+        "acc_bits": l.acc_bits, "bops": l.bops, "mem_bytes": l.mem_bytes,
+        "groups": l.groups, "requant": l.requant,
+        "fp32_ops_eliminated": l.fp32_ops_eliminated,
+    } for l in rep.layers]
+
+
+def _payload(name: str, rep: CostReport, plan) -> dict:
+    return {
+        "model": name,
+        "layers": _layer_rows(rep),
+        "totals": {
+            "macs": rep.macs, "bops": rep.bops, "weights": rep.weights,
+            "total_weight_bits": int(rep.total_weight_bits),
+            "mem_bytes": rep.total_mem_bytes,
+        },
+        "integer_path": {
+            "integer_segment_fraction": rep.integer_segment_fraction,
+            "fp32_ops_eliminated": rep.fp32_ops_eliminated,
+            **plan.requant_stats(),
+        },
+    }
+
+
+def report_model(name: str, csv: bool = False):
+    rep, plan = _analyzed(zoo.ZOO[name]())
     if csv:
-        return rep.csv()
+        return rep.csv(), rep, plan
     out = [f"== {name} ==", rep.table()]
     if name in zoo.TABLE3:
         conv_net = "CNV" in name or "MobileNet" in name
@@ -37,15 +76,15 @@ def report_model(name: str, csv: bool = False) -> str:
         out.append(compare_table3(
             rep, zoo.TABLE3[name], skip_first_conv=conv_net,
             skip_first_conv_weights="MobileNet" in name))
-    return "\n".join(out)
+    return "\n".join(out), rep, plan
 
 
-def report_graph_file(path: str, csv: bool = False) -> str:
+def report_graph_file(path: str, csv: bool = False):
     from repro.core import serialize
     g = serialize.load(path)
-    g = transforms.infer_shapes(g)
-    rep = infer_cost(g)
-    return rep.csv() if csv else f"== {g.name} ==\n{rep.table()}"
+    rep, plan = _analyzed(g)
+    text = rep.csv() if csv else f"== {g.name} ==\n{rep.table()}"
+    return text, rep, plan, g.name
 
 
 def main(argv=None) -> int:
@@ -60,6 +99,8 @@ def main(argv=None) -> int:
     ap.add_argument("--graph", action="append", default=[],
                     help="path to a serialized QonnxGraph JSON")
     ap.add_argument("--csv", action="store_true", help="CSV per-layer rows")
+    ap.add_argument("--json", action="store_true",
+                    help="JSON per-layer rows + integer-path summary")
     args = ap.parse_args(argv)
 
     names = list(args.model)
@@ -70,16 +111,27 @@ def main(argv=None) -> int:
     if not names and not args.graph:
         ap.error("nothing to report: pass --model/--all/--graph")
 
+    payloads = []
     for name in names:
         if name not in zoo.ZOO:
             print(f"unknown model {name!r}; known: {', '.join(zoo.ZOO)}",
                   file=sys.stderr)
             return 2
-        print(report_model(name, csv=args.csv))
-        print()
+        text, rep, plan = report_model(name, csv=args.csv)
+        if args.json:
+            payloads.append(_payload(name, rep, plan))
+        else:
+            print(text)
+            print()
     for path in args.graph:
-        print(report_graph_file(path, csv=args.csv))
-        print()
+        text, rep, plan, gname = report_graph_file(path, csv=args.csv)
+        if args.json:
+            payloads.append(_payload(gname, rep, plan))
+        else:
+            print(text)
+            print()
+    if args.json:
+        print(json.dumps(payloads, indent=2))
     return 0
 
 

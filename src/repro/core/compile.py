@@ -153,6 +153,34 @@ class CompiledPlan:
                 out[n.op_type] = out.get(n.op_type, 0) + 1
         return out
 
+    def requant_stats(self) -> dict:
+        """Integer-requant path telemetry aggregated over kernel segments.
+
+        Only kernel-family segments (matmul/conv kinds) count — a
+        ``quant_dequant`` segment quantizes from the unbounded fp32 input
+        domain and is elementwise-identical to the oracle either way, so it
+        has no requant path to pick.  ``coverage`` is the integer-path
+        fraction (1.0 when there are no kernel segments at all);
+        ``fp32_ops_eliminated`` sums each int32 segment's per-trace count
+        of fp32 epilogue ops replaced by integer arithmetic.
+        """
+        out = {"kernel_segments": 0, "int32_segments": 0, "fp32_segments": 0,
+               "fp32_ops_eliminated": 0}
+        for s in self.segments:
+            path = s.meta.get("requant_path")
+            if path is None:
+                continue
+            out["kernel_segments"] += 1
+            if path == "int32":
+                out["int32_segments"] += 1
+                out["fp32_ops_eliminated"] += s.meta.get(
+                    "fp32_ops_eliminated", 0)
+            else:
+                out["fp32_segments"] += 1
+        out["coverage"] = (out["int32_segments"] / out["kernel_segments"]
+                          if out["kernel_segments"] else 1.0)
+        return out
+
     def grouped_conv_stats(self) -> dict:
         """Grouped/depthwise-lowering telemetry aggregated over segments.
 
@@ -214,8 +242,8 @@ def _make_interp_segment(nodes: list[Node], static_consts: dict) -> Segment:
 
 def compile_graph(graph: QonnxGraph, *, run_cleanup: bool = True,
                   use_kernels: bool = True, use_int4: bool = True,
-                  use_analysis: bool = True,
-                  interpret: bool = True) -> CompiledPlan:
+                  use_analysis: bool = True, interpret: bool = True,
+                  use_integer_requant: bool = True) -> CompiledPlan:
     """Partition ``graph`` into fused segments and emit one jitted plan.
 
     run_cleanup  — run the declarative "compile_prep" pipeline first
@@ -229,6 +257,10 @@ def compile_graph(graph: QonnxGraph, *, run_cleanup: bool = True,
                    kernel-variant and accumulator-dtype selection (actual
                    value ranges) instead of declared-bit-width matching
     interpret    — forwarded to the Pallas kernels (True on CPU)
+    use_integer_requant — allow the dyadic integer-epilogue fast path
+                   (lowering/requant.py) on segments whose exactness proof
+                   holds; False pins every segment to the fp32 epilogue
+                   (the benchmark baseline for the epilogue speedup)
     """
     if run_cleanup:
         from . import passes
@@ -240,7 +272,8 @@ def compile_graph(graph: QonnxGraph, *, run_cleanup: bool = True,
     if use_kernels and use_analysis:
         from repro.analysis import analyze
         ga = analyze(g)
-    ctx = LoweringContext(analysis=ga, use_int4=use_int4, interpret=interpret)
+    ctx = LoweringContext(analysis=ga, use_int4=use_int4, interpret=interpret,
+                          use_int_requant=use_integer_requant)
 
     consts: dict = {k: jnp.asarray(v) for k, v in g.initializers.items()}
 

@@ -86,6 +86,8 @@ class LoweringContext:
     analysis: Optional[object] = None      # GraphAnalysis or None
     use_int4: bool = True
     interpret: bool = True
+    use_int_requant: bool = True   # dyadic integer-epilogue selection
+                                   # (lowering/requant.py; needs analysis)
 
 
 @dataclass

@@ -59,6 +59,7 @@ from .base import (LoweringContext, LoweringRule, Segment, conv_channel_scale,
                    register_rule, select_accumulator, sole_consumer,
                    static_value)
 from .qdq import stage_qdq_epilogue, static_act_quant_params
+from .requant import select_requant
 from .weights import (KernelMatch, QuantWeight, chain_absorbable,
                       resolve_quant_weight, stage_kernel_carriers)
 
@@ -204,6 +205,10 @@ class QuantConvRule(LoweringRule):
         # zero-padding-aware bound wants the conv-shaped weights, not the
         # staged im2col matrix
         select_accumulator(ctx, node, m, w_int=nb.qw.w_int)
+        select_requant(ctx, g, node, m,
+                       w_absum=np.abs(nb.qw.w_int.astype(np.int64))
+                       .sum(axis=(1, 2, 3)),
+                       relu=nb.relu, act=nb.act)
         return m
 
     def emit(self, idx: int, m: QuantConvMatch, consts: dict,
@@ -215,21 +220,28 @@ class QuantConvRule(LoweringRule):
         conv = functools.partial(
             kernel_ops.quant_conv2d, kernel_shape=m.kernel_shape,
             strides=m.strides, pads=m.pads, dilations=m.dilations,
-            packed=use_int4, interpret=ctx.interpret, acc_dtype=m.acc_dtype)
+            packed=use_int4, interpret=ctx.interpret, acc_dtype=m.acc_dtype,
+            requant=None if m.requant is None else m.requant.spec)
 
         keys = [w_key, s_key] + ([b_key] if b_key else [])
         qdq = None
-        if m.act is not None:
+        if m.act is not None and m.requant is None:
             qdq, (qs_key, qz_key) = stage_qdq_epilogue(
                 idx, consts, ctx, scale=m.act.scale,
                 zero_point=m.act.zero_point, bit_width=m.act.bit_width,
                 signed=m.act.signed, narrow=m.act.narrow,
                 rounding_mode=m.act.rounding_mode)
             keys += [qs_key, qz_key]
-        x_name, out_name, relu = m.x, m.out, m.relu
+        x_name, out_name = m.x, m.out
+        # integer path: relu and the activation Quant are folded into the
+        # kernel's IntRequant epilogue; only the exact x / s_x remains here
+        relu = m.relu and m.requant is None
+        in_scale = None if m.requant is None else m.requant.in_scale
 
         def run(consts, env):
             x = env.get(x_name, consts.get(x_name))
+            if in_scale is not None:
+                x = x.astype(jnp.float32) / in_scale
             y = conv(x, consts[w_key], consts[s_key],
                      consts[b_key] if b_key else None)
             if relu:

@@ -41,12 +41,14 @@ from dataclasses import dataclass
 from typing import Optional
 
 import jax.numpy as jnp
+import numpy as np
 
 from ..graph import Node, QonnxGraph
 from .base import (LoweringContext, LoweringRule, Segment, register_rule,
                    select_accumulator)
 from .conv import ActQuantParams, QuantConvMatch, match_conv_common
 from .qdq import stage_qdq_epilogue
+from .requant import select_requant
 from .weights import stage_kernel_carriers
 
 # beyond this the per-group blocked kernel's group-outermost grid stops
@@ -123,6 +125,12 @@ class GroupedConvRule(LoweringRule):
             dense_int4_ok=dense_int4_ok)
         # conv-shaped weights: the bound contracts the true I/g·kH·kW field
         select_accumulator(ctx, node, m, w_int=nb.qw.w_int)
+        # per-channel |w| sums in natural O order == the group-major order
+        # of the (O,) scale (ONNX grouped convs number channels group-major)
+        select_requant(ctx, g, node, m,
+                       w_absum=np.abs(nb.qw.w_int.astype(np.int64))
+                       .sum(axis=(1, 2, 3)),
+                       relu=nb.relu, act=nb.act)
         return m
 
     def emit(self, idx: int, m: GroupedConvMatch, consts: dict,
@@ -138,7 +146,7 @@ class GroupedConvRule(LoweringRule):
         act: Optional[ActQuantParams] = m.act
         qs_key = qz_key = None
         qdq = None
-        if act is not None:
+        if act is not None and m.requant is None:
             # identical staging to the QDQ rule; the depthwise kernel
             # consumes the staged consts in its fused epilogue instead of a
             # separate quant_dequant call
@@ -148,20 +156,28 @@ class GroupedConvRule(LoweringRule):
                 rounding_mode=act.rounding_mode)
             keys += [qs_key, qz_key]
 
-        x_name, out_name, relu = m.x, m.out, m.relu
+        x_name, out_name = m.x, m.out
+        # integer path: relu + act Quant live inside the IntRequant spec;
+        # the run closure only performs the exact x / s_x division
+        relu = m.relu and m.requant is None
+        spec = None if m.requant is None else m.requant.spec
+        in_scale = None if m.requant is None else m.requant.in_scale
         if m.depthwise:
             conv = functools.partial(
                 kernel_ops.quant_depthwise_conv2d,
                 kernel_shape=m.kernel_shape, strides=m.strides, pads=m.pads,
                 dilations=m.dilations, relu=relu, interpret=ctx.interpret,
-                acc_dtype=m.acc_dtype,
-                act_bits=None if act is None else act.bit_width,
+                acc_dtype=m.acc_dtype, requant=spec,
+                act_bits=None if act is None or spec is not None
+                else act.bit_width,
                 act_signed=act.signed if act else True,
                 act_narrow=act.narrow if act else False,
                 act_rounding=act.rounding_mode if act else "ROUND")
 
             def run(consts, env):
                 x = env.get(x_name, consts.get(x_name))
+                if in_scale is not None:
+                    x = x.astype(jnp.float32) / in_scale
                 env[out_name] = conv(
                     x, consts[w_key], consts[s_key],
                     consts[b_key] if b_key else None,
@@ -172,10 +188,12 @@ class GroupedConvRule(LoweringRule):
                 kernel_ops.quant_grouped_conv2d, groups=m.group,
                 kernel_shape=m.kernel_shape, strides=m.strides, pads=m.pads,
                 dilations=m.dilations, packed=use_int4,
-                interpret=ctx.interpret, acc_dtype=m.acc_dtype)
+                interpret=ctx.interpret, acc_dtype=m.acc_dtype, requant=spec)
 
             def run(consts, env):
                 x = env.get(x_name, consts.get(x_name))
+                if in_scale is not None:
+                    x = x.astype(jnp.float32) / in_scale
                 y = conv(x, consts[w_key], consts[s_key],
                          consts[b_key] if b_key else None)
                 if relu:

@@ -22,6 +22,7 @@ from ..graph import Node, QonnxGraph
 from .base import (LoweringContext, LoweringRule, Segment, col_scale,
                    register_rule, select_accumulator, sole_consumer,
                    static_value)
+from .requant import select_requant
 from .weights import (KernelMatch, chain_absorbable, resolve_quant_weight,
                       stage_kernel_carriers)
 
@@ -49,13 +50,20 @@ def make_matmul_segment(idx: int, m: KernelMatch, consts: dict,
         idx, m, consts, ctx, kinds)
     kernel = functools.partial(
         kernel_ops.quant_matmul_int4 if use_int4 else kernel_ops.quant_matmul,
-        interpret=ctx.interpret, acc_dtype=m.acc_dtype)
+        interpret=ctx.interpret, acc_dtype=m.acc_dtype,
+        requant=None if m.requant is None else m.requant.spec)
     x_name, out_name = m.x, m.out
+    # integer path: feed the kernel grid indices (q - z).  x / s_x is an
+    # exact fp32 division — the true quotient is a representable integer
+    # (select_requant proved it), and IEEE division is correctly rounded.
+    in_scale = None if m.requant is None else m.requant.in_scale
 
     def run(consts, env):
         x = env.get(x_name, consts.get(x_name))
         lead = x.shape[:-1]
         x2 = x.reshape((-1, x.shape[-1])).astype(jnp.float32)
+        if in_scale is not None:
+            x2 = x2 / in_scale
         y = kernel(x2, consts[w_key], consts[s_key],
                    consts[b_key] if b_key else None)
         env[out_name] = y.reshape(lead + (y.shape[-1],))
@@ -92,6 +100,9 @@ class QuantMatMulRule(LoweringRule):
         m = _finish_match(g, node, nodes, n, qw.w_int, scale, int4_ok)
         if m is not None:
             select_accumulator(ctx, node, m)
+            select_requant(ctx, g, node, m,
+                           w_absum=np.abs(m.w_int.astype(np.int64))
+                           .sum(axis=0))
         return m
 
     def emit(self, idx: int, match: QuantMatMulMatch, consts: dict,

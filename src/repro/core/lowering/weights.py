@@ -41,6 +41,7 @@ class KernelMatch(Match):
     int4_ok: bool                # packed-int4 dispatch is sound
     acc_dtype: object = jnp.float32   # analysis-selected accumulator
     acc_bits: Optional[int] = None    # minimal accumulator width (if proven)
+    requant: Optional[object] = None  # proven RequantPlan (integer path)
 
 
 def stage_kernel_carriers(idx: int, m: KernelMatch, consts: dict, ctx,
@@ -65,12 +66,19 @@ def stage_kernel_carriers(idx: int, m: KernelMatch, consts: dict, ctx,
     w_key, s_key, b_key = f"__seg{idx}_w", f"__seg{idx}_s", f"__seg{idx}_b"
     consts[w_key] = (pack or kernel_ops.pack_int4)(jnp.asarray(m.w_int)) \
         if use_int4 else jnp.asarray(m.w_int)
-    consts[s_key] = jnp.asarray(m.scale)
+    if m.requant is not None:
+        # integer path: the scale slot carries the int32 M_x*M_w multipliers
+        consts[s_key] = jnp.asarray(m.requant.mult, jnp.int32)
+    else:
+        consts[s_key] = jnp.asarray(m.scale)
     if m.bias is not None:
         consts[b_key] = jnp.asarray(m.bias, jnp.float32)
-    meta = {"acc": jnp.dtype(m.acc_dtype).name}
+    meta = {"acc": jnp.dtype(m.acc_dtype).name,
+            "requant_path": "int32" if m.requant is not None else "fp32"}
     if m.acc_bits is not None:
         meta["acc_bits"] = m.acc_bits
+    if m.requant is not None:
+        meta["fp32_ops_eliminated"] = m.requant.fp32_ops_eliminated
     return (kind, use_int4, w_key, s_key,
             b_key if m.bias is not None else None, meta)
 

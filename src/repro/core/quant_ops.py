@@ -54,6 +54,54 @@ def round_with_mode(x: Array, rounding_mode: str) -> Array:
     raise ValueError(f"unknown rounding_mode {rounding_mode!r}; expected one of {ROUNDING_MODES}")
 
 
+def round_shift(p: Array, shift: int, rounding_mode: str = "ROUND") -> Array:
+    """Integer rounding right shift: ``round(p / 2**shift)`` in pure
+    integer arithmetic, under any QONNX rounding mode.
+
+    This is the NEMO-style dyadic requantization primitive: when a scale is
+    ``m / 2**t`` the whole fp32 dequant->round->requant chain collapses to
+    an int32 multiply plus this shift, which is what the compiled tier's
+    integer epilogue emits.  ``p`` is an integer array, ``shift`` a static
+    Python int >= 0 (0 is the identity).
+
+    Every mode is realized from the floor decomposition ``p = (p >> s) *
+    2**s + r`` with ``0 <= r < 2**s`` — no ``|p| + half`` style biasing, so
+    the result is exact over the full int32 domain (no overflow even for
+    INT32_MIN/INT32_MAX inputs; the rounding-parity suite pins this edge).
+    """
+    s = int(shift)
+    if s < 0:
+        raise ValueError(f"round_shift needs shift >= 0, got {shift}")
+    if s == 0:
+        return p
+    m = rounding_mode.upper()
+    if m not in ROUNDING_MODES:
+        raise ValueError(
+            f"unknown rounding_mode {rounding_mode!r}; expected one of "
+            f"{ROUNDING_MODES}")
+    q = p >> s                            # floor(p / 2**s), arithmetic shift
+    r = p - (q << s)                      # remainder in [0, 2**s)
+    half = 1 << (s - 1)
+    one = jnp.ones((), p.dtype)
+    zero = jnp.zeros((), p.dtype)
+    if m == "FLOOR":
+        return q
+    if m == "CEIL":
+        return q + jnp.where(r != 0, one, zero)
+    if m in ("DOWN", "ROUND_TO_ZERO"):    # toward zero
+        return q + jnp.where((r != 0) & (p < 0), one, zero)
+    if m == "UP":                         # away from zero
+        return q + jnp.where((r != 0) & (p > 0), one, zero)
+    if m == "ROUND":                      # ties to even
+        return q + jnp.where((r > half) | ((r == half) & ((q & 1) == 1)),
+                             one, zero)
+    if m == "HALF_UP":                    # ties away from zero
+        return q + jnp.where(jnp.where(p >= 0, r >= half, r > half),
+                             one, zero)
+    # HALF_DOWN: ties toward zero
+    return q + jnp.where(jnp.where(p >= 0, r > half, r >= half), one, zero)
+
+
 def min_int(signed: bool, narrow: bool, bit_width: ArrayLike) -> Array:
     """Minimum integer of the target interval (Eq. 2, extended with ``narrow``).
 

@@ -157,11 +157,22 @@ def quant_to_multithreshold(graph: QonnxGraph) -> QonnxGraph:
         n_steps = hi - lo
         if n_steps <= 0 or n_steps > 4096:
             continue
-        # thresholds where round(x/s) crosses each integer level (ROUND ==
-        # half-even differs from half-up only *at* the boundary; FINN uses
-        # >= comparisons, i.e. half-up — exact off the measure-zero ties)
-        thr = np.asarray([[s * (lo + i + 0.5) for i in range(n_steps)]],
-                         np.float32)
+        # Thresholds where round(x/s) crosses each integer level.  The
+        # executor realizes a level with ``x >= T`` (half-up at the
+        # boundary), but Quant's default ROUND mode is half-even: at an
+        # exact tie x == s*(k + 0.5) the value stays at k when k+1 is odd.
+        # With power-of-two / dyadic scales those ties are hit exactly, so
+        # encode the strict ``>`` needed for odd target levels by nudging
+        # the threshold up one float32 ulp — exact for every representable
+        # input.  Non-ROUND modes keep the plain half-up thresholds (they
+        # only ever disagree on the same measure-zero boundary).
+        mode = node.attrs.get("rounding_mode", "ROUND")
+        thr = np.empty((1, n_steps), np.float32)
+        for i in range(n_steps):
+            t = np.float32(s * (lo + i + 0.5))
+            if mode == "ROUND" and (lo + i + 1) % 2 != 0:
+                t = np.nextafter(t, np.float32(np.inf), dtype=np.float32)
+            thr[0, i] = t
         t_name = g.fresh_name(f"{node.name}_thresholds")
         g.initializers[t_name] = thr
         src = act.inputs[0] if act is not None else x_name

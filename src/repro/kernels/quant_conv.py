@@ -121,7 +121,7 @@ def extract_patches(x, kernel_shape, strides=(1, 1), pads=(0, 0, 0, 0),
 def quant_conv2d(x, w2, w_scale, bias=None, *, kernel_shape, strides=(1, 1),
                  pads=(0, 0, 0, 0), dilations=(1, 1), packed=False,
                  blocks=DEFAULT_BLOCKS, interpret=True,
-                 out_dtype=jnp.float32, acc_dtype=jnp.float32):
+                 out_dtype=jnp.float32, acc_dtype=jnp.float32, requant=None):
     """Fused quantized conv: im2col patches through the integer matmul kernels.
 
     x        — (N, C, H, W) activations (any float dtype; cast to f32)
@@ -129,6 +129,8 @@ def quant_conv2d(x, w2, w_scale, bias=None, *, kernel_shape, strides=(1, 1),
                packing thereof (C·kH·kW // 2, O) when ``packed``
     w_scale  — dequant scale, scalar or per-output-channel (O,)
     bias     — optional (O,) f32, applied per output channel
+    requant  — optional ``IntRequant``: integer dyadic epilogue; ``w_scale``
+               then carries int32 multipliers (see ``quant_matmul``)
     Returns (N, O, OH, OW) in ``out_dtype``.
     """
     x = jnp.asarray(x, jnp.float32)
@@ -136,6 +138,6 @@ def quant_conv2d(x, w2, w_scale, bias=None, *, kernel_shape, strides=(1, 1),
                                         dilations)
     mm = quant_matmul_int4 if packed else quant_matmul
     y = mm(patches, w2, w_scale, bias, blocks=blocks, interpret=interpret,
-           out_dtype=out_dtype, acc_dtype=acc_dtype)
+           out_dtype=out_dtype, acc_dtype=acc_dtype, requant=requant)
     y = y.reshape(x.shape[0], oh, ow, y.shape[-1])
     return jnp.transpose(y, (0, 3, 1, 2))

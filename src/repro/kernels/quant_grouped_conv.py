@@ -46,6 +46,7 @@ from ._blocks import round_up as _round_up
 from .quant_conv import conv_tap_slices, extract_patches
 from .quant_dequant import _round_kernel_body, _static_bounds
 from .quant_matmul import DEFAULT_BLOCKS, _unpack_lo_hi
+from .requant import int_epilogue
 
 DEFAULT_DW_BLOCK = (256, 128)     # (bm rows, bc channels) — lane-axis = C
 
@@ -140,7 +141,7 @@ def _pad3(a, rows: int, cols: int, value=0):
 
 
 def _gqmm_kernel(x_ref, w_ref, s_ref, o_ref, acc_ref, *, nk, acc_dtype,
-                 packed):
+                 packed, requant=None):
     k = pl.program_id(3)
 
     @pl.when(k == 0)
@@ -160,29 +161,39 @@ def _gqmm_kernel(x_ref, w_ref, s_ref, o_ref, acc_ref, *, nk, acc_dtype,
 
     @pl.when(k == nk - 1)
     def _finish():
-        o_ref[0] = (acc_ref[...].astype(jnp.float32) *
-                    s_ref[0].astype(jnp.float32)).astype(o_ref.dtype)
+        if requant is None:
+            o_ref[0] = (acc_ref[...].astype(jnp.float32) *
+                        s_ref[0].astype(jnp.float32)).astype(o_ref.dtype)
+        else:
+            # integer path: s_ref carries int32 (M_x * M_w) multipliers and
+            # the whole relu/requant epilogue runs inside the kernel
+            o_ref[0] = int_epilogue(acc_ref[...], s_ref[0], requant,
+                                    o_ref.dtype)
 
 
-def _norm_group_scale(w_scale, g: int, ng: int):
-    """Scale () or (O,) (group-major output channels) -> (G, 1, Ng) f32."""
-    s = jnp.asarray(w_scale, jnp.float32)
+def _norm_group_scale(w_scale, g: int, ng: int, dtype=jnp.float32):
+    """Scale () or (O,) (group-major output channels) -> (G, 1, Ng)."""
+    s = jnp.asarray(w_scale, dtype)
     if s.ndim == 0 or s.size == 1:
         return jnp.full((g, 1, ng), s.reshape(()))
     return s.reshape(g, 1, ng)
 
 
 @functools.partial(jax.jit, static_argnames=("packed", "blocks", "interpret",
-                                             "out_dtype", "acc_dtype"))
+                                             "out_dtype", "acc_dtype",
+                                             "requant"))
 def quant_grouped_matmul(xg, wg, w_scale, *, packed=False,
                          blocks=DEFAULT_BLOCKS, interpret=True,
-                         out_dtype=jnp.float32, acc_dtype=jnp.float32):
+                         out_dtype=jnp.float32, acc_dtype=jnp.float32,
+                         requant=None):
     """Per-group integer matmul: out[g] = xg[g] @ (scale[g] * wg[g]).
 
     xg: (G, M, Kg) f32 per-group activations/patches;
     wg: (G, Kg, Ng) int8, or its per-group int4 packing (G, Kg//2, Ng)
         when ``packed``;
     w_scale: scalar or (G·Ng,) group-major per-output-channel scale.
+    requant: optional ``IntRequant`` — integer dyadic epilogue; ``w_scale``
+    then carries int32 multipliers (acc_dtype must be int32).
     Returns (G, M, Ng) in ``out_dtype``.  The group index is the outermost
     grid dim — every group runs the standard K-innermost blocked matmul on
     its own slice, so MACs and carrier bytes are the true per-group
@@ -198,12 +209,13 @@ def quant_grouped_matmul(xg, wg, w_scale, *, packed=False,
     mp, np_, kp = _round_up(m, bm), _round_up(n, bn), _round_up(kdim, bk)
     xq = _pad3(xg, mp, kp)
     wq = _pad3(wg, kp // 2 if packed else kp, np_)
-    s3 = _pad3(_norm_group_scale(w_scale, g, n), 1, np_)
+    s_dtype = jnp.int32 if requant is not None else jnp.float32
+    s3 = _pad3(_norm_group_scale(w_scale, g, n, s_dtype), 1, np_)
     grid = (g, mp // bm, np_ // bn, kp // bk)
 
     out = pl.pallas_call(
         functools.partial(_gqmm_kernel, nk=grid[3], acc_dtype=acc_dtype,
-                          packed=packed),
+                          packed=packed, requant=requant),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, bm, bk), lambda gi, i, j, k: (gi, i, k)),
@@ -222,7 +234,8 @@ def quant_grouped_matmul(xg, wg, w_scale, *, packed=False,
 def quant_grouped_conv2d(x, wg, w_scale, bias=None, *, groups, kernel_shape,
                          strides=(1, 1), pads=(0, 0, 0, 0), dilations=(1, 1),
                          packed=False, blocks=DEFAULT_BLOCKS, interpret=True,
-                         out_dtype=jnp.float32, acc_dtype=jnp.float32):
+                         out_dtype=jnp.float32, acc_dtype=jnp.float32,
+                         requant=None):
     """Fused grouped quantized conv: per-group im2col onto the blocked kernel.
 
     x        — (N, C, H, W) activations (cast to f32)
@@ -232,6 +245,8 @@ def quant_grouped_conv2d(x, wg, w_scale, bias=None, *, groups, kernel_shape,
                ``pack_int4_grouped``)
     w_scale  — dequant scale, scalar or group-major per-output-channel (O,)
     bias     — optional (O,) f32
+    requant  — optional ``IntRequant``: integer dyadic epilogue; ``w_scale``
+               then carries int32 multipliers (see ``quant_grouped_matmul``)
     Returns (N, O, OH, OW) in ``out_dtype``.
     """
     x = jnp.asarray(x, jnp.float32)
@@ -244,7 +259,8 @@ def quant_grouped_conv2d(x, wg, w_scale, bias=None, *, groups, kernel_shape,
     xg = jnp.transpose(patches.reshape(m, groups, kg), (1, 0, 2))
     y = quant_grouped_matmul(xg, wg, w_scale, packed=packed, blocks=blocks,
                              interpret=interpret, out_dtype=out_dtype,
-                             acc_dtype=acc_dtype)          # (G, M, Ng)
+                             acc_dtype=acc_dtype,
+                             requant=requant)              # (G, M, Ng)
     o = groups * y.shape[-1]
     y = jnp.transpose(y, (1, 0, 2)).reshape(m, o)
     if bias is not None:
@@ -255,11 +271,14 @@ def quant_grouped_conv2d(x, wg, w_scale, bias=None, *, groups, kernel_shape,
 
 # ---------------------------------------------- depthwise VPU tap-reduce
 
-def _dw_kernel(*refs, relu, act, acc_dtype, has_bias):
+def _dw_kernel(*refs, relu, act, acc_dtype, has_bias, requant=None):
     """taps (T, bm, bc) × weights (T, bc) -> (bm, bc) with fused epilogue.
 
     ``act`` is None or the static (lo, hi, rounding_mode) of a fused
     per-tensor activation requant; its scale/zp arrive as (1, 1) operands.
+    On the integer path (``requant``), s_ref carries int32 multipliers and
+    the full relu/requant epilogue runs in ``int_epilogue`` — ``relu``/
+    ``act``/``has_bias`` are all folded into the spec or proven absent.
     """
     it = iter(refs)
     x_ref, w_ref, s_ref = next(it), next(it), next(it)
@@ -270,6 +289,9 @@ def _dw_kernel(*refs, relu, act, acc_dtype, has_bias):
     x = x_ref[...].astype(acc_dtype)             # (T, bm, bc)
     w = w_ref[...].astype(acc_dtype)             # (T, bc)
     acc = jnp.sum(x * w[:, None, :], axis=0)     # per-channel tap accumulate
+    if requant is not None:
+        o_ref[...] = int_epilogue(acc, s_ref[...], requant, o_ref.dtype)
+        return
     y = acc.astype(jnp.float32) * s_ref[...].astype(jnp.float32)
     if b_ref is not None:
         y = y + b_ref[...].astype(jnp.float32)
@@ -287,7 +309,7 @@ def _dw_kernel(*refs, relu, act, acc_dtype, has_bias):
 @functools.partial(jax.jit, static_argnames=(
     "kernel_shape", "strides", "pads", "dilations", "relu", "act_bits",
     "act_signed", "act_narrow", "act_rounding", "block", "interpret",
-    "out_dtype", "acc_dtype"))
+    "out_dtype", "acc_dtype", "requant"))
 def quant_depthwise_conv2d(x, w_taps, w_scale, bias=None, act_scale=None,
                            act_zero_point=None, *, kernel_shape,
                            strides=(1, 1), pads=(0, 0, 0, 0),
@@ -295,7 +317,7 @@ def quant_depthwise_conv2d(x, w_taps, w_scale, bias=None, act_scale=None,
                            act_signed=True, act_narrow=False,
                            act_rounding="ROUND", block=DEFAULT_DW_BLOCK,
                            interpret=True, out_dtype=jnp.float32,
-                           acc_dtype=jnp.float32):
+                           acc_dtype=jnp.float32, requant=None):
     """Fused depthwise quantized conv (``group == cin``, multiplier 1).
 
     x          — (N, C, H, W) activations (cast to f32)
@@ -308,6 +330,10 @@ def quant_depthwise_conv2d(x, w_taps, w_scale, bias=None, act_scale=None,
                  ``act_zero_point`` are scalar operands.  Rounding/bounds
                  semantics are exactly the fused QDQ kernel's.
     relu       — fuse max(0, ·) between dequant and requant
+    requant    — optional ``IntRequant``: integer dyadic epilogue;
+                 ``w_scale`` then carries int32 multipliers, the spec's own
+                 relu/act fields replace ``relu``/``act_*`` (pass those as
+                 False/None), and ``acc_dtype`` must be int32
     Returns (N, C, OH, OW) in ``out_dtype``.
 
     The kernel is a VPU elementwise multiply-reduce over the kH·kW taps with
@@ -327,12 +353,15 @@ def quant_depthwise_conv2d(x, w_taps, w_scale, bias=None, act_scale=None,
     w2 = jnp.asarray(w_taps)
     if cp != c:
         w2 = jnp.pad(w2, ((0, 0), (0, cp - c)))
-    s = jnp.asarray(w_scale, jnp.float32)
+    s_dtype = jnp.int32 if requant is not None else jnp.float32
+    s = jnp.asarray(w_scale, s_dtype)
     s2 = jnp.broadcast_to(s.reshape(1, -1), (1, c)) if s.size > 1 \
         else jnp.full((1, c), s.reshape(()))
-    # scale pads with 1.0 so the requant's q = y/qs stays finite off-slice
+    # fp scale pads with 1.0 so the requant's q = y/qs stays finite
+    # off-slice; the integer path has no division, any pad value works
     if cp != c:
-        s2 = jnp.pad(s2, ((0, 0), (0, cp - c)), constant_values=1.0)
+        pad_value = 0 if requant is not None else 1.0
+        s2 = jnp.pad(s2, ((0, 0), (0, cp - c)), constant_values=pad_value)
     grid = (mp // bm, cp // bc)
 
     operands = [taps, w2, s2]
@@ -359,7 +388,7 @@ def quant_depthwise_conv2d(x, w_taps, w_scale, bias=None, act_scale=None,
 
     out = pl.pallas_call(
         functools.partial(_dw_kernel, relu=relu, act=act, acc_dtype=acc_dtype,
-                          has_bias=has_bias),
+                          has_bias=has_bias, requant=requant),
         grid=grid,
         in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, bc), lambda i, j: (i, j)),

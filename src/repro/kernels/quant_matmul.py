@@ -30,11 +30,13 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from ._blocks import pad2 as _pad2, round_up as _round_up
+from .requant import int_epilogue
 
 DEFAULT_BLOCKS = (256, 256, 512)  # (bm, bn, bk)
 
 
-def _qmm_kernel(x_ref, w_ref, s_ref, o_ref, acc_ref, *, nk, acc_dtype):
+def _qmm_kernel(x_ref, w_ref, s_ref, o_ref, acc_ref, *, nk, acc_dtype,
+                requant=None):
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -50,8 +52,13 @@ def _qmm_kernel(x_ref, w_ref, s_ref, o_ref, acc_ref, *, nk, acc_dtype):
 
     @pl.when(k == nk - 1)
     def _finish():
-        o_ref[...] = (acc_ref[...].astype(jnp.float32) *
-                      s_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+        if requant is None:
+            o_ref[...] = (acc_ref[...].astype(jnp.float32) *
+                          s_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+        else:
+            # integer path: s_ref carries the int32 (M_x * M_w) multipliers
+            o_ref[...] = int_epilogue(acc_ref[...], s_ref[...], requant,
+                                      o_ref.dtype)
 
 
 def _unpack_lo_hi(packed):
@@ -61,7 +68,8 @@ def _unpack_lo_hi(packed):
     return lo, hi
 
 
-def _qmm4_kernel(x_ref, wp_ref, s_ref, o_ref, acc_ref, *, nk, acc_dtype):
+def _qmm4_kernel(x_ref, wp_ref, s_ref, o_ref, acc_ref, *, nk, acc_dtype,
+                 requant=None):
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -80,28 +88,36 @@ def _qmm4_kernel(x_ref, wp_ref, s_ref, o_ref, acc_ref, *, nk, acc_dtype):
 
     @pl.when(k == nk - 1)
     def _finish():
-        o_ref[...] = (acc_ref[...].astype(jnp.float32) *
-                      s_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+        if requant is None:
+            o_ref[...] = (acc_ref[...].astype(jnp.float32) *
+                          s_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+        else:
+            o_ref[...] = int_epilogue(acc_ref[...], s_ref[...], requant,
+                                      o_ref.dtype)
 
 
-def _norm_scale(w_scale, n):
-    s = jnp.asarray(w_scale, jnp.float32)
+def _norm_scale(w_scale, n, dtype=jnp.float32):
+    s = jnp.asarray(w_scale, dtype)
     if s.ndim == 0 or s.size == 1:
         return jnp.full((1, n), s.reshape(()))
     return s.reshape(1, n)
 
 
 @functools.partial(jax.jit, static_argnames=("blocks", "interpret",
-                                             "out_dtype", "acc_dtype"))
+                                             "out_dtype", "acc_dtype",
+                                             "requant"))
 def quant_matmul(x, w_int, w_scale, bias=None, *, blocks=DEFAULT_BLOCKS,
                  interpret=True, out_dtype=jnp.float32,
-                 acc_dtype=jnp.float32):
+                 acc_dtype=jnp.float32, requant=None):
     """out = x @ (w_scale * w_int) [+ bias].
 
     x: (M, K) f32/bf16;  w_int: (K, N) int8;  w_scale: scalar or (N,).
     acc_dtype: f32 (default) or int32 — int32 requires integer-valued x
     and a dot-product bound < 2^31 (the compile tier proves both via
     range analysis before selecting it).
+    requant: optional ``IntRequant`` — switches the epilogue to the
+    integer dyadic path; ``w_scale`` then carries the int32 per-channel
+    multipliers instead of fp32 scales (acc_dtype must be int32).
     """
     m, kdim = x.shape
     k2, n = w_int.shape
@@ -112,11 +128,13 @@ def quant_matmul(x, w_int, w_scale, bias=None, *, blocks=DEFAULT_BLOCKS,
     mp, np_, kp = _round_up(m, bm), _round_up(n, bn), _round_up(kdim, bk)
     xq = _pad2(x, mp, kp)
     wq = _pad2(w_int, kp, np_)
-    s2 = _pad2(_norm_scale(w_scale, n), 1, np_)
+    s_dtype = jnp.int32 if requant is not None else jnp.float32
+    s2 = _pad2(_norm_scale(w_scale, n, s_dtype), 1, np_)
     grid = (mp // bm, np_ // bn, kp // bk)
 
     out = pl.pallas_call(
-        functools.partial(_qmm_kernel, nk=grid[2], acc_dtype=acc_dtype),
+        functools.partial(_qmm_kernel, nk=grid[2], acc_dtype=acc_dtype,
+                          requant=requant),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
@@ -135,14 +153,15 @@ def quant_matmul(x, w_int, w_scale, bias=None, *, blocks=DEFAULT_BLOCKS,
 
 
 @functools.partial(jax.jit, static_argnames=("blocks", "interpret",
-                                             "out_dtype", "acc_dtype"))
+                                             "out_dtype", "acc_dtype",
+                                             "requant"))
 def quant_matmul_int4(x, w_packed, w_scale, bias=None, *, blocks=DEFAULT_BLOCKS,
                       interpret=True, out_dtype=jnp.float32,
-                      acc_dtype=jnp.float32):
+                      acc_dtype=jnp.float32, requant=None):
     """out = x @ (w_scale * unpack(w_packed)) with in-kernel int4 unpack.
 
     x: (M, K);  w_packed: (K//2, N) int8 (two nibbles per byte along K).
-    acc_dtype: as in ``quant_matmul``.
+    acc_dtype / requant: as in ``quant_matmul``.
     """
     m, kdim = x.shape
     kp2, n = w_packed.shape
@@ -153,11 +172,13 @@ def quant_matmul_int4(x, w_packed, w_scale, bias=None, *, blocks=DEFAULT_BLOCKS,
     mp, np_, kp = _round_up(m, bm), _round_up(n, bn), _round_up(kdim, bk)
     xq = _pad2(x, mp, kp)
     wq = _pad2(w_packed, kp // 2, np_)       # 0x00 byte = two zero nibbles
-    s2 = _pad2(_norm_scale(w_scale, n), 1, np_)
+    s_dtype = jnp.int32 if requant is not None else jnp.float32
+    s2 = _pad2(_norm_scale(w_scale, n, s_dtype), 1, np_)
     grid = (mp // bm, np_ // bn, kp // bk)
 
     out = pl.pallas_call(
-        functools.partial(_qmm4_kernel, nk=grid[2], acc_dtype=acc_dtype),
+        functools.partial(_qmm4_kernel, nk=grid[2], acc_dtype=acc_dtype,
+                          requant=requant),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),

@@ -1,0 +1,87 @@
+"""Integer-only requantization epilogue shared by the Pallas kernels.
+
+The fp32 epilogue of every fused kernel dequantizes the accumulator with a
+float multiply and (when an activation Quant is absorbed) requantizes with
+a float divide -> round -> clamp chain.  When every scale in the segment is
+dyadic (``m / 2**t`` — the NEMO formulation, arXiv:2004.05930), the same
+math is exact in int32:
+
+    P  = acc * mult                      # mult = M_x * M_w per channel
+    q  = round_shift(P + z_a * 2**s, s)  # s = (T_x + T_w) - T_a
+    y  = float(clip(q, lo, hi) - z_a) * 2**-T_a
+
+The lowering tier (``core/lowering/requant.py``) only selects this path
+after proving the oracle's own fp32 chain is exact (every intermediate
+numerator < 2**24), so the integer epilogue is *bit-identical* to the
+interpreted reference — no tie-flip envelope.  The zero point folds in
+**before** the shift because rounding ties depend on the shifted value
+(``round(1.5) != round(0.5) + 1``).
+
+``IntRequant`` is a frozen, hashable bundle of the static epilogue
+parameters — it rides the kernels' jit static args exactly like
+``acc_dtype``.  The only floating op left is the final exact
+power-of-two output conversion (``float(int) * 2**-t``); the HLO
+inspection test pins that the div/round/clamp chain is gone.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.quant_ops import round_shift
+
+
+@dataclass(frozen=True)
+class IntRequant:
+    """Static parameters of one integer requantization epilogue.
+
+    shift         — total dequant shift T = T_x + T_w (output scale
+                    2**-shift) when no activation Quant is fused
+    relu          — fuse max(P, 0); valid because every scale is positive,
+                    so sign(acc * mult) == sign of the real value
+    has_act       — a trailing per-tensor activation Quant is fused
+    act_shift     — s = (T_x + T_w) - T_a; negative means a left shift
+                    (exact, no rounding involved)
+    act_zp        — integral activation zero point
+    act_lo/act_hi — static integer clamp bounds (Eqs. 2-3 with narrow)
+    act_out_shift — T_a: output y = float(q - act_zp) * 2**-T_a
+    rounding_mode — any quant_ops.ROUNDING_MODES member
+    """
+    shift: int
+    relu: bool = False
+    has_act: bool = False
+    act_shift: int = 0
+    act_zp: int = 0
+    act_lo: int = 0
+    act_hi: int = 0
+    act_out_shift: int = 0
+    rounding_mode: str = "ROUND"
+
+
+def int_epilogue(acc, mult, rq: IntRequant, out_dtype):
+    """Apply one ``IntRequant`` to an int32 accumulator block.
+
+    ``acc`` — int32 accumulator; ``mult`` — int32 per-channel multiplier
+    block (broadcastable against ``acc``; it rides the kernels' scale
+    operand slot).  Returns the fp32-domain output in ``out_dtype``.
+    """
+    p = acc * mult
+    if rq.relu:
+        p = jnp.maximum(p, 0)
+    if not rq.has_act:
+        return (p.astype(jnp.float32) *
+                np.float32(2.0 ** -rq.shift)).astype(out_dtype)
+    s = rq.act_shift
+    if s >= 0:
+        # zero point folds in before the rounding shift: tie behaviour
+        # depends on the shifted value, so round-then-add is WRONG here
+        q = round_shift(p + (rq.act_zp << s), s, rq.rounding_mode)
+    else:
+        # pure left shift: the quotient is already integral, every
+        # rounding mode is the identity
+        q = (p << (-s)) + rq.act_zp
+    q = jnp.clip(q, rq.act_lo, rq.act_hi)
+    return ((q - rq.act_zp).astype(jnp.float32) *
+            np.float32(2.0 ** -rq.act_out_shift)).astype(out_dtype)

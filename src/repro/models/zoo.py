@@ -21,8 +21,16 @@ from repro.core.graph import GraphBuilder, QonnxGraph
 RNG = lambda seed: np.random.RandomState(seed)
 
 
-def _quant_weight(b: GraphBuilder, w: np.ndarray, bits: float, seed_scale=0.1):
-    """Quant (or BipolarQuant for 1 bit) node over a weight initializer."""
+def _quant_weight(b: GraphBuilder, w: np.ndarray, bits: float,
+                  seed_scale=0.125):
+    """Quant (or BipolarQuant for 1 bit) node over a weight initializer.
+
+    The seed scale is deliberately an exact power of two (0.125 = 2**-3),
+    matching how deployment-trained QNNs pick scales (the NEMO dyadic
+    formulation): every zoo weight scale is then ``2**-t``, the compiled
+    tier's integer-requant exactness proof holds, and the fp32 constant
+    survives serialization and QCDQ round trips bit-exactly.
+    """
     name = b.add_initializer("w", w.astype(np.float32))
     if bits == 1:
         return b.bipolar_quant(name, seed_scale)

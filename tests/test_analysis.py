@@ -407,12 +407,22 @@ def test_compile_selects_int32_accumulator_for_integer_activations():
 
 
 def test_compile_fp32_accumulator_for_scaled_activations():
+    """Scaled (non-integer-valued) activations accumulate in fp32 — unless
+    the integer-requant path takes the segment, in which case the kernel
+    is fed exact grid indices (x / s_x) and accumulates in int32.  The
+    zoo's dyadic scales qualify, so the fp32 accumulator is now the
+    ``use_integer_requant=False`` fallback on these graphs."""
     g = transforms.infer_shapes(zoo.build_tfc(2, 2))
-    plan = compile_graph(g)
+    plan = compile_graph(g, use_integer_requant=False)
     for s in plan.segments:
         if s.kind.startswith("quant_matmul"):
             assert s.meta["acc"] == "float32"
             assert s.meta["acc_bits"] is not None
+    plan_int = compile_graph(g)
+    for s in plan_int.segments:
+        if s.kind.startswith("quant_matmul"):
+            assert s.meta["acc"] == "int32"
+            assert s.meta["requant_path"] == "int32"
 
 
 def test_analysis_proves_declared_wide_weights_fit_int4():

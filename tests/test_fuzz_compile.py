@@ -17,6 +17,15 @@ fallback, so every random graph is a valid differential case whether or
 not it fuses.  ``SMOKE_SEEDS`` is the fixed-seed CI subset (runs in the
 main test job); a hypothesis variant widens the seed space when the
 optional dep is installed.
+
+``scale_family`` widens the generator over the integer-requant tier's
+decision space: ``pow2`` (2**-k) and ``dyadic`` (odd·2**-t) scales make
+segments eligible for the int32 multiplier+shift epilogue — plans where
+*every* kernel segment takes it are provably exact, so those corpora
+assert **bit-exact** parity, no float envelope; ``near`` scales are
+dyadic·(1+2**-18), exactly representable in fp32 but with an odd
+multiplier above ``DYADIC_MAX_MULT`` — the detector must reject them and
+every kernel segment must stay on the fp32 requant path.
 """
 import numpy as np
 import pytest
@@ -29,13 +38,34 @@ from repro.core.quant_ops import ROUNDING_MODES
 
 SMOKE_SEEDS = list(range(50))        # the fixed CI smoke subset
 QCDQ_SEEDS = list(range(200, 210))   # QCDQ-converted variant
+DYADIC_SEEDS = list(range(300, 320))  # odd·2**-t scale family
+POW2_SEEDS = list(range(400, 412))   # 2**-k scale family
+NEAR_SEEDS = list(range(500, 510))   # near-dyadic: must NOT take int path
 
 
 # ------------------------------------------------------------- generator
 
-def _scale(rng, shape=None):
-    """Tie-free scale: continuous draws hit exact .5 ties w.p. 0."""
-    v = rng.uniform(0.06, 0.14, size=() if shape is None else shape)
+def _scale(rng, cfg, shape=None):
+    """Scale draw for the configured family.
+
+    * ``float`` — tie-free continuous draws (hit exact .5 ties w.p. 0);
+    * ``pow2``  — 2**-k, the power-of-two grids deployment QNNs use;
+    * ``dyadic`` — odd m·2**-t with m ≤ 15 (within ``DYADIC_MAX_MULT``);
+    * ``near``  — dyadic·(1+2**-18): exact in fp32, but the normalized odd
+      multiplier m·(2**18+1) > 2**16 so ``dyadic_decompose`` must reject.
+    """
+    family = cfg.get("scale_family", "float")
+    size = () if shape is None else shape
+    if family == "float":
+        v = rng.uniform(0.06, 0.14, size=size)
+    elif family == "pow2":
+        v = 2.0 ** -rng.randint(1, 8, size=size).astype(np.float64)
+    else:
+        m = 2 * rng.randint(0, 8, size=size) + 1          # odd, 1..15
+        t = rng.randint(3, 9, size=size)
+        v = m.astype(np.float64) * 2.0 ** -t
+        if family == "near":
+            v = v * (1.0 + 2.0 ** -18)
     return np.asarray(v, np.float32)
 
 
@@ -50,11 +80,11 @@ def _act_quant(b, rng, h, cfg):
     lo_bits = 2 if cfg["qcdq_safe"] else 1
     bits = int(rng.randint(lo_bits, 9))
     if bits == 1 and not cfg["qcdq_safe"] and rng.rand() < 0.4:
-        return b.bipolar_quant(h, float(_scale(rng))), None
+        return b.bipolar_quant(h, float(_scale(rng, cfg))), None
     signed = bool(rng.rand() < 0.5)
     zp_choices = [0, 0, 0, 1, 2] + ([-1, -2] if signed else [])
     zp = float(int(rng.choice(zp_choices)))
-    s = float(_scale(rng))
+    s = float(_scale(rng, cfg))
     h = b.quant(h, s, zp, float(bits), signed=signed,
                 narrow=bool(rng.rand() < 0.3),
                 rounding_mode=_rounding(rng, cfg))
@@ -75,11 +105,11 @@ def _weight_quant(b, rng, w, cfg, per_channel_shape=None):
     bits = int(rng.randint(2 if cfg["qcdq_safe"] else 1, 9))
     name = b.add_initializer("w", w.astype(np.float32))
     if bits == 1 and not cfg["qcdq_safe"] and rng.rand() < 0.5:
-        return b.bipolar_quant(name, float(_scale(rng)))
+        return b.bipolar_quant(name, float(_scale(rng, cfg)))
     if per_channel_shape is not None and rng.rand() < 0.5:
-        scale = _scale(rng, per_channel_shape)
+        scale = _scale(rng, cfg, per_channel_shape)
     else:
-        scale = float(_scale(rng))
+        scale = float(_scale(rng, cfg))
     return b.quant(name, scale, 0.0, float(bits),
                    signed=bool(rng.rand() < 0.8),
                    narrow=bool(rng.rand() < 0.5),
@@ -120,14 +150,16 @@ def _conv_layer(b, rng, h, cin, sp, cfg):
     return h, cout, out_sp
 
 
-def build_fuzz_graph(seed, *, qcdq_safe=False):
+def build_fuzz_graph(seed, *, qcdq_safe=False, scale_family="float"):
     """Seeded random QONNX graph + a matching input sample.
 
     ``qcdq_safe=True`` restricts to what ``qonnx_to_qcdq`` can lower
     (ROUND only, no BipolarQuant/Trunc, bits >= 2) so the same generator
-    drives the QCDQ-format differential variant.
+    drives the QCDQ-format differential variant.  ``scale_family`` routes
+    every scale draw (act, weight, per-channel) through the named family
+    (see ``_scale``).
     """
-    cfg = {"qcdq_safe": qcdq_safe}
+    cfg = {"qcdq_safe": qcdq_safe, "scale_family": scale_family}
     rng = np.random.RandomState(seed)
     conv_like = bool(rng.rand() < 0.5)
     b = GraphBuilder(f"fuzz_{seed}")
@@ -189,6 +221,72 @@ def test_fuzz_qcdq_format_compiled_matches_oracle(seed):
     g, x = build_fuzz_graph(seed, qcdq_safe=True)
     q = qonnx_to_qcdq(run_pipeline(g, "compile_prep"))
     check_parity(q, x)
+
+
+def _requant_paths(plan):
+    """Per-kernel-segment requant_path meta (int32/fp32), in plan order."""
+    return [s.meta["requant_path"] for s in plan.segments
+            if s.meta.get("requant_path") is not None]
+
+
+def _check_family_parity(seed, family):
+    """Dyadic-family differential: bit-exact when the whole plan is on the
+    integer path (provable exactness — no tie-flip envelope), float
+    envelope when some segment kept the fp32 chain.  Returns the plan."""
+    g, x = build_fuzz_graph(seed, scale_family=family)
+    gc = transforms.cleanup(g)
+    ref = np.asarray(execute(gc, {"x": x})[gc.output_names[0]])
+    plan = compile_graph(g)
+    out = np.asarray(plan({"x": x})[plan.graph.output_names[0]])
+    paths = _requant_paths(plan)
+    if paths and all(p == "int32" for p in paths):
+        np.testing.assert_array_equal(
+            ref, out,
+            err_msg=f"all-integer-path plan must be bit-exact on {g.name}\n"
+                    f"{plan.describe()}")
+    else:
+        np.testing.assert_allclose(
+            ref, out, atol=2e-4, rtol=2e-4,
+            err_msg=f"fp32-fallback parity broke on {g.name}\n"
+                    f"{plan.describe()}")
+    return plan
+
+
+@pytest.mark.parametrize("seed", DYADIC_SEEDS)
+def test_fuzz_dyadic_scales(seed):
+    _check_family_parity(seed, "dyadic")
+
+
+@pytest.mark.parametrize("seed", POW2_SEEDS)
+def test_fuzz_pow2_scales(seed):
+    _check_family_parity(seed, "pow2")
+
+
+def test_fuzz_dyadic_corpus_exercises_integer_path():
+    """Coverage sanity for the two dyadic corpora: a healthy share of the
+    fixed seeds must produce *fully* integer-path plans (the bit-exact
+    branch of ``_check_family_parity``), or the exactness assertion would
+    silently never run."""
+    full, kernel = 0, 0
+    for family, seeds in (("dyadic", DYADIC_SEEDS), ("pow2", POW2_SEEDS)):
+        for seed in seeds:
+            g, _ = build_fuzz_graph(seed, scale_family=family)
+            paths = _requant_paths(compile_graph(g))
+            kernel += bool(paths)
+            full += bool(paths) and all(p == "int32" for p in paths)
+    assert kernel >= 10, (full, kernel)
+    assert full >= 5, (full, kernel)
+
+
+@pytest.mark.parametrize("seed", NEAR_SEEDS)
+def test_fuzz_near_dyadic_scales_reject_integer_path(seed):
+    """Scales a hair off a dyadic grid (odd multiplier > DYADIC_MAX_MULT
+    after normalization) must keep every kernel segment on the fp32
+    requant chain — taking the integer path on a non-dyadic grid would be
+    silently wrong, not slow."""
+    g, x = build_fuzz_graph(seed, scale_family="near")
+    plan = check_parity(g, x)
+    assert plan.requant_stats()["int32_segments"] == 0, plan.describe()
 
 
 def test_fuzz_smoke_subset_exercises_kernel_tier():
