@@ -22,7 +22,10 @@ epilogue, coverage recorded in the JSON artifact).
 Per model the JSON record also carries ``requant``: the plan's
 integer-path coverage (``CompiledPlan.requant_stats``) plus the measured
 epilogue speedup vs the same plan compiled with
-``use_integer_requant=False`` (the fp32 dequant->round->requant chain).
+``use_integer_requant=False`` (the fp32 dequant->round->requant chain) —
+and ``profile``: the per-segment measured table (``CompiledPlan.profile``
+joined with the analysis cost report: ms / MACs/s / minimal-vs-achieved
+bytes / requant path per fused segment).
 """
 from __future__ import annotations
 
@@ -114,6 +117,10 @@ def run_detailed(cases=None) -> tuple[list[str], dict]:
                 "fp32_requant_us": round(us_fp32, 1),
                 "epilogue_speedup": round(us_fp32 / us_comp, 3),
             },
+            # per-segment measured profile (ms, MACs/s, bytes, requant path
+            # per fused segment joined with the analysis cost report)
+            "profile": plan.profile(
+                {"x": x}, repeats=5).to_json(),
         }
     return rows, records
 

@@ -12,10 +12,19 @@ Two measurements over the compiled-graph serving tier (repro.serve):
     ``ServeScheduler``; reports p50/p99 request latency and queue wait
     from the engine's rolling telemetry.
 
+  * **observability overhead** — the same submit->flush workload through a
+    metrics-enabled engine vs one built with ``observability=False`` (the
+    pre-instrumentation baseline).  The registry work on the hot path is a
+    handful of dict/lock operations per request, so the gate demands the
+    instrumented engine stays within 3% of baseline throughput.
+
 ``--check`` (implied by ``--quick``, the CI smoke gate) exits non-zero
 unless pipelined throughput at least matches the synchronous baseline on
 every case (5% headroom absorbs shared-runner noise; the measured speedup
-sits well above 1x on a quiet machine).
+sits well above 1x on a quiet machine) AND the observability overhead
+stays within its 3% envelope.  ``--metrics-snapshot PATH`` dumps the
+bench engines' shared metrics registry as JSON (the CI artifact rendered
+by ``python -m repro.obs.report``).
 """
 from __future__ import annotations
 
@@ -82,13 +91,55 @@ def bench_pipeline(name: str, batch: int, max_batch: int,
     }
 
 
+def bench_obs_overhead(name: str = "TFC-w2a2", n_requests: int = 128,
+                       max_batch: int = 8, repeats: int = 7) -> dict:
+    """Metrics-enabled vs ``observability=False`` submit/flush throughput.
+
+    Both engines run the identical submit-all -> run_pending workload in
+    alternating rounds; the instrumented engine must stay within 3% of the
+    uninstrumented baseline (the gate CI enforces under ``--quick``).
+    """
+    from repro.obs import default_registry
+    from repro.serve import CompiledGraphEngine
+
+    g = zoo.ZOO[name]()
+    eng_on = CompiledGraphEngine(g, max_batch=max_batch, report_cost=False,
+                                 metrics_registry=default_registry(),
+                                 observability=True)
+    eng_off = CompiledGraphEngine(zoo.ZOO[name](), max_batch=max_batch,
+                                  report_cost=False, observability=False)
+    rng = np.random.RandomState(2)
+    xs = [rng.randn(*eng_on.sample_shape).astype(np.float32)
+          for _ in range(n_requests)]
+
+    def mk(eng):
+        def go():
+            for x in xs:
+                eng.submit(x)
+            eng.run_pending()
+        return go
+
+    t_on, t_off = _interleaved_best_s([mk(eng_on), mk(eng_off)], repeats)
+    return {
+        "model": name, "n_requests": n_requests, "max_batch": max_batch,
+        "obs_on_ms": round(t_on * 1e3, 2),
+        "obs_off_ms": round(t_off * 1e3, 2),
+        "obs_on_rps": round(n_requests / t_on, 1),
+        "obs_off_rps": round(n_requests / t_off, 1),
+        "overhead_pct": round((t_on / t_off - 1.0) * 100, 2),
+        "ok": t_on <= t_off * 1.03,
+    }
+
+
 def bench_scheduler(name: str, n_requests: int = 64, max_batch: int = 8,
                     window_ms: float = 2.0) -> dict:
     """Submit->future round trips through a running ServeScheduler."""
+    from repro.obs import default_registry
     from repro.serve import CompiledGraphEngine, ServeScheduler
 
     eng = CompiledGraphEngine(zoo.ZOO[name](), max_batch=max_batch,
-                              report_cost=False)
+                              report_cost=False,
+                              metrics_registry=default_registry())
     rng = np.random.RandomState(1)
     xs = [rng.randn(*eng.sample_shape).astype(np.float32)
           for _ in range(n_requests)]
@@ -134,7 +185,12 @@ def run_detailed(cases=None, *, repeats: int = 15, sched_requests: int = 64
             f"p99={s['latency_p99_ms']:.0f}ms;"
             f"queued_p50={s['queued_p50_ms']:.0f}ms;"
             f"throughput={s['throughput_rps']}rps")
-        records[name] = {"pipeline": p, "scheduler": s}
+        o = bench_obs_overhead(name, n_requests=sched_requests * 2,
+                               max_batch=max_batch)
+        rows.append(
+            f"serve/{name}_obs_overhead,{o['overhead_pct']},"
+            f"on={o['obs_on_rps']}rps vs off={o['obs_off_rps']}rps")
+        records[name] = {"pipeline": p, "scheduler": s, "obs_overhead": o}
     return rows, records
 
 
@@ -163,6 +219,9 @@ def main(argv=None) -> int:
                          "baseline (5%% headroom for runner noise)")
     ap.add_argument("--json", metavar="PATH",
                     help="write machine-readable records to PATH")
+    ap.add_argument("--metrics-snapshot", metavar="PATH",
+                    help="write the bench engines' metrics registry "
+                         "snapshot (JSON) to PATH")
     args = ap.parse_args(argv)
 
     rows, records = run_detailed(repeats=10 if args.quick else 15,
@@ -180,11 +239,22 @@ def main(argv=None) -> int:
                   f"sync={p['sync_throughput_rps']}rps "
                   f"(gate: >=0.95x for runner noise);{verdict}")
             ok = ok and p["ok"]
+            o = rec["obs_overhead"]
+            verdict = "OK" if o["ok"] else "FAIL"
+            print(f"check_obs_overhead/{name},{o['overhead_pct']}%,"
+                  f"on={o['obs_on_rps']}rps vs off={o['obs_off_rps']}rps "
+                  f"(gate: <=3%);{verdict}")
+            ok = ok and o["ok"]
 
     if args.json:
         with open(args.json, "w") as f:
             json.dump({"models": records}, f, indent=2, sort_keys=True)
         print(f"# wrote {args.json}")
+    if args.metrics_snapshot:
+        from repro.obs import default_registry
+        with open(args.metrics_snapshot, "w") as f:
+            f.write(default_registry().to_json(indent=2, sort_keys=True))
+        print(f"# wrote {args.metrics_snapshot}")
     return 0 if ok else 1
 
 

@@ -47,12 +47,15 @@ the model zoo in all three formats.
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.obs.metrics import default_registry
 
 from . import lowering
 from .executor import lookup_op
@@ -80,9 +83,16 @@ class CompiledPlan:
         segments = self.segments
         output_names = list(self.graph.output_names)
         trace_cell = [0]
+        # process-wide retrace telemetry: one counter child per model, so a
+        # serving fleet's "which plan keeps retracing?" is a snapshot away
+        m_retrace = default_registry().counter(
+            "compile_plan_retraces_total",
+            help="plan body traces (once per new input shape under jit)",
+            labels={"model": self.graph.name})
 
         def plan(consts, inputs):
             trace_cell[0] += 1
+            m_retrace.inc()
             env = dict(inputs)
             for seg in segments:
                 seg.run(consts, env)
@@ -204,6 +214,17 @@ class CompiledPlan:
                     "carrier_bytes_saved", 0)
         return out
 
+    def profile(self, x=None, **kw):
+        """Per-segment measured profile (opt-in; see ``repro.obs.profile``).
+
+        Times each fused segment with its own ``block_until_ready`` (best of
+        ``repeats``) and joins the rows with the analysis cost report —
+        measured ms, MACs/s, minimal-vs-achieved bytes, requant path.
+        Returns a ``PlanProfile`` (``.table()`` / ``.to_json()``).
+        """
+        from repro.obs.profile import profile_plan
+        return profile_plan(self, x, **kw)
+
     def describe(self) -> str:
         head = (f"CompiledPlan({self.graph.name}): {len(self.segments)} "
                 f"segments over {len(self.graph.nodes)} nodes "
@@ -261,7 +282,12 @@ def compile_graph(graph: QonnxGraph, *, run_cleanup: bool = True,
                    (lowering/requant.py) on segments whose exactness proof
                    holds; False pins every segment to the fp32 epilogue
                    (the benchmark baseline for the epilogue speedup)
+
+    Every compile records wall time and plan-shape gauges (segment counts
+    per fused kind, fused-node count, integer-requant coverage) into the
+    process-wide ``repro.obs`` default registry under ``model=graph.name``.
     """
+    t_compile0 = time.perf_counter()
     if run_cleanup:
         from . import passes
         graph = passes.run_pipeline(graph, "compile_prep")
@@ -370,7 +396,34 @@ def compile_graph(graph: QonnxGraph, *, run_cleanup: bool = True,
     used.update(g.output_names)
     consts = {k: v for k, v in consts.items() if k in used}
 
-    return CompiledPlan(g, segments, consts, analysis=ga)
+    plan = CompiledPlan(g, segments, consts, analysis=ga)
+    _record_compile_metrics(plan, time.perf_counter() - t_compile0)
+    return plan
+
+
+def _record_compile_metrics(plan: CompiledPlan, wall_s: float) -> None:
+    """Compile-tier telemetry into the process-wide default registry."""
+    reg = default_registry()
+    model = {"model": plan.graph.name}
+    reg.histogram(
+        "compile_wall_ms", unit="ms",
+        help="compile_graph wall time (partition + analysis + plan emit)",
+        window=64, labels=model).observe(wall_s * 1e3)
+    reg.gauge("compile_segments",
+              help="fused segments in the emitted plan, per kind",
+              labels={**model, "kind": "total"}).set(len(plan.segments))
+    for kind, n in plan.fused_counts.items():
+        reg.gauge("compile_segments", labels={**model, "kind": kind}).set(n)
+    reg.gauge("compile_fused_nodes",
+              help="graph nodes absorbed into kernel segments",
+              labels=model).set(plan.n_fused_nodes)
+    rq = plan.requant_stats()
+    reg.gauge("compile_integer_requant_coverage",
+              help="fraction of kernel segments on the integer-epilogue "
+                   "fast path", labels=model).set(rq["coverage"])
+    reg.gauge("compile_integer_requant_segments",
+              help="kernel segments proven exact on the dyadic integer "
+                   "epilogue", labels=model).set(rq["int32_segments"])
 
 
 def execute_compiled(graph: QonnxGraph, inputs: dict, **kw) -> dict:

@@ -9,6 +9,14 @@ future lifecycle over the pipelined engine, p50/p99 report at the end):
 
   python -m repro.launch.serve --graph TFC-w2a2 --requests 64
   python -m repro.launch.serve --graph TFC-w2a2 --requests 64 --no-pipeline
+
+Observability (compiled-graph path):
+
+  --metrics-port 9100   serve the process-wide metrics registry over HTTP
+                        (GET /metrics Prometheus text, /metrics.json)
+  --trace-jsonl PATH    write one JSON span per line for the full request
+                        lifecycle (submit -> queue -> flush -> dispatch ->
+                        sync -> complete)
 """
 from __future__ import annotations
 
@@ -30,10 +38,24 @@ log = logging.getLogger("repro.launch.serve")
 
 def serve_graph(args) -> None:
     """Serve a zoo graph behind EngineRegistry + ServeScheduler."""
+    from repro import obs
     from repro.models import zoo
 
+    server = tracer = sink = None
+    if args.metrics_port is not None:
+        server = obs.http.start_metrics_server(port=args.metrics_port)
+        log.info("metrics on http://0.0.0.0:%d/metrics", server.port)
+    if args.trace_jsonl:
+        sink = obs.JsonlSink(args.trace_jsonl)
+        tracer = obs.Tracer(sink)
+        log.info("tracing spans to %s", args.trace_jsonl)
+
+    # engines share the process-wide registry (distinct model labels), so
+    # the HTTP endpoint exports the whole fleet from one snapshot
     registry = EngineRegistry(max_batch=args.max_batch,
-                              pipeline=not args.no_pipeline)
+                              pipeline=not args.no_pipeline,
+                              metrics_registry=obs.default_registry(),
+                              tracer=tracer)
     eng = registry.register(args.graph, zoo.ZOO[args.graph]())
     rng = np.random.default_rng(0)
     xs = [rng.standard_normal(eng.sample_shape, dtype=np.float32)
@@ -58,6 +80,19 @@ def serve_graph(args) -> None:
         len(reqs), dt, len(reqs) / dt,
         stats["latency_p50_ms"], stats["latency_p99_ms"],
         stats["queued_p50_ms"], stats["flushes"], stats["deadline_misses"])
+    if sink is not None:
+        sink.close()
+    if server is not None:
+        from repro.obs.report import render
+        print(render(obs.default_registry().snapshot(), "serve_"))
+        if args.hold:
+            log.info("holding metrics endpoint open on port %d (Ctrl-C to "
+                     "exit)", server.port)
+            try:
+                while True:
+                    time.sleep(3600)
+            except KeyboardInterrupt:
+                pass
 
 
 def serve_lm(args) -> None:
@@ -104,6 +139,16 @@ def main():
                     help="per-request deadline passed to submit()")
     ap.add_argument("--no-pipeline", action="store_true",
                     help="per-chunk-sync dispatch (the benchmark baseline)")
+    # observability
+    ap.add_argument("--metrics-port", type=int, default=None, metavar="PORT",
+                    help="expose the metrics registry over HTTP: GET "
+                         "/metrics (Prometheus text) and /metrics.json")
+    ap.add_argument("--trace-jsonl", metavar="PATH",
+                    help="write request-lifecycle spans to PATH, one JSON "
+                         "object per line")
+    ap.add_argument("--hold", action="store_true",
+                    help="with --metrics-port: keep the endpoint up after "
+                         "the run until Ctrl-C (for scraping)")
     args = ap.parse_args()
     logging.basicConfig(level=logging.INFO)
 

@@ -1,0 +1,55 @@
+"""repro.obs — unified observability: metrics, tracing, kernel profiling.
+
+Three dependency-free layers over the compile/serve tiers:
+
+  * ``metrics``  — thread-safe ``MetricsRegistry`` of counters, gauges and
+                   exponential-bucket histograms with labels; JSON +
+                   Prometheus exporters; process-wide default registry.
+                   ``python -m repro.obs.report`` renders a snapshot.
+  * ``trace``    — ``Span``/``Tracer`` (context-manager or retroactive
+                   ``emit``), parent/child links, JSONL sink; wired through
+                   the serving request lifecycle (submit -> queue -> flush
+                   -> dispatch -> sync -> complete).  Disabled tracing adds
+                   zero allocations to the submit hot path.
+  * ``profile``  — opt-in per-segment timing of a ``CompiledPlan``
+                   (``plan.profile()``), joined with the analysis cost
+                   report into measured ms / MACs/s / achieved-vs-minimal
+                   bytes / requant path per fused segment.
+
+``http.start_metrics_server`` serves the Prometheus text format from a
+stdlib HTTP server (``python -m repro.launch.serve --metrics-port``).
+"""
+from .metrics import (  # noqa: F401
+    Counter,
+    Gauge,
+    Histogram,
+    HistogramSnapshot,
+    MetricsRegistry,
+    default_registry,
+    exponential_buckets,
+    nearest_rank,
+)
+from .http import MetricsServer, start_metrics_server  # noqa: F401
+from .profile import PlanProfile, SegmentProfile, profile_plan  # noqa: F401
+from .trace import JsonlSink, ListSink, Span, Tracer  # noqa: F401
+from . import http  # noqa: F401
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "HistogramSnapshot",
+    "JsonlSink",
+    "ListSink",
+    "MetricsRegistry",
+    "MetricsServer",
+    "PlanProfile",
+    "SegmentProfile",
+    "Span",
+    "Tracer",
+    "default_registry",
+    "exponential_buckets",
+    "nearest_rank",
+    "profile_plan",
+    "start_metrics_server",
+]

@@ -29,7 +29,6 @@ from __future__ import annotations
 import logging
 import threading
 import time
-from collections import deque
 from dataclasses import dataclass, field
 from typing import Optional
 
@@ -37,16 +36,22 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import MetricsRegistry, nearest_rank
+
 log = logging.getLogger("repro.serve")
+
+# slot occupancy is a fraction of max_batch — linear buckets, not the
+# default exponential latency layout
+_OCCUPANCY_BUCKETS = tuple(i / 8 for i in range(1, 9))
 
 
 def percentile_ms(values, pct: float) -> float:
-    """Nearest-rank percentile over a latency sample (ms); nan when empty."""
-    if not values:
-        return float("nan")
-    vs = sorted(values)
-    k = min(len(vs) - 1, max(0, int(round(pct / 100.0 * (len(vs) - 1)))))
-    return float(vs[k])
+    """Nearest-rank percentile over a latency sample (ms); nan when empty.
+
+    Kept as the historical public name; the implementation is the shared
+    ``repro.obs.nearest_rank`` every telemetry path now uses.
+    """
+    return nearest_rank(values, pct)
 
 
 @dataclass
@@ -66,6 +71,9 @@ class GraphRequest:
     completed: Optional[float] = None
     result: Optional[np.ndarray] = None
     error: Optional[BaseException] = None
+    trace_id: Optional[str] = None       # set at submit when tracing is on:
+    queue_depth: Optional[int] = None    # the request's trace context + the
+                                         # queue depth it joined behind
     _event: threading.Event = field(default_factory=threading.Event,
                                     repr=False, compare=False)
 
@@ -118,7 +126,10 @@ class CompiledGraphEngine:
     def __init__(self, graph, *, max_batch: int = 8, use_kernels: bool = True,
                  use_int4: bool = True, interpret: bool = True,
                  report_cost: bool = True, pipeline: bool = True,
-                 donate="auto", telemetry_window: int = 2048):
+                 donate="auto", telemetry_window: int = 2048,
+                 metrics_registry: Optional[MetricsRegistry] = None,
+                 metrics_labels: Optional[dict] = None,
+                 tracer=None, observability: bool = True):
         self.max_batch = max_batch
         self.queue: list[GraphRequest] = []
         self._lock = threading.RLock()
@@ -132,12 +143,53 @@ class CompiledGraphEngine:
         self._compile_kw = dict(use_kernels=use_kernels, use_int4=use_int4,
                                 interpret=interpret)
         self._report_cost = report_cost
-        self._lat_ms: deque = deque(maxlen=telemetry_window)
-        self._queued_ms: deque = deque(maxlen=telemetry_window)
         self.n_completed = 0
         self.n_flushes = 0
         self.n_deadline_misses = 0
         self._closed = False
+        # --- observability (repro.obs) ---------------------------------
+        # A private registry per engine by default, so a fresh engine's
+        # counters start at zero; pass a shared ``metrics_registry`` (plus
+        # per-model ``metrics_labels``, which EngineRegistry injects) to
+        # export a whole fleet from one ``--metrics-port`` endpoint.
+        # ``observability=False`` keeps only the plain-int lifetime
+        # counters — the pre-obs baseline the bench_serve overhead gate
+        # measures against.  ``tracer`` (repro.obs.Tracer) turns the
+        # request lifecycle into submit->queue->flush->dispatch->sync->
+        # complete spans; None/disabled adds zero work to the hot path.
+        self.metrics = metrics_registry or MetricsRegistry()
+        self._metric_labels = dict(metrics_labels or
+                                   {"model": getattr(graph, "name", "graph")})
+        self._tracer = tracer
+        self._obs_on = bool(observability)
+        self.telemetry_window = telemetry_window
+        m, lbl = self.metrics, self._metric_labels
+        self._m_submitted = m.counter(
+            "serve_requests_submitted_total",
+            help="requests admitted by submit()", labels=lbl)
+        self._m_completed = m.counter(
+            "serve_requests_completed_total",
+            help="requests completed (result or error)", labels=lbl)
+        self._m_flushes = m.counter(
+            "serve_flushes_total", help="run_pending flushes", labels=lbl)
+        self._m_misses = m.counter(
+            "serve_deadline_misses_total",
+            help="requests completed after their deadline", labels=lbl)
+        self._m_lat = m.histogram(
+            "serve_request_latency_ms", unit="ms",
+            help="submit -> result latency", window=telemetry_window,
+            labels=lbl)
+        self._m_queued = m.histogram(
+            "serve_request_queued_ms", unit="ms",
+            help="submit -> slot dispatch wait", window=telemetry_window,
+            labels=lbl)
+        self._m_qdepth = m.gauge(
+            "serve_queue_depth", help="requests waiting for a flush",
+            labels=lbl)
+        self._m_occupancy = m.histogram(
+            "serve_slot_occupancy",
+            help="real requests per dispatched slot / max_batch",
+            buckets=_OCCUPANCY_BUCKETS, window=telemetry_window, labels=lbl)
         # serializes whole reload() calls (compile included) so two racing
         # hot-swaps can't interleave into last-compile-wins
         self._reload_lock = threading.Lock()
@@ -251,6 +303,8 @@ class CompiledGraphEngine:
         counts misses in ``latency_stats()``.
         """
         x = jnp.asarray(x, jnp.float32)
+        tr = self._tracer
+        tracing = tr is not None and tr.enabled
         with self._lock:
             if self._closed:
                 raise RuntimeError(
@@ -264,6 +318,13 @@ class CompiledGraphEngine:
             if deadline_ms is not None:
                 r.deadline = r.submitted + deadline_ms / 1e3
             self.queue.append(r)
+            depth = len(self.queue)
+        r.queue_depth = depth
+        if tracing:
+            r.trace_id = tr.new_trace_id()
+        if self._obs_on:
+            self._m_submitted.inc()
+            self._m_qdepth.set(depth)
         return r
 
     def pending(self) -> int:
@@ -322,11 +383,17 @@ class CompiledGraphEngine:
             if n == 0:
                 return 0
             reqs, self.queue = self.queue[:n], self.queue[n:]
+            depth = len(self.queue)
             state = self._serving_state()
+        if self._obs_on:
+            self._m_qdepth.set(depth)
         return self._run_requests(reqs, state)
 
     def _run_requests(self, reqs: list, state: tuple) -> int:
         plan, in_name, out_name, sample_shape = state
+        tr = self._tracer
+        tracing = tr is not None and tr.enabled
+        t_flush0 = time.time()
         dispatched = []
         try:
             for i in range(0, len(reqs), self.max_batch):
@@ -338,10 +405,16 @@ class CompiledGraphEngine:
                                       sample_shape, owned=True)
                 out = plan({in_name: x}, donate=self._donate)[out_name]
                 dispatched.append((batch, out))
+                if self._obs_on:
+                    self._m_occupancy.observe(len(batch) / self.max_batch)
                 if not self.pipeline:          # per-slot host sync: baseline
                     jax.block_until_ready(out)
+            t_sync0 = time.time()
             if self.pipeline:                  # single trailing sync
                 jax.block_until_ready([o for _, o in dispatched])
+            if tracing:
+                self._emit_flush_spans(tr, reqs, len(dispatched),
+                                       t_flush0, t_sync0, time.time())
         except Exception as e:
             # scope the failure: every dispatched slot whose compute
             # actually succeeded still completes (the scatter forces it) and
@@ -373,18 +446,59 @@ class CompiledGraphEngine:
             # not the whole padded (max_batch, ...) output buffer
             r._finish(rows[j].copy())
 
+    def _emit_flush_spans(self, tr, reqs: list, n_slots: int,
+                          t_flush0: float, t_sync0: float,
+                          t_end: float) -> None:
+        """One flush trace: flush -> dispatch + sync children (wall-clock
+        timestamps, shared with the per-request spans in ``_record``)."""
+        trace_id = tr.new_trace_id()
+        occupancy = len(reqs) / max(1, n_slots * self.max_batch)
+        flush_id = tr.emit(
+            "flush", t_flush0, t_end, trace_id=trace_id,
+            n_requests=len(reqs), n_slots=n_slots,
+            slot_occupancy=round(occupancy, 4), pipeline=self.pipeline)
+        tr.emit("dispatch", t_flush0, t_sync0, trace_id=trace_id,
+                parent_id=flush_id, n_slots=n_slots)
+        tr.emit("sync", t_sync0, t_end, trace_id=trace_id,
+                parent_id=flush_id)
+
     def _record(self, reqs: list) -> None:
+        n_miss = 0
+        for r in reqs:
+            if r.deadline is not None and r.completed is not None and \
+                    r.completed > r.deadline:
+                n_miss += 1
         with self._lock:
-            for r in reqs:
-                if r.latency_ms is not None:
-                    self._lat_ms.append(r.latency_ms)
-                if r.queued_ms is not None:
-                    self._queued_ms.append(r.queued_ms)
-                if r.deadline is not None and r.completed is not None and \
-                        r.completed > r.deadline:
-                    self.n_deadline_misses += 1
+            self.n_deadline_misses += n_miss
             self.n_completed += len(reqs)
             self.n_flushes += 1
+        if self._obs_on:
+            for r in reqs:
+                if r.latency_ms is not None:
+                    self._m_lat.observe(r.latency_ms)
+                if r.queued_ms is not None:
+                    self._m_queued.observe(r.queued_ms)
+            self._m_completed.inc(len(reqs))
+            self._m_flushes.inc()
+            if n_miss:
+                self._m_misses.inc(n_miss)
+        tr = self._tracer
+        if tr is not None and tr.enabled:
+            for r in reqs:
+                if r.trace_id is None or r.completed is None:
+                    continue
+                missed = (r.deadline is not None and
+                          r.completed > r.deadline)
+                root = tr.emit(
+                    "request", r.submitted, r.completed,
+                    trace_id=r.trace_id, queue_depth=r.queue_depth,
+                    deadline_missed=missed,
+                    error=type(r.error).__name__ if r.error else None)
+                if r.started is not None:
+                    tr.emit("queued", r.submitted, r.started,
+                            trace_id=r.trace_id, parent_id=root)
+                    tr.emit("compute", r.started, r.completed,
+                            trace_id=r.trace_id, parent_id=root)
         # percentile computation + formatting stay off the engine lock, and
         # are skipped entirely when nobody listens at INFO
         if log.isEnabledFor(logging.INFO):
@@ -399,19 +513,35 @@ class CompiledGraphEngine:
                 stats["deadline_misses"])
 
     def latency_stats(self) -> dict:
-        """Aggregate request telemetry over the rolling window."""
-        with self._lock:                 # consistent snapshot; sorts outside
-            lat, qd = list(self._lat_ms), list(self._queued_ms)
+        """Aggregate request telemetry.
+
+        ``*_total`` keys are explicit lifetime counters; the percentile
+        keys are computed over the rolling ``telemetry_window`` (the shared
+        histogram's exact windowed view — see ``repro.obs.metrics``).  The
+        unsuffixed ``completed``/``flushes``/``deadline_misses`` keys are
+        the historical names for the same lifetime totals, kept for
+        callers of the original PR-5 dict shape.  With
+        ``observability=False`` the histograms are idle and every
+        percentile is nan.
+        """
+        with self._lock:
             completed, flushes = self.n_completed, self.n_flushes
             misses = self.n_deadline_misses
+        lat = self._m_lat.snapshot()
+        qd = self._m_queued.snapshot()
         return {
             "completed": completed,
             "flushes": flushes,
             "deadline_misses": misses,
-            "latency_p50_ms": percentile_ms(lat, 50),
-            "latency_p99_ms": percentile_ms(lat, 99),
-            "queued_p50_ms": percentile_ms(qd, 50),
-            "queued_p99_ms": percentile_ms(qd, 99),
+            "completed_total": completed,
+            "flushes_total": flushes,
+            "deadline_misses_total": misses,
+            "telemetry_window": self.telemetry_window,
+            "window_observations": len(lat.window),
+            "latency_p50_ms": lat.percentile(50),
+            "latency_p99_ms": lat.percentile(99),
+            "queued_p50_ms": qd.percentile(50),
+            "queued_p99_ms": qd.percentile(99),
         }
 
     # ---------------------------------------------------- synchronous path

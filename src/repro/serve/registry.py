@@ -35,7 +35,13 @@ class EngineRegistry:
                  **engine_kw) -> CompiledGraphEngine:
         """Serve ``graph`` (compiled here) or a pre-built ``engine`` as
         ``name``.  Re-registering a live name is an error — model swaps go
-        through ``reload`` so in-flight requests are handled."""
+        through ``reload`` so in-flight requests are handled.
+
+        Engines built here get ``metrics_labels={"model": name}`` (unless
+        overridden), so a registry whose ``default_engine_kw`` carries a
+        shared ``metrics_registry`` exports every model as distinct label
+        sets of the same metric families.
+        """
         if (graph is None) == (engine is None):
             raise ValueError("pass exactly one of graph= or engine=")
         if engine is not None and engine_kw:
@@ -53,8 +59,9 @@ class EngineRegistry:
             self._reserved.add(name)
         try:
             if engine is None:
-                engine = CompiledGraphEngine(
-                    graph, **{**self._default_kw, **engine_kw})
+                kw = {**self._default_kw, **engine_kw}
+                kw.setdefault("metrics_labels", {"model": name})
+                engine = CompiledGraphEngine(graph, **kw)
             with self._lock:
                 self._engines[name] = engine
         finally:
@@ -112,13 +119,37 @@ class EngineRegistry:
             return sorted(self._engines)
 
     def stats(self) -> dict:
-        """Per-model latency/fusion telemetry snapshot."""
+        """Per-model latency/fusion telemetry snapshot (every model's dict
+        comes from the same registry-backed ``latency_stats`` the engine
+        and scheduler serve, so the three views can no longer diverge)."""
         with self._lock:
             engines = dict(self._engines)
         return {name: {**eng.latency_stats(),
                        "fused_counts": eng.fused_counts,
                        "pending": eng.pending()}
                 for name, eng in engines.items()}
+
+    def metrics_snapshot(self) -> dict:
+        """Merged metrics snapshot across every engine's registry.
+
+        With a shared ``metrics_registry`` all engines write one registry
+        and this is just its snapshot; with per-engine (default) private
+        registries the snapshots are merged series-wise, each engine's
+        series tagged with its model label.
+        """
+        with self._lock:
+            engines = dict(self._engines)
+        seen, merged = set(), {}
+        for eng in engines.values():
+            if id(eng.metrics) in seen:
+                continue
+            seen.add(id(eng.metrics))
+            for mname, fam in eng.metrics.snapshot().items():
+                if mname not in merged:
+                    merged[mname] = {**fam, "series": list(fam["series"])}
+                else:
+                    merged[mname]["series"].extend(fam["series"])
+        return merged
 
     def __contains__(self, name: str) -> bool:
         with self._lock:

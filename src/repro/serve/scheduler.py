@@ -60,6 +60,21 @@ class ServeScheduler:
         self._thread: Optional[threading.Thread] = None
         self.n_submitted = 0
         self.n_rejected = 0
+        # scheduler metrics live in the engine's registry under the same
+        # labels, so one snapshot carries the whole serving path
+        m, lbl = engine.metrics, engine._metric_labels
+        self._obs_on = engine._obs_on
+        self._m_submitted = m.counter(
+            "serve_scheduler_submitted_total",
+            help="requests admitted through the scheduler", labels=lbl)
+        self._m_rejected = m.counter(
+            "serve_scheduler_rejected_total",
+            help="submits rejected by backpressure (QueueFull/timeout)",
+            labels=lbl)
+        self._m_wait = m.histogram(
+            "serve_admission_wait_ms", unit="ms",
+            help="time spent blocked on the bounded queue before admission",
+            window=512, labels=lbl)
 
     # ---------------------------------------------------------- lifecycle
 
@@ -119,31 +134,45 @@ class ServeScheduler:
         Blocks while the bounded queue is full (``timeout`` caps the wait);
         with ``block=False`` a full queue raises ``QueueFull`` immediately.
         """
-        give_up = None if timeout is None else time.time() + timeout
-        with self._cv:
-            if self._stopped:
-                raise RuntimeError(
-                    "scheduler is stopped; start() it (or run the engine's "
-                    "run_pending loop) before submitting")
-            while self.engine.pending() >= self.max_queue:
-                if not self.block:
-                    self.n_rejected += 1
-                    raise QueueFull(
-                        f"serve queue at capacity ({self.max_queue})")
-                remaining = (None if give_up is None
-                             else give_up - time.time())
-                if remaining is not None and remaining <= 0:
-                    self.n_rejected += 1
-                    raise QueueFull(
-                        f"timed out after {timeout}s waiting for queue space")
-                self._cv.wait(_POLL_S if remaining is None
-                              else min(remaining, _POLL_S))
-                if self._stopped:      # woken by shutdown, not queue space
+        t_enter = time.time()
+        give_up = None if timeout is None else t_enter + timeout
+        waited = False
+        try:
+            with self._cv:
+                if self._stopped:
                     raise RuntimeError(
-                        "scheduler stopped while waiting for queue space")
-            r = self.engine.submit(x, deadline_ms=deadline_ms)
-            self.n_submitted += 1
-            self._cv.notify_all()          # wake the flush loop
+                        "scheduler is stopped; start() it (or run the "
+                        "engine's run_pending loop) before submitting")
+                while self.engine.pending() >= self.max_queue:
+                    if not self.block:
+                        self.n_rejected += 1
+                        raise QueueFull(
+                            f"serve queue at capacity ({self.max_queue})")
+                    remaining = (None if give_up is None
+                                 else give_up - time.time())
+                    if remaining is not None and remaining <= 0:
+                        self.n_rejected += 1
+                        raise QueueFull(
+                            f"timed out after {timeout}s waiting for "
+                            f"queue space")
+                    waited = True
+                    self._cv.wait(_POLL_S if remaining is None
+                                  else min(remaining, _POLL_S))
+                    if self._stopped:  # woken by shutdown, not queue space
+                        raise RuntimeError(
+                            "scheduler stopped while waiting for queue "
+                            "space")
+                r = self.engine.submit(x, deadline_ms=deadline_ms)
+                self.n_submitted += 1
+                self._cv.notify_all()          # wake the flush loop
+        except QueueFull:
+            if self._obs_on:
+                self._m_rejected.inc()
+            raise
+        if self._obs_on:
+            self._m_submitted.inc()
+            if waited:                 # only admission *waits* are observed
+                self._m_wait.observe((time.time() - t_enter) * 1e3)
         return r
 
     # --------------------------------------------------------- flush loop
@@ -200,9 +229,14 @@ class ServeScheduler:
     # -------------------------------------------------------------- stats
 
     def stats(self) -> dict:
-        """Scheduler counters merged over the engine's rolling telemetry."""
+        """Scheduler counters merged over the engine's registry-backed
+        telemetry (``submitted``/``rejected`` are lifetime totals; the
+        explicit ``*_total`` aliases match the exported counter names)."""
         s = dict(self.engine.latency_stats())
         s.update(submitted=self.n_submitted, rejected=self.n_rejected,
+                 submitted_total=self.n_submitted,
+                 rejected_total=self.n_rejected,
+                 admission_wait_p99_ms=self._m_wait.percentile(99),
                  pending=self.engine.pending(), running=self._running,
                  window_ms=self.window_ms, max_queue=self.max_queue)
         return s
