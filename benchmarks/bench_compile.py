@@ -37,6 +37,7 @@ import numpy as np
 from repro.core import execute, transforms
 from repro.core.compile import compile_graph
 from repro.models import zoo
+from repro.obs.profile import time_fn, time_fns
 
 CASES = [
     ("TFC-w2a2", (1, 784)),
@@ -48,11 +49,8 @@ QUICK_CASES = [("TFC-w2a2", (1, 784)), ("TFC-w1a1", (1, 784))]
 
 
 def _time(fn, n=5):
-    fn()                                    # warm (trace + compile)
-    t0 = time.perf_counter()
-    for _ in range(n):
-        fn()
-    return (time.perf_counter() - t0) / n * 1e6
+    """Best-of-``n`` µs/call via the shared obs.profile harness."""
+    return time_fn(fn, n) * 1e6
 
 
 def run_detailed(cases=None) -> tuple[list[str], dict]:
@@ -210,15 +208,76 @@ def check_integer_requant(name: str) -> dict:
     }
 
 
+def check_tune(name: str, cache_dir=None, repeats: int = 5) -> dict:
+    """Regression gate for the kernel autotuner + tune cache (repro.tune).
+
+    Three invariants, measured on ``name``:
+
+      * **tuned is never slower**: the plan compiled with ``tune="search"``
+        must reach ≥ 90% of the default-blocks plan's throughput
+        (interleaved best-of timing; the search always times the default
+        tiling too, so a real regression means the selection logic broke —
+        the 10% headroom only absorbs timing noise);
+      * **warm cache re-tunes nothing**: a second ``compile_graph`` with
+        ``tune="cached"`` against the same cache dir must answer every
+        kernel segment from the graph manifest — 0 searches, 0 misses,
+        1 graph-manifest hit, every kernel segment tuned;
+      * **warm plan re-traces nothing**: two same-shape calls of the warm
+        plan must leave ``trace_count`` at 1 (one trace for the new shape,
+        zero retraces — the persistent-compilation-cache story only holds
+        if the plan itself is shape-stable).
+
+    Returns a record; record["ok"] is the verdict.
+    """
+    g = zoo.ZOO[name]()
+    shape = tuple(1 if d is None else int(d) for d in g.inputs[0].shape)
+    x = np.random.RandomState(0).randn(*shape).astype(np.float32)
+
+    plan_def = compile_graph(g)
+    plan_tuned = compile_graph(g, tune="search", tune_cache_dir=cache_dir)
+    out = plan_def.graph.output_names[0]
+    s_def, s_tuned = time_fns(
+        [lambda: jax.block_until_ready(plan_def({"x": x})[out]),
+         lambda: jax.block_until_ready(plan_tuned({"x": x})[out])],
+        repeats)
+    speedup = s_def / s_tuned if s_tuned else float("inf")
+    search_stats = plan_tuned.tuning_stats()
+
+    # warm-cache recompile: everything answered from the manifest
+    plan_warm = compile_graph(g, tune="cached", tune_cache_dir=cache_dir)
+    warm = plan_warm.tuning_stats()
+    warm_ok = (warm.get("searched", 0) == 0 and warm.get("misses", 0) == 0
+               and warm.get("graph_hit", 0) == 1 and
+               warm["kernel_segments"] >= 1 and
+               warm["tuned_segments"] == warm["kernel_segments"])
+    jax.block_until_ready(plan_warm({"x": x})[out])
+    jax.block_until_ready(plan_warm({"x": x})[out])
+    trace_ok = plan_warm.trace_count == 1
+
+    return {
+        "model": name,
+        "default_us": round(s_def * 1e6, 1),
+        "tuned_us": round(s_tuned * 1e6, 1),
+        "tuned_speedup": round(speedup, 3),
+        "search_stats": search_stats,
+        "warm_stats": warm,
+        "warm_trace_count": plan_warm.trace_count,
+        "ok": bool(speedup >= 0.90 and warm_ok and trace_ok),
+    }
+
+
 def main(argv=None) -> int:
     """CLI used by the CI smoke job: exit 0 iff every row was produced and
     every ``--check-conv`` / ``--check-grouped`` /
-    ``--check-integer-requant`` gate holds.
+    ``--check-integer-requant`` / ``--check-tune`` gate holds.
 
         python benchmarks/bench_compile.py [--quick] [--json PATH]
                                            [--check-conv MODEL ...]
                                            [--check-grouped MODEL ...]
                                            [--check-integer-requant MODEL ...]
+                                           [--check-tune MODEL ...]
+                                           [--tune-cache-dir PATH]
+                                           [--metrics-snapshot PATH]
     """
     import argparse
     import json
@@ -244,6 +303,20 @@ def main(argv=None) -> int:
                     help="assert MODEL compiles with every kernel segment "
                          "on the int32 dyadic requant epilogue (coverage "
                          "1.0, 0 fp32-requant segments; repeatable)")
+    ap.add_argument("--check-tune", metavar="MODEL", action="append",
+                    default=[],
+                    help="assert the autotuned plan reaches ≥90%% of the "
+                         "default-blocks throughput and a warm-cache "
+                         "recompile answers every segment with 0 searches "
+                         "and 0 retraces (repeatable)")
+    ap.add_argument("--tune-cache-dir", metavar="PATH", default=None,
+                    help="tune-cache root for --check-tune (default "
+                         "$REPRO_TUNE_CACHE_DIR or ~/.cache/repro-tune); "
+                         "CI persists this dir across runs")
+    ap.add_argument("--metrics-snapshot", metavar="PATH", default=None,
+                    help="dump the process-wide obs metrics registry "
+                         "(compile gauges, tune hit/miss counters) to PATH "
+                         "as JSON")
     args = ap.parse_args(argv)
     cases = QUICK_CASES if args.quick else CASES
     rows, records = run_detailed(cases)
@@ -251,7 +324,11 @@ def main(argv=None) -> int:
         print(row)
 
     ok = len(rows) == 4 * len(cases)
-    checks, grouped_checks, requant_checks = [], [], []
+    checks, grouped_checks, requant_checks, tune_checks = [], [], [], []
+
+    def _check_tune(name):
+        return check_tune(name, cache_dir=args.tune_cache_dir)
+
     for name, check, bucket, tag in (
             [(n, check_conv_lowering, checks, "check_conv")
              for n in args.check_conv] +
@@ -259,7 +336,9 @@ def main(argv=None) -> int:
              for n in args.check_grouped] +
             [(n, check_integer_requant, requant_checks,
               "check_integer_requant")
-             for n in args.check_integer_requant]):
+             for n in args.check_integer_requant] +
+            [(n, _check_tune, tune_checks, "check_tune")
+             for n in args.check_tune]):
         # a failing/crashing check must still reach the JSON artifact —
         # that's exactly when CI needs the diagnostics
         try:
@@ -276,6 +355,13 @@ def main(argv=None) -> int:
                       f"int32={rs['int32_segments']}/"
                       f"{rs['kernel_segments']};"
                       f"fp32_ops_eliminated={rs['fp32_ops_eliminated']}")
+        elif tag == "check_tune":
+            ws = c["warm_stats"]
+            detail = (f"speedup={c['tuned_speedup']:.2f}x;"
+                      f"warm_tuned={ws['tuned_segments']}/"
+                      f"{ws['kernel_segments']};"
+                      f"warm_searched={ws.get('searched', 0)};"
+                      f"warm_trace_count={c['warm_trace_count']}")
         else:
             detail = f"interp_convs={c['conv_nodes_interpreted']}"
             if tag == "check_grouped":
@@ -296,9 +382,17 @@ def main(argv=None) -> int:
             payload["grouped_checks"] = grouped_checks
         if requant_checks:
             payload["integer_requant_checks"] = requant_checks
+        if tune_checks:
+            payload["tune_checks"] = tune_checks
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2, sort_keys=True)
         print(f"# wrote {args.json}")
+
+    if args.metrics_snapshot:
+        from repro.obs import default_registry
+        with open(args.metrics_snapshot, "w") as f:
+            f.write(default_registry().to_json(indent=2, sort_keys=True))
+        print(f"# wrote {args.metrics_snapshot}")
     return 0 if ok else 1
 
 

@@ -39,17 +39,11 @@ CASES = [("TFC-w2a2", 64, 8)]                    # (model, batch, max_batch)
 
 
 def _interleaved_best_s(fns: list, repeats: int) -> list[float]:
-    """Best-of-``repeats`` for each fn, measured in alternating rounds so a
-    load/frequency drift during the run cannot bias one contestant."""
-    for fn in fns:
-        fn()                                     # warm (trace + compile)
-    best = [math.inf] * len(fns)
-    for _ in range(repeats):
-        for i, fn in enumerate(fns):
-            t0 = time.perf_counter()
-            fn()
-            best[i] = min(best[i], time.perf_counter() - t0)
-    return best
+    """Best-of-``repeats`` for each fn in alternating rounds — the shared
+    ``repro.obs.profile.time_fns`` harness (kept as the historical local
+    name)."""
+    from repro.obs.profile import time_fns
+    return time_fns(fns, repeats)
 
 
 def bench_pipeline(name: str, batch: int, max_batch: int,

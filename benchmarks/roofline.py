@@ -19,9 +19,8 @@ from __future__ import annotations
 import json
 from pathlib import Path
 
-PEAK_FLOPS = 197e12
-HBM_BW = 819e9
-ICI_BW = 50e9
+# hardware model shared with the kernel autotuner's pruning cost model
+from repro.tune.roofline import HBM_BW, ICI_BW, PEAK_FLOPS  # noqa: F401
 
 DRYRUN_DIR = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
 

@@ -77,6 +77,8 @@ class CompiledPlan:
     segments: list[Segment]
     consts: dict
     analysis: Optional[object] = None      # GraphAnalysis used for selection
+    tune_mode: str = "off"                 # "off" | "cached" | "search"
+    tune_stats: dict = field(default_factory=dict)   # Autotuner.stats copy
     _jitted: Callable = field(default=None, repr=False)
 
     def __post_init__(self):
@@ -214,6 +216,30 @@ class CompiledPlan:
                     "carrier_bytes_saved", 0)
         return out
 
+    def tuning_stats(self) -> dict:
+        """Tuned-vs-default tiling telemetry aggregated over segments.
+
+        ``kernel_segments`` counts every segment that carries a block
+        assignment (``meta["blocks"]``); ``tuned_segments`` are those whose
+        blocks came from the cache or a search rather than the module
+        defaults.  The cache counters (hits / misses / searched /
+        graph_hit / graph_miss) are the Autotuner's, snapshotted at
+        compile time — ``searched == 0`` with ``graph_hit == 1`` is the
+        warm-cache invariant ``bench_compile --check-tune`` gates on.
+        """
+        out = {"mode": self.tune_mode, "kernel_segments": 0,
+               "tuned_segments": 0, "default_segments": 0}
+        for s in self.segments:
+            if "blocks" not in s.meta:
+                continue
+            out["kernel_segments"] += 1
+            if s.meta.get("tuned") in ("cached", "search"):
+                out["tuned_segments"] += 1
+            else:
+                out["default_segments"] += 1
+        out.update(self.tune_stats)
+        return out
+
     def profile(self, x=None, **kw):
         """Per-segment measured profile (opt-in; see ``repro.obs.profile``).
 
@@ -263,8 +289,11 @@ def _make_interp_segment(nodes: list[Node], static_consts: dict) -> Segment:
 
 def compile_graph(graph: QonnxGraph, *, run_cleanup: bool = True,
                   use_kernels: bool = True, use_int4: bool = True,
-                  use_analysis: bool = True, interpret: bool = True,
-                  use_integer_requant: bool = True) -> CompiledPlan:
+                  use_analysis: bool = True,
+                  interpret: Optional[bool] = None,
+                  use_integer_requant: bool = True, tune: str = "off",
+                  tune_cache_dir: Optional[str] = None,
+                  tune_repeats: int = 3) -> CompiledPlan:
     """Partition ``graph`` into fused segments and emit one jitted plan.
 
     run_cleanup  — run the declarative "compile_prep" pipeline first
@@ -277,17 +306,31 @@ def compile_graph(graph: QonnxGraph, *, run_cleanup: bool = True,
     use_analysis — consult repro.analysis range/datatype inference for
                    kernel-variant and accumulator-dtype selection (actual
                    value ranges) instead of declared-bit-width matching
-    interpret    — forwarded to the Pallas kernels (True on CPU)
+    interpret    — forwarded to the Pallas kernels; None = backend default
+                   (interpreter on CPU, compiled Mosaic on GPU/TPU)
     use_integer_requant — allow the dyadic integer-epilogue fast path
                    (lowering/requant.py) on segments whose exactness proof
                    holds; False pins every segment to the fp32 epilogue
                    (the benchmark baseline for the epilogue speedup)
+    tune         — per-segment kernel tilings (repro.tune):
+                   "off" keeps the module-default blocks; "cached" answers
+                   from the on-disk tune cache (defaults on miss, never
+                   times anything); "search" additionally measures unseen
+                   workloads and persists the winners.  Modes other than
+                   "off" also enable the JAX persistent compilation cache
+                   so jitted executables survive process restarts.
+    tune_cache_dir — tune-cache root (default ``$REPRO_TUNE_CACHE_DIR`` or
+                   ``~/.cache/repro-tune``)
+    tune_repeats — best-of-N repeats per candidate in "search" mode
 
     Every compile records wall time and plan-shape gauges (segment counts
-    per fused kind, fused-node count, integer-requant coverage) into the
-    process-wide ``repro.obs`` default registry under ``model=graph.name``.
+    per fused kind, fused-node count, integer-requant coverage, tune-cache
+    hit/miss counters) into the process-wide ``repro.obs`` default
+    registry under ``model=graph.name``.
     """
     t_compile0 = time.perf_counter()
+    from repro.kernels._blocks import resolve_interpret
+    interpret = resolve_interpret(interpret)
     if run_cleanup:
         from . import passes
         graph = passes.run_pipeline(graph, "compile_prep")
@@ -298,8 +341,14 @@ def compile_graph(graph: QonnxGraph, *, run_cleanup: bool = True,
     if use_kernels and use_analysis:
         from repro.analysis import analyze
         ga = analyze(g)
+    tuner = None
+    if use_kernels and tune != "off":
+        from repro.tune import Autotuner, TuneCache, graph_cache_key
+        tuner = Autotuner(TuneCache(tune_cache_dir), mode=tune,
+                          repeats=tune_repeats, interpret=interpret)
+        tuner.begin_graph(graph_cache_key(g, tuner.backend))
     ctx = LoweringContext(analysis=ga, use_int4=use_int4, interpret=interpret,
-                          use_int_requant=use_integer_requant)
+                          use_int_requant=use_integer_requant, tuner=tuner)
 
     consts: dict = {k: jnp.asarray(v) for k, v in g.initializers.items()}
 
@@ -396,7 +445,12 @@ def compile_graph(graph: QonnxGraph, *, run_cleanup: bool = True,
     used.update(g.output_names)
     consts = {k: v for k, v in consts.items() if k in used}
 
-    plan = CompiledPlan(g, segments, consts, analysis=ga)
+    if tuner is not None:
+        tuner.end_graph()
+    plan = CompiledPlan(g, segments, consts, analysis=ga,
+                        tune_mode=tune if tuner is not None else "off",
+                        tune_stats=dict(tuner.stats) if tuner is not None
+                        else {})
     _record_compile_metrics(plan, time.perf_counter() - t_compile0)
     return plan
 
@@ -424,6 +478,21 @@ def _record_compile_metrics(plan: CompiledPlan, wall_s: float) -> None:
     reg.gauge("compile_integer_requant_segments",
               help="kernel segments proven exact on the dyadic integer "
                    "epilogue", labels=model).set(rq["int32_segments"])
+    if plan.tune_mode != "off":
+        ts = plan.tuning_stats()
+        reg.counter("tune_cache_hits_total",
+                    help="segment tilings answered from the tune cache",
+                    labels=model).inc(ts.get("hits", 0))
+        reg.counter("tune_cache_misses_total",
+                    help="segment tilings that fell back to defaults "
+                         "(cached mode, no entry)",
+                    labels=model).inc(ts.get("misses", 0))
+        reg.counter("tune_searches_total",
+                    help="tiling searches run (search mode, unseen "
+                         "workloads)", labels=model).inc(ts.get("searched", 0))
+        reg.gauge("compile_tuned_segments",
+                  help="kernel segments running cache- or search-selected "
+                       "tilings", labels=model).set(ts["tuned_segments"])
 
 
 def execute_compiled(graph: QonnxGraph, inputs: dict, **kw) -> dict:

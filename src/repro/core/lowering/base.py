@@ -88,6 +88,8 @@ class LoweringContext:
     interpret: bool = True
     use_int_requant: bool = True   # dyadic integer-epilogue selection
                                    # (lowering/requant.py; needs analysis)
+    tuner: Optional[object] = None  # tune.Autotuner — per-segment tilings
+                                    # (None: kernels keep module defaults)
 
 
 @dataclass
@@ -205,6 +207,33 @@ def conv_channel_scale(a: np.ndarray,
     if not np.all(sb == sb[:, :1]):
         return None                  # varies within an output channel
     return np.ascontiguousarray(sb[:, 0])
+
+
+def tensor_rows(g: QonnxGraph, name: str) -> Optional[int]:
+    """Leading (batch·spatial) row count of a 2D-viewable tensor — the M
+    dim the autotuner buckets.  None when the shape is unknown or not at
+    least rank 2; None dims (symbolic batch) count as 1, matching the
+    shapes the zoo models declare."""
+    sh = g.get_shape(name)
+    if not sh or len(sh) < 2:
+        return None
+    rows = 1
+    for d in sh[:-1]:
+        rows *= 1 if d is None else int(d)
+    return rows
+
+
+def conv_out_rows(g: QonnxGraph, node: Node) -> Optional[int]:
+    """im2col matmul rows (N·OH·OW) of a Conv from its output shape."""
+    sh = g.get_shape(node.outputs[0])
+    if not sh or len(sh) < 3:
+        return None
+    rows = 1
+    for ax, d in enumerate(sh):
+        if ax == 1:                 # NCHW channel axis -> matmul columns
+            continue
+        rows *= 1 if d is None else int(d)
+    return rows
 
 
 def sole_consumer(g: QonnxGraph, tensor: str) -> Optional[Node]:

@@ -56,8 +56,8 @@ import numpy as np
 
 from ..graph import Node, QonnxGraph
 from .base import (LoweringContext, LoweringRule, Segment, conv_channel_scale,
-                   register_rule, select_accumulator, sole_consumer,
-                   static_value)
+                   conv_out_rows, register_rule, select_accumulator,
+                   sole_consumer, static_value)
 from .qdq import stage_qdq_epilogue, static_act_quant_params
 from .requant import select_requant
 from .weights import (KernelMatch, QuantWeight, chain_absorbable,
@@ -200,6 +200,7 @@ class QuantConvRule(LoweringRule):
 
         m = QuantConvMatch(
             nb.nodes, node.inputs[0], nb.out, w2, nb.scale, nb.bias, int4_ok,
+            rows=conv_out_rows(g, node),
             kernel_shape=nb.kernel_shape, strides=nb.strides, pads=nb.pads,
             dilations=nb.dilations, group=nb.group, relu=nb.relu, act=nb.act)
         # zero-padding-aware bound wants the conv-shaped weights, not the
@@ -215,18 +216,20 @@ class QuantConvRule(LoweringRule):
              ctx: LoweringContext) -> Segment:
         from repro.kernels import ops as kernel_ops
 
-        kind, use_int4, w_key, s_key, b_key, meta = stage_kernel_carriers(
-            idx, m, consts, ctx, ("quant_conv", "quant_conv_int4"))
+        kind, use_int4, w_key, s_key, b_key, meta, blocks = \
+            stage_kernel_carriers(
+                idx, m, consts, ctx, ("quant_conv", "quant_conv_int4"))
         conv = functools.partial(
             kernel_ops.quant_conv2d, kernel_shape=m.kernel_shape,
             strides=m.strides, pads=m.pads, dilations=m.dilations,
             packed=use_int4, interpret=ctx.interpret, acc_dtype=m.acc_dtype,
-            requant=None if m.requant is None else m.requant.spec)
+            requant=None if m.requant is None else m.requant.spec,
+            **({} if blocks is None else {"blocks": tuple(blocks)}))
 
         keys = [w_key, s_key] + ([b_key] if b_key else [])
         qdq = None
         if m.act is not None and m.requant is None:
-            qdq, (qs_key, qz_key) = stage_qdq_epilogue(
+            qdq, (qs_key, qz_key), _ = stage_qdq_epilogue(
                 idx, consts, ctx, scale=m.act.scale,
                 zero_point=m.act.zero_point, bit_width=m.act.bit_width,
                 signed=m.act.signed, narrow=m.act.narrow,

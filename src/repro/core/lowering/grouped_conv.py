@@ -44,8 +44,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..graph import Node, QonnxGraph
-from .base import (LoweringContext, LoweringRule, Segment, register_rule,
-                   select_accumulator)
+from .base import (LoweringContext, LoweringRule, Segment, conv_out_rows,
+                   register_rule, select_accumulator)
 from .conv import ActQuantParams, QuantConvMatch, match_conv_common
 from .qdq import stage_qdq_epilogue
 from .requant import select_requant
@@ -118,7 +118,8 @@ class GroupedConvRule(LoweringRule):
             (ipg * nb.group * kh * kw) % 2 == 0
         m = GroupedConvMatch(
             nb.nodes, node.inputs[0], nb.out, w_carrier, nb.scale, nb.bias,
-            int4_ok, kernel_shape=nb.kernel_shape, strides=nb.strides,
+            int4_ok, rows=conv_out_rows(g, node),
+            kernel_shape=nb.kernel_shape, strides=nb.strides,
             pads=nb.pads, dilations=nb.dilations, group=nb.group,
             relu=nb.relu, act=nb.act, depthwise=depthwise,
             reclaimed_macs=saved_entries * _out_spatial(g, node),
@@ -139,8 +140,9 @@ class GroupedConvRule(LoweringRule):
 
         kinds = ("quant_conv_dw",) * 2 if m.depthwise else \
             ("quant_conv_grouped", "quant_conv_grouped_int4")
-        kind, use_int4, w_key, s_key, b_key, meta = stage_kernel_carriers(
-            idx, m, consts, ctx, kinds, pack=kernel_ops.pack_int4_grouped)
+        kind, use_int4, w_key, s_key, b_key, meta, blocks = \
+            stage_kernel_carriers(
+                idx, m, consts, ctx, kinds, pack=kernel_ops.pack_int4_grouped)
         keys = [w_key, s_key] + ([b_key] if b_key else [])
 
         act: Optional[ActQuantParams] = m.act
@@ -150,7 +152,7 @@ class GroupedConvRule(LoweringRule):
             # identical staging to the QDQ rule; the depthwise kernel
             # consumes the staged consts in its fused epilogue instead of a
             # separate quant_dequant call
-            qdq, (qs_key, qz_key) = stage_qdq_epilogue(
+            qdq, (qs_key, qz_key), _ = stage_qdq_epilogue(
                 idx, consts, ctx, scale=act.scale, zero_point=act.zero_point,
                 bit_width=act.bit_width, signed=act.signed, narrow=act.narrow,
                 rounding_mode=act.rounding_mode)
@@ -172,7 +174,8 @@ class GroupedConvRule(LoweringRule):
                 else act.bit_width,
                 act_signed=act.signed if act else True,
                 act_narrow=act.narrow if act else False,
-                act_rounding=act.rounding_mode if act else "ROUND")
+                act_rounding=act.rounding_mode if act else "ROUND",
+                **({} if blocks is None else {"block": tuple(blocks)}))
 
             def run(consts, env):
                 x = env.get(x_name, consts.get(x_name))
@@ -188,7 +191,8 @@ class GroupedConvRule(LoweringRule):
                 kernel_ops.quant_grouped_conv2d, groups=m.group,
                 kernel_shape=m.kernel_shape, strides=m.strides, pads=m.pads,
                 dilations=m.dilations, packed=use_int4,
-                interpret=ctx.interpret, acc_dtype=m.acc_dtype, requant=spec)
+                interpret=ctx.interpret, acc_dtype=m.acc_dtype, requant=spec,
+                **({} if blocks is None else {"blocks": tuple(blocks)}))
 
             def run(consts, env):
                 x = env.get(x_name, consts.get(x_name))

@@ -21,7 +21,7 @@ import numpy as np
 from ..graph import Node, QonnxGraph
 from .base import (LoweringContext, LoweringRule, Segment, col_scale,
                    register_rule, select_accumulator, sole_consumer,
-                   static_value)
+                   static_value, tensor_rows)
 from .requant import select_requant
 from .weights import (KernelMatch, chain_absorbable, resolve_quant_weight,
                       stage_kernel_carriers)
@@ -46,12 +46,13 @@ def make_matmul_segment(idx: int, m: KernelMatch, consts: dict,
     """
     from repro.kernels import ops as kernel_ops
 
-    kind, use_int4, w_key, s_key, b_key, meta = stage_kernel_carriers(
+    kind, use_int4, w_key, s_key, b_key, meta, blocks = stage_kernel_carriers(
         idx, m, consts, ctx, kinds)
     kernel = functools.partial(
         kernel_ops.quant_matmul_int4 if use_int4 else kernel_ops.quant_matmul,
         interpret=ctx.interpret, acc_dtype=m.acc_dtype,
-        requant=None if m.requant is None else m.requant.spec)
+        requant=None if m.requant is None else m.requant.spec,
+        **({} if blocks is None else {"blocks": tuple(blocks)}))
     x_name, out_name = m.x, m.out
     # integer path: feed the kernel grid indices (q - z).  x / s_x is an
     # exact fp32 division — the true quotient is a representable integer
@@ -146,4 +147,5 @@ def _finish_match(g: QonnxGraph, node: Node, nodes: list[Node], n: int,
             out = add.outputs[0]
 
     return QuantMatMulMatch(nodes, node.inputs[0], out, w_int,
-                            np.asarray(scale, np.float32), bias, int4_ok)
+                            np.asarray(scale, np.float32), bias, int4_ok,
+                            rows=tensor_rows(g, node.inputs[0]))

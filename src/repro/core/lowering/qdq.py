@@ -23,7 +23,8 @@ from .. import quant_ops
 from ..formats import bitwidth_from_bounds
 from ..graph import Node, QonnxGraph
 from .base import (LoweringContext, LoweringRule, Match, Segment,
-                   register_rule, scalar, sole_consumer, static_value)
+                   register_rule, scalar, sole_consumer, static_value,
+                   tensor_rows)
 
 
 def static_act_quant_params(g: QonnxGraph, node: Node):
@@ -55,11 +56,13 @@ class QDQMatch(Match):
     signed: bool
     narrow: bool
     rounding_mode: str
+    rows: Optional[int] = None   # flattened leading dims (tuner bucketing)
+    cols: Optional[int] = None   # last dim
 
 
 def stage_qdq_epilogue(idx: int, consts: dict, ctx: LoweringContext, *,
                        scale, zero_point, bit_width, signed, narrow,
-                       rounding_mode):
+                       rounding_mode, shape=None):
     """Stage one activation-QDQ's constants and build its kernel closure.
 
     The single place a Quant node's realization on ``kernels.quant_dequant``
@@ -68,25 +71,35 @@ def stage_qdq_epilogue(idx: int, consts: dict, ctx: LoweringContext, *,
     (``__seg{idx}_qs`` / ``__seg{idx}_qz``) and an identically-specialized
     kernel no matter which segment absorbs it.
 
-    Returns ``(kernel_fn, (s_key, z_key))``.
+    ``shape`` is the kernel's flattened ``(rows, cols)`` view when known —
+    with a tuner on the context it selects a per-workload block size.
+
+    Returns ``(kernel_fn, (s_key, z_key), block_cfg_or_None)``.
     """
     from repro.kernels import ops as kernel_ops
 
     s_key, z_key = f"__seg{idx}_qs", f"__seg{idx}_qz"
     consts[s_key] = jnp.asarray(scale)
     consts[z_key] = jnp.asarray(zero_point)
+    cfg = None
+    tuner = getattr(ctx, "tuner", None)
+    if tuner is not None and shape is not None and \
+            shape[0] is not None and shape[1] is not None:
+        cfg = tuner.blocks_for(tuner.sig(
+            "qdq", rows=shape[0], n=shape[1], k=0, bits=int(bit_width)))
     kernel = functools.partial(
         kernel_ops.quant_dequant, bit_width=bit_width, signed=signed,
-        narrow=narrow, rounding_mode=rounding_mode, interpret=ctx.interpret)
-    return kernel, (s_key, z_key)
+        narrow=narrow, rounding_mode=rounding_mode, interpret=ctx.interpret,
+        **({} if cfg is None else {"block": tuple(cfg.blocks)}))
+    return kernel, (s_key, z_key), cfg
 
 
 def make_qdq_segment(idx: int, m: QDQMatch, consts: dict,
                      ctx: LoweringContext) -> Segment:
-    kernel, (s_key, z_key) = stage_qdq_epilogue(
+    kernel, (s_key, z_key), cfg = stage_qdq_epilogue(
         idx, consts, ctx, scale=m.scale, zero_point=m.zero_point,
         bit_width=m.bit_width, signed=m.signed, narrow=m.narrow,
-        rounding_mode=m.rounding_mode)
+        rounding_mode=m.rounding_mode, shape=(m.rows, m.cols))
     x_name, out_name = m.x, m.out
 
     def run(consts, env):
@@ -95,8 +108,10 @@ def make_qdq_segment(idx: int, m: QDQMatch, consts: dict,
         y = kernel(x2, consts[s_key], consts[z_key])
         env[out_name] = y.reshape(x.shape)
 
+    meta = {} if cfg is None else {"blocks": list(cfg.blocks),
+                                   "tuned": cfg.source}
     return Segment("quant_dequant", m.nodes, [x_name], [out_name], run,
-                   (s_key, z_key))
+                   (s_key, z_key), meta)
 
 
 @register_rule
@@ -123,7 +138,8 @@ class ActivationQuantRule(LoweringRule):
         return QDQMatch(
             [node], node.inputs[0], node.outputs[0],
             np.asarray(s, np.float32).reshape(-1),
-            np.asarray(z, np.float32).reshape(-1), nb, signed, narrow, rmode)
+            np.asarray(z, np.float32).reshape(-1), nb, signed, narrow, rmode,
+            rows=tensor_rows(g, node.inputs[0]), cols=lastdim)
 
     def emit(self, idx: int, match: QDQMatch, consts: dict,
              ctx: LoweringContext) -> Segment:
@@ -182,7 +198,7 @@ class QCDQChainRule(LoweringRule):
             seq, node.inputs[0], dq.outputs[0],
             np.asarray(s, np.float32).reshape(-1),
             np.asarray(z, np.float32).reshape(-1), float(nb), signed, narrow,
-            "ROUND")
+            "ROUND", rows=tensor_rows(g, node.inputs[0]), cols=lastdim)
 
     def emit(self, idx: int, match: QDQMatch, consts: dict,
              ctx: LoweringContext) -> Segment:

@@ -42,6 +42,7 @@ class KernelMatch(Match):
     acc_dtype: object = jnp.float32   # analysis-selected accumulator
     acc_bits: Optional[int] = None    # minimal accumulator width (if proven)
     requant: Optional[object] = None  # proven RequantPlan (integer path)
+    rows: Optional[int] = None        # leading M rows (autotuner bucketing)
 
 
 def stage_kernel_carriers(idx: int, m: KernelMatch, consts: dict, ctx,
@@ -56,8 +57,16 @@ def stage_kernel_carriers(idx: int, m: KernelMatch, consts: dict, ctx,
     for carriers whose layout isn't the plain (K, N) operand (the grouped
     rule packs along each group's Kg).
 
-    Returns ``(kind, use_int4, w_key, s_key, b_key_or_None, meta)`` where
-    ``kinds`` is the (int8, int4) segment-kind pair.
+    When the context carries a tuner, the segment's workload signature
+    (family x rows bucket x carrier dims x bits x requant path) is built
+    from the *pre-packing* carrier shape and resolved to a per-segment
+    ``BlockConfig``; the chosen blocks land in ``meta["blocks"]`` (with
+    provenance in ``meta["tuned"]``) and are returned for the rule to
+    thread into its kernel partial.  No tuner -> ``blocks`` is None and
+    the kernels keep their module defaults.
+
+    Returns ``(kind, use_int4, w_key, s_key, b_key_or_None, meta, blocks)``
+    where ``kinds`` is the (int8, int4) segment-kind pair.
     """
     from repro.kernels import ops as kernel_ops
 
@@ -79,8 +88,38 @@ def stage_kernel_carriers(idx: int, m: KernelMatch, consts: dict, ctx,
         meta["acc_bits"] = m.acc_bits
     if m.requant is not None:
         meta["fp32_ops_eliminated"] = m.requant.fp32_ops_eliminated
+    blocks = None
+    if getattr(ctx, "tuner", None) is not None:
+        cfg = ctx.tuner.blocks_for(_carrier_sig(ctx.tuner, kinds[0], m,
+                                                use_int4, meta))
+        blocks = cfg.blocks
+        meta["blocks"] = list(blocks)
+        meta["tuned"] = cfg.source
     return (kind, use_int4, w_key, s_key,
-            b_key if m.bias is not None else None, meta)
+            b_key if m.bias is not None else None, meta, blocks)
+
+
+def _carrier_sig(tuner, base_kind: str, m: KernelMatch, use_int4: bool,
+                 meta: dict):
+    """Map a staged carrier to its autotuner ``KernelSig``.
+
+    The dims come from the pre-packing carrier: (K, N) for the dense
+    matmul/im2col kinds, (G, Kg, Ng) grouped, (kH·kW, C) depthwise.
+    """
+    w = np.asarray(m.w_int)
+    bits = 4 if use_int4 else 8
+    requant = meta["requant_path"]
+    if base_kind == "quant_conv_dw":
+        taps, c = w.shape
+        return tuner.sig("depthwise", rows=m.rows, n=c, k=taps,
+                         bits=bits, requant=requant)
+    if base_kind == "quant_conv_grouped":
+        g, kg, ng = w.shape
+        return tuner.sig("grouped", rows=m.rows, n=ng, k=kg, groups=g,
+                         bits=bits, requant=requant)
+    k, n = w.shape
+    return tuner.sig("matmul", rows=m.rows, n=n, k=k, bits=bits,
+                     requant=requant)
 
 
 @dataclass

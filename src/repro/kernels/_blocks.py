@@ -3,10 +3,37 @@
 Partial grid blocks read out-of-bounds garbage (NaN under interpret), so
 every wrapper pads its operands up to block multiples and slices the
 result back down.
+
+Also the single place the kernels' ``interpret`` default is decided:
+``resolve_interpret(None)`` answers "Pallas interpreter or compiled
+Mosaic?" from the JAX backend — the interpreter on CPU (where Mosaic
+can't compile), the real kernel pipeline on GPU/TPU.  Wrappers take
+``interpret=None`` and resolve it themselves, so an explicit True/False
+override always wins.
 """
 from __future__ import annotations
 
+import functools
+from typing import Optional
+
 import jax.numpy as jnp
+
+
+@functools.lru_cache(maxsize=1)
+def default_interpret() -> bool:
+    """True iff the Pallas kernels should run interpreted on this backend.
+
+    Resolved once per process (the backend cannot change under JAX): CPU
+    has no Mosaic pipeline, so kernels interpret there; GPU/TPU compile.
+    """
+    import jax
+    return jax.default_backend() == "cpu"
+
+
+def resolve_interpret(value: Optional[bool]) -> bool:
+    """An explicit kernel-wrapper ``interpret`` override, or the backend
+    default when the caller passed None."""
+    return default_interpret() if value is None else bool(value)
 
 
 def round_up(x: int, m: int) -> int:

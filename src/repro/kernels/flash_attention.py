@@ -23,6 +23,8 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ._blocks import resolve_interpret as _resolve_interpret
+
 DEFAULT_BLOCKS = (512, 512)       # (bq, bk)
 NEG_INF = -1e30
 
@@ -70,12 +72,14 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
 
 @functools.partial(jax.jit, static_argnames=("causal", "blocks", "interpret"))
 def flash_attention(q, k, v, *, causal=True, blocks=DEFAULT_BLOCKS,
-                    interpret=True):
+                    interpret=None):
     """q: (B, H, Sq, hd);  k, v: (B, KV, Sk, hd);  H = KV * G.
 
     Returns (B, H, Sq, hd).  Sq/Sk must be multiples of the block sizes
     (pad outside if needed — the model wrapper guarantees this).
+    ``interpret=None`` resolves to the backend default (interpreter on CPU).
     """
+    interpret = _resolve_interpret(interpret)
     B, H, Sq, hd = q.shape
     _, KV, Sk, _ = k.shape
     G = H // KV

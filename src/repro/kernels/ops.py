@@ -1,14 +1,17 @@
 """Public jit'd wrappers around the Pallas kernels.
 
-``interpret`` defaults to True (CPU validation per the build environment);
-production TPU runs pass interpret=False.  Weight packing/unpacking are
-offline operations (done once at model-load), so they are plain jnp here —
-the *in-kernel* unpack lives in quant_matmul_int4.
+``interpret`` defaults to None = auto-detect (``_blocks.default_interpret``,
+resolved once per process): the Pallas interpreter on CPU, the compiled
+Mosaic pipeline on GPU/TPU.  Pass an explicit bool to override (e.g.
+interpret=True to validate kernel logic on an accelerator).  Weight
+packing/unpacking are offline operations (done once at model-load), so they
+are plain jnp here — the *in-kernel* unpack lives in quant_matmul_int4.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 
+from ._blocks import default_interpret, resolve_interpret  # noqa: F401
 from .quant_conv import (  # noqa: F401  (public re-exports)
     extract_patches, im2col_weights, quant_conv2d)
 from .quant_dequant import quant_dequant  # noqa: F401

@@ -120,7 +120,7 @@ def extract_patches(x, kernel_shape, strides=(1, 1), pads=(0, 0, 0, 0),
 
 def quant_conv2d(x, w2, w_scale, bias=None, *, kernel_shape, strides=(1, 1),
                  pads=(0, 0, 0, 0), dilations=(1, 1), packed=False,
-                 blocks=DEFAULT_BLOCKS, interpret=True,
+                 blocks=DEFAULT_BLOCKS, interpret=None,
                  out_dtype=jnp.float32, acc_dtype=jnp.float32, requant=None):
     """Fused quantized conv: im2col patches through the integer matmul kernels.
 

@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from ._blocks import pad2, round_up
+from ._blocks import pad2, resolve_interpret, round_up
 
 DEFAULT_BLOCK = (256, 256)
 
@@ -74,13 +74,15 @@ def _qdq_kernel(x_ref, s_ref, z_ref, o_ref, *, lo, hi, rounding_mode):
                      "block", "interpret"))
 def quant_dequant(x, scale, zero_point, *, bit_width=8, signed=True,
                   narrow=False, rounding_mode="ROUND", block=DEFAULT_BLOCK,
-                  interpret=True):
+                  interpret=None):
     """Fused QDQ over a 2D-viewable tensor.
 
     x           : (..., N) floating tensor; collapsed to (M, N) internally
     scale, zp   : scalar or (N,) channel-wise
     bit_width   : static Python float/int (fractional widths honored)
+    interpret   : None = backend default; explicit bool overrides
     """
+    interpret = resolve_interpret(interpret)
     orig_shape = x.shape
     n = orig_shape[-1]
     m = 1

@@ -42,7 +42,8 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from ._blocks import round_up as _round_up
+from ._blocks import (resolve_interpret as _resolve_interpret,
+                      round_up as _round_up)
 from .quant_conv import conv_tap_slices, extract_patches
 from .quant_dequant import _round_kernel_body, _static_bounds
 from .quant_matmul import DEFAULT_BLOCKS, _unpack_lo_hi
@@ -183,7 +184,7 @@ def _norm_group_scale(w_scale, g: int, ng: int, dtype=jnp.float32):
                                              "out_dtype", "acc_dtype",
                                              "requant"))
 def quant_grouped_matmul(xg, wg, w_scale, *, packed=False,
-                         blocks=DEFAULT_BLOCKS, interpret=True,
+                         blocks=DEFAULT_BLOCKS, interpret=None,
                          out_dtype=jnp.float32, acc_dtype=jnp.float32,
                          requant=None):
     """Per-group integer matmul: out[g] = xg[g] @ (scale[g] * wg[g]).
@@ -199,6 +200,7 @@ def quant_grouped_matmul(xg, wg, w_scale, *, packed=False,
     its own slice, so MACs and carrier bytes are the true per-group
     contraction (no block-diagonal zeros).
     """
+    interpret = _resolve_interpret(interpret)
     g, m, kdim = xg.shape
     gw, kw_rows, n = wg.shape
     assert gw == g, (xg.shape, wg.shape)
@@ -233,7 +235,7 @@ def quant_grouped_matmul(xg, wg, w_scale, *, packed=False,
 
 def quant_grouped_conv2d(x, wg, w_scale, bias=None, *, groups, kernel_shape,
                          strides=(1, 1), pads=(0, 0, 0, 0), dilations=(1, 1),
-                         packed=False, blocks=DEFAULT_BLOCKS, interpret=True,
+                         packed=False, blocks=DEFAULT_BLOCKS, interpret=None,
                          out_dtype=jnp.float32, acc_dtype=jnp.float32,
                          requant=None):
     """Fused grouped quantized conv: per-group im2col onto the blocked kernel.
@@ -316,7 +318,7 @@ def quant_depthwise_conv2d(x, w_taps, w_scale, bias=None, act_scale=None,
                            dilations=(1, 1), relu=False, act_bits=None,
                            act_signed=True, act_narrow=False,
                            act_rounding="ROUND", block=DEFAULT_DW_BLOCK,
-                           interpret=True, out_dtype=jnp.float32,
+                           interpret=None, out_dtype=jnp.float32,
                            acc_dtype=jnp.float32, requant=None):
     """Fused depthwise quantized conv (``group == cin``, multiplier 1).
 
@@ -342,6 +344,7 @@ def quant_depthwise_conv2d(x, w_taps, w_scale, bias=None, act_scale=None,
     lowering proves it sound), and per-channel dequant applied once like
     ``quant_matmul``'s last-K-step scale.
     """
+    interpret = _resolve_interpret(interpret)
     x = jnp.asarray(x, jnp.float32)
     taps, (oh, ow) = extract_depthwise_taps(x, kernel_shape, strides, pads,
                                             dilations)

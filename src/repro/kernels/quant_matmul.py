@@ -29,7 +29,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from ._blocks import pad2 as _pad2, round_up as _round_up
+from ._blocks import (pad2 as _pad2, resolve_interpret as _resolve_interpret,
+                      round_up as _round_up)
 from .requant import int_epilogue
 
 DEFAULT_BLOCKS = (256, 256, 512)  # (bm, bn, bk)
@@ -107,7 +108,7 @@ def _norm_scale(w_scale, n, dtype=jnp.float32):
                                              "out_dtype", "acc_dtype",
                                              "requant"))
 def quant_matmul(x, w_int, w_scale, bias=None, *, blocks=DEFAULT_BLOCKS,
-                 interpret=True, out_dtype=jnp.float32,
+                 interpret=None, out_dtype=jnp.float32,
                  acc_dtype=jnp.float32, requant=None):
     """out = x @ (w_scale * w_int) [+ bias].
 
@@ -118,7 +119,10 @@ def quant_matmul(x, w_int, w_scale, bias=None, *, blocks=DEFAULT_BLOCKS,
     requant: optional ``IntRequant`` — switches the epilogue to the
     integer dyadic path; ``w_scale`` then carries the int32 per-channel
     multipliers instead of fp32 scales (acc_dtype must be int32).
+    interpret: None = backend default (interpreter on CPU, compiled
+    Mosaic on GPU/TPU); an explicit bool overrides.
     """
+    interpret = _resolve_interpret(interpret)
     m, kdim = x.shape
     k2, n = w_int.shape
     assert kdim == k2, (x.shape, w_int.shape)
@@ -156,13 +160,14 @@ def quant_matmul(x, w_int, w_scale, bias=None, *, blocks=DEFAULT_BLOCKS,
                                              "out_dtype", "acc_dtype",
                                              "requant"))
 def quant_matmul_int4(x, w_packed, w_scale, bias=None, *, blocks=DEFAULT_BLOCKS,
-                      interpret=True, out_dtype=jnp.float32,
+                      interpret=None, out_dtype=jnp.float32,
                       acc_dtype=jnp.float32, requant=None):
     """out = x @ (w_scale * unpack(w_packed)) with in-kernel int4 unpack.
 
     x: (M, K);  w_packed: (K//2, N) int8 (two nibbles per byte along K).
-    acc_dtype / requant: as in ``quant_matmul``.
+    acc_dtype / requant / interpret: as in ``quant_matmul``.
     """
+    interpret = _resolve_interpret(interpret)
     m, kdim = x.shape
     kp2, n = w_packed.shape
     assert kdim == 2 * kp2, (x.shape, w_packed.shape)

@@ -55,7 +55,8 @@ def serve_graph(args) -> None:
     registry = EngineRegistry(max_batch=args.max_batch,
                               pipeline=not args.no_pipeline,
                               metrics_registry=obs.default_registry(),
-                              tracer=tracer)
+                              tracer=tracer, tune=args.tune,
+                              tune_cache_dir=args.tune_cache_dir)
     eng = registry.register(args.graph, zoo.ZOO[args.graph]())
     rng = np.random.default_rng(0)
     xs = [rng.standard_normal(eng.sample_shape, dtype=np.float32)
@@ -139,6 +140,15 @@ def main():
                     help="per-request deadline passed to submit()")
     ap.add_argument("--no-pipeline", action="store_true",
                     help="per-chunk-sync dispatch (the benchmark baseline)")
+    ap.add_argument("--tune", choices=("off", "cached", "search"),
+                    default="cached",
+                    help="per-segment kernel tilings: 'cached' reads the "
+                         "on-disk tune cache (defaults on miss), 'search' "
+                         "measures and persists unseen workloads, 'off' "
+                         "keeps module defaults (default: cached)")
+    ap.add_argument("--tune-cache-dir", metavar="PATH", default=None,
+                    help="tune-cache root (default $REPRO_TUNE_CACHE_DIR "
+                         "or ~/.cache/repro-tune)")
     # observability
     ap.add_argument("--metrics-port", type=int, default=None, metavar="PORT",
                     help="expose the metrics registry over HTTP: GET "

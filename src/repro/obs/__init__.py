@@ -30,7 +30,8 @@ from .metrics import (  # noqa: F401
     nearest_rank,
 )
 from .http import MetricsServer, start_metrics_server  # noqa: F401
-from .profile import PlanProfile, SegmentProfile, profile_plan  # noqa: F401
+from .profile import (  # noqa: F401
+    PlanProfile, SegmentProfile, profile_plan, time_fn, time_fns)
 from .trace import JsonlSink, ListSink, Span, Tracer  # noqa: F401
 from . import http  # noqa: F401
 
@@ -52,4 +53,6 @@ __all__ = [
     "nearest_rank",
     "profile_plan",
     "start_metrics_server",
+    "time_fn",
+    "time_fns",
 ]

@@ -28,6 +28,7 @@ CNV-w1a1`` from the CLI.
 """
 from __future__ import annotations
 
+import math
 import time
 from dataclasses import dataclass, field
 from typing import Optional
@@ -36,7 +37,46 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["SegmentProfile", "PlanProfile", "profile_plan"]
+__all__ = ["SegmentProfile", "PlanProfile", "profile_plan", "time_fn",
+           "time_fns"]
+
+
+def time_fn(fn, repeats: int = 5, *, warmup: int = 1) -> float:
+    """Best-of-``repeats`` wall-clock seconds of ``fn()``.
+
+    The one best-of-N timing harness every consumer shares (this module's
+    per-segment profiling, benchmarks/bench_compile, benchmarks/bench_serve,
+    and the tune-tier candidate search).  Each call is forced with an
+    explicit ``jax.block_until_ready`` so async dispatch can't leak compute
+    out of the measurement; ``warmup`` unmeasured calls absorb trace +
+    compile.  Best-of (not mean) because scheduling noise is strictly
+    additive — the minimum is the least-contaminated estimate.
+    """
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    best = math.inf
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def time_fns(fns, repeats: int = 5, *, warmup: int = 1) -> list[float]:
+    """Best-of-``repeats`` seconds for each fn, measured in *alternating*
+    rounds so load/frequency drift during the run cannot bias one
+    contestant — the fair way to compare candidates (bench_serve's
+    pipelined-vs-sync gate, the autotuner's tiling search)."""
+    for fn in fns:
+        for _ in range(warmup):
+            jax.block_until_ready(fn())
+    best = [math.inf] * len(fns)
+    for _ in range(repeats):
+        for i, fn in enumerate(fns):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            best[i] = min(best[i], time.perf_counter() - t0)
+    return best
 
 
 @dataclass
@@ -146,15 +186,8 @@ def _nbytes(v) -> int:
         v, "shape") else 0
 
 
-def _time_best(fn, repeats: int) -> float:
-    """Best-of-``repeats`` seconds of ``fn`` with a forced result."""
-    jax.block_until_ready(fn())               # warm: trace + compile
-    best = float("inf")
-    for _ in range(repeats):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn())
-        best = min(best, time.perf_counter() - t0)
-    return best
+# historical internal name; the implementation is the shared ``time_fn``
+_time_best = time_fn
 
 
 def profile_plan(plan, x=None, *, repeats: int = 20,

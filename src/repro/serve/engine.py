@@ -124,12 +124,13 @@ class CompiledGraphEngine:
     """
 
     def __init__(self, graph, *, max_batch: int = 8, use_kernels: bool = True,
-                 use_int4: bool = True, interpret: bool = True,
+                 use_int4: bool = True, interpret: Optional[bool] = None,
                  report_cost: bool = True, pipeline: bool = True,
                  donate="auto", telemetry_window: int = 2048,
                  metrics_registry: Optional[MetricsRegistry] = None,
                  metrics_labels: Optional[dict] = None,
-                 tracer=None, observability: bool = True):
+                 tracer=None, observability: bool = True,
+                 tune: str = "off", tune_cache_dir: Optional[str] = None):
         self.max_batch = max_batch
         self.queue: list[GraphRequest] = []
         self._lock = threading.RLock()
@@ -141,7 +142,8 @@ class CompiledGraphEngine:
         self._donate = (jax.default_backend() in ("gpu", "tpu") and
                         (donate == "auto" or bool(donate)))
         self._compile_kw = dict(use_kernels=use_kernels, use_int4=use_int4,
-                                interpret=interpret)
+                                interpret=interpret, tune=tune,
+                                tune_cache_dir=tune_cache_dir)
         self._report_cost = report_cost
         self.n_completed = 0
         self.n_flushes = 0
@@ -220,6 +222,25 @@ class CompiledGraphEngine:
         with self._reload_lock:
             new_plan = compile_graph(graph, **self._compile_kw)
             g = new_plan.graph
+            if new_plan.tune_mode != "off":
+                ts = new_plan.tuning_stats()
+                self.metrics.counter(
+                    "serve_tune_cache_hits_total",
+                    help="segment tilings answered from the tune cache at "
+                         "engine load/reload",
+                    labels=self._metric_labels).inc(ts.get("hits", 0))
+                self.metrics.counter(
+                    "serve_tune_cache_misses_total",
+                    help="segment tilings that fell back to defaults at "
+                         "engine load/reload",
+                    labels=self._metric_labels).inc(ts.get("misses", 0))
+                log.info(
+                    "tune[%s] %s: %d/%d segments tuned (cache hits=%d "
+                    "misses=%d searched=%d, graph manifest %s)",
+                    new_plan.tune_mode, g.name, ts["tuned_segments"],
+                    ts["kernel_segments"], ts.get("hits", 0),
+                    ts.get("misses", 0), ts.get("searched", 0),
+                    "hit" if ts.get("graph_hit") else "miss")
             if len(g.inputs) != 1:
                 raise ValueError(
                     "CompiledGraphEngine serves single-input graphs")

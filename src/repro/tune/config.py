@@ -1,0 +1,83 @@
+"""Tuning-key and block-selection value types.
+
+``KernelSig`` is the content-addressed identity of one kernel-shaped
+workload: (kernel family, shape bucket, carrier bits, requant path,
+backend, interpret).  Two segments with equal signatures are guaranteed to
+call the same Pallas wrapper with the same static/tiled operand shapes, so
+they share one cache entry and one search — CNV's repeated conv layers
+tune once, and a conv whose im2col matmul coincides with a plain matmul
+shares its tiling.
+
+``BlockConfig`` is what the autotuner answers with: the concrete block
+tuple a lowering rule threads into the kernel wrapper, plus where it came
+from (``default`` — no cache entry and no search; ``cached`` — read from
+the on-disk tune cache; ``search`` — measured this compile).  It is the
+value recorded per segment in ``Segment.meta["blocks"]`` and aggregated by
+``CompiledPlan.tuning_stats``.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import asdict, dataclass
+from typing import Optional
+
+
+def bucket_rows(m: Optional[int]) -> int:
+    """Shape bucket for the leading (batch·spatial) dim: next power of two.
+
+    The M dim varies per serving batch while K/N are weight-fixed, so M is
+    bucketed (an M=900 and an M=1024 workload share a tiling) and K/N stay
+    exact.  Unknown rows (symbolic shapes) bucket to 1.
+    """
+    if not m or m <= 1:
+        return 1
+    return 1 << (int(m) - 1).bit_length()
+
+
+@dataclass(frozen=True)
+class KernelSig:
+    """Content-addressed identity of one tunable kernel workload.
+
+    family  — "matmul" (quant_matmul[_int4], incl. conv-via-im2col),
+              "grouped" (per-group blocked matmul), "depthwise" (VPU tap
+              kernel), "qdq" (elementwise quantize-dequantize)
+    m       — bucketed leading rows (``bucket_rows``)
+    n, k    — exact weight dims (N out-cols; K contraction / taps; k=0 for
+              the elementwise qdq family)
+    groups  — G for the grouped family, else 1
+    bits    — integer carrier width: 8 dense, 4 packed, 0 carrier-free
+    requant — epilogue path, "int32" | "fp32" | "none"
+    backend — jax.default_backend() the timing ran on
+    interpret — whether the kernels run under the Pallas interpreter
+    """
+    family: str
+    m: int
+    n: int
+    k: int
+    groups: int = 1
+    bits: int = 8
+    requant: str = "fp32"
+    backend: str = "cpu"
+    interpret: bool = True
+
+    def canonical_json(self) -> str:
+        """Deterministic serialization — the cache-key basis."""
+        return json.dumps(asdict(self), sort_keys=True)
+
+
+@dataclass(frozen=True)
+class BlockConfig:
+    """One selected kernel tiling and its provenance.
+
+    ``blocks`` matches the target wrapper's block parameter: (bm, bn, bk)
+    for the matmul/grouped families, (bm, bc) depthwise, (bm, bn) qdq.
+    """
+    blocks: tuple
+    source: str = "default"          # "default" | "cached" | "search"
+
+    @property
+    def tuned(self) -> bool:
+        return self.source != "default"
+
+    def to_json(self) -> dict:
+        return {"blocks": list(self.blocks), "source": self.source}

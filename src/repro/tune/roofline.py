@@ -1,0 +1,99 @@
+"""Roofline model of one blocked Pallas kernel invocation.
+
+The machine constants are the single source of truth shared with
+``benchmarks/roofline.py`` (which re-exports them for the dry-run
+analysis); the tile models price what a candidate tiling *provably* costs
+so the autotuner can discard dominated candidates without timing them:
+
+  * ``matmul_tile_footprint`` — VMEM bytes a (bm, bn, bk) tiling keeps
+    resident (double-buffered input blocks + accumulator + output tile).
+    A candidate that exceeds the per-core VMEM budget cannot be scheduled
+    at all on hardware — pruned outright.
+  * ``matmul_tile_traffic`` — modeled HBM bytes of the blocked K-innermost
+    grid: each x block is re-read once per N-block column, each w block
+    once per M-block row, the output written once.  Together with
+    ``arithmetic_intensity`` this is the classic roofline argument: a
+    candidate whose traffic *and* footprint are both beaten by another
+    candidate is Pareto-dominated — it cannot win on a machine whose only
+    axes are bandwidth and residency — and is skipped before timing.
+
+Elementwise kernels (QDQ, depthwise taps) move the same HBM bytes under
+any tiling, so for them only the footprint gate applies.
+"""
+from __future__ import annotations
+
+# TPU v5e machine constants (shared with benchmarks/roofline.py)
+PEAK_FLOPS = 197e12            # bf16 MXU peak, FLOP/s
+HBM_BW = 819e9                 # HBM bandwidth, B/s
+ICI_BW = 50e9                  # ICI per-link, B/s
+VMEM_BYTES = 16 * 2 ** 20      # per-core VMEM budget (~16 MiB on-chip)
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def matmul_tile_footprint(bm: int, bn: int, bk: int, *, x_bytes: int = 4,
+                          w_bytes: int = 1, acc_bytes: int = 4,
+                          out_bytes: int = 4) -> int:
+    """Resident VMEM bytes of one (bm, bn, bk) matmul grid step.
+
+    Input blocks count twice (Pallas double-buffers the HBM->VMEM copies
+    of the next grid step); the accumulator scratch and output tile live
+    once.  ``w_bytes=1`` prices the int8 carrier; int4 callers pass 0.5
+    equivalents via ``w_bytes`` scaled shapes upstream (the packed carrier
+    block is (bk//2, bn) int8 = bk*bn/2 bytes).
+    """
+    return int(2 * (bm * bk * x_bytes + bk * bn * w_bytes) +
+               bm * bn * acc_bytes + bm * bn * out_bytes)
+
+
+def matmul_tile_traffic(m: int, n: int, k: int, bm: int, bn: int, bk: int, *,
+                        x_bytes: int = 4, w_bytes: int = 1,
+                        out_bytes: int = 4) -> int:
+    """Modeled HBM bytes of the whole blocked (M/bm, N/bn, K/bk) grid.
+
+    K-innermost with the output tile resident: x is streamed once per
+    N-block column (N/bn full reads), w once per M-block row (M/bm full
+    reads), the output written once.  Dimensions are padded to block
+    multiples first — padding waste is part of what a tiling costs.
+    """
+    mp, np_, kp = _round_up(m, bm), _round_up(n, bn), _round_up(k, bk)
+    x_reads = (np_ // bn) * mp * kp * x_bytes
+    w_reads = (mp // bm) * kp * np_ * w_bytes
+    return int(x_reads + w_reads + mp * np_ * out_bytes)
+
+
+def arithmetic_intensity(m: int, n: int, k: int, bm: int, bn: int, bk: int,
+                         **byte_kw) -> float:
+    """FLOPs per modeled HBM byte of the blocked matmul (2·M·N·K MACs)."""
+    traffic = matmul_tile_traffic(m, n, k, bm, bn, bk, **byte_kw)
+    return (2.0 * m * n * k / traffic) if traffic else 0.0
+
+
+def elementwise_tile_footprint(bm: int, bn: int, *, in_bytes: int = 4,
+                               out_bytes: int = 4) -> int:
+    """Resident VMEM bytes of one elementwise (bm, bn) grid step
+    (double-buffered input + output tile)."""
+    return int(2 * bm * bn * in_bytes + bm * bn * out_bytes)
+
+
+def pareto_prune(candidates, cost_fn, keep: int):
+    """Drop provably-dominated candidates, keep at most ``keep`` of the rest.
+
+    ``cost_fn(cand) -> (traffic, footprint)``; candidate A is dominated
+    when some B costs no more on *both* axes (and strictly less on one) —
+    on a roofline machine A then cannot beat B, so timing it is wasted
+    work.  Survivors are returned cheapest-traffic-first, truncated to
+    ``keep``.
+    """
+    costs = [(cost_fn(c), c) for c in candidates]
+    survivors = []
+    for (ca, a) in costs:
+        dominated = any(
+            cb[0] <= ca[0] and cb[1] <= ca[1] and cb != ca
+            for (cb, _) in costs)
+        if not dominated:
+            survivors.append((ca, a))
+    survivors.sort(key=lambda t: t[0])
+    return [c for _, c in survivors[:keep]]
