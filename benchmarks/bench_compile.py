@@ -17,7 +17,12 @@ kernels, 0 block-diagonal carriers, cost-report MACs below the
 dense-equivalent block-diagonal count by exactly the reclaimed amount);
 ``--check-integer-requant MODEL`` gates the integer-only dyadic
 requantization path (every kernel segment on the int32 multiplier+shift
-epilogue, coverage recorded in the JSON artifact).
+epilogue, coverage recorded in the JSON artifact);
+``--check-fusion MODEL`` gates cross-segment fusion (≥1 fused boundary
+segment on an integer inter-segment carrier, positive boundary
+bytes-saved, 0 interpreted MaxPool/Add, fused output bit-identical to
+the ``use_fusion=False`` plan).  Each per-model JSON record also carries
+``fusion``: the plan's boundary census (``CompiledPlan.fusion_stats``).
 
 Per model the JSON record also carries ``requant``: the plan's
 integer-path coverage (``CompiledPlan.requant_stats``) plus the measured
@@ -115,6 +120,9 @@ def run_detailed(cases=None) -> tuple[list[str], dict]:
                 "fp32_requant_us": round(us_fp32, 1),
                 "epilogue_speedup": round(us_fp32 / us_comp, 3),
             },
+            # cross-segment fusion census: fused boundary segments, integer
+            # carriers, inter-segment bytes saved per call vs fp32
+            "fusion": plan.fusion_stats(),
             # per-segment measured profile (ms, MACs/s, bytes, requant path
             # per fused segment joined with the analysis cost report)
             "profile": plan.profile(
@@ -208,6 +216,46 @@ def check_integer_requant(name: str) -> dict:
     }
 
 
+def check_fusion(name: str) -> dict:
+    """Regression gate for cross-segment fusion with integer carriers.
+
+    ``name`` (CNV-w1a1 in CI) must compile with
+
+      * ≥1 fused boundary segment (an epilogue-absorbed MaxPool / Add /
+        Concat successor) and ≥1 integer inter-segment carrier,
+      * a positive inter-segment bytes-saved count (the HBM round-trips
+        the integer carriers eliminate vs fp32 boundaries),
+      * **zero** interpreted MaxPool and Add nodes — CNV's pooling and any
+        residual adds must ride inside fused segments, not the fallback,
+      * the fused plan bit-identical to the same graph compiled with
+        ``use_fusion=False`` on a fixed input (fusion is a layout
+        optimization, never a numerics change).
+    """
+    g = zoo.ZOO[name]()
+    plan = compile_graph(g)
+    fs = plan.fusion_stats()
+    interp = plan.interp_op_counts()
+    shape = tuple(1 if d is None else int(d) for d in plan.graph.inputs[0].shape)
+    x = np.random.RandomState(0).randn(*shape).astype(np.float32)
+    out = plan.graph.output_names[0]
+    plan_off = compile_graph(g, use_fusion=False)
+    bit_exact = bool(np.array_equal(
+        np.asarray(plan({"x": x})[out]),
+        np.asarray(plan_off({"x": x})[out])))
+    return {
+        "model": name,
+        "fusion_stats": fs,
+        "interp_op_counts": dict(sorted(interp.items())),
+        "bit_exact_vs_unfused": bit_exact,
+        "ok": (fs["fused_boundary_segments"] >= 1 and
+               fs["integer_boundaries"] >= 1 and
+               fs["boundary_bytes_saved"] > 0 and
+               interp.get("MaxPool", 0) == 0 and
+               interp.get("Add", 0) == 0 and
+               bit_exact),
+    }
+
+
 def check_tune(name: str, cache_dir=None, repeats: int = 5) -> dict:
     """Regression gate for the kernel autotuner + tune cache (repro.tune).
 
@@ -269,12 +317,14 @@ def check_tune(name: str, cache_dir=None, repeats: int = 5) -> dict:
 def main(argv=None) -> int:
     """CLI used by the CI smoke job: exit 0 iff every row was produced and
     every ``--check-conv`` / ``--check-grouped`` /
-    ``--check-integer-requant`` / ``--check-tune`` gate holds.
+    ``--check-integer-requant`` / ``--check-fusion`` / ``--check-tune``
+    gate holds.
 
         python benchmarks/bench_compile.py [--quick] [--json PATH]
                                            [--check-conv MODEL ...]
                                            [--check-grouped MODEL ...]
                                            [--check-integer-requant MODEL ...]
+                                           [--check-fusion MODEL ...]
                                            [--check-tune MODEL ...]
                                            [--tune-cache-dir PATH]
                                            [--metrics-snapshot PATH]
@@ -303,6 +353,13 @@ def main(argv=None) -> int:
                     help="assert MODEL compiles with every kernel segment "
                          "on the int32 dyadic requant epilogue (coverage "
                          "1.0, 0 fp32-requant segments; repeatable)")
+    ap.add_argument("--check-fusion", metavar="MODEL", action="append",
+                    default=[],
+                    help="assert MODEL compiles with ≥1 fused boundary "
+                         "segment on an integer inter-segment carrier, "
+                         "positive boundary bytes-saved, 0 interpreted "
+                         "MaxPool/Add nodes, and bit-identical output vs "
+                         "use_fusion=False (repeatable)")
     ap.add_argument("--check-tune", metavar="MODEL", action="append",
                     default=[],
                     help="assert the autotuned plan reaches ≥90%% of the "
@@ -324,7 +381,8 @@ def main(argv=None) -> int:
         print(row)
 
     ok = len(rows) == 4 * len(cases)
-    checks, grouped_checks, requant_checks, tune_checks = [], [], [], []
+    checks, grouped_checks, requant_checks = [], [], []
+    fusion_checks, tune_checks = [], []
 
     def _check_tune(name):
         return check_tune(name, cache_dir=args.tune_cache_dir)
@@ -337,6 +395,8 @@ def main(argv=None) -> int:
             [(n, check_integer_requant, requant_checks,
               "check_integer_requant")
              for n in args.check_integer_requant] +
+            [(n, check_fusion, fusion_checks, "check_fusion")
+             for n in args.check_fusion] +
             [(n, _check_tune, tune_checks, "check_tune")
              for n in args.check_tune]):
         # a failing/crashing check must still reach the JSON artifact —
@@ -355,6 +415,16 @@ def main(argv=None) -> int:
                       f"int32={rs['int32_segments']}/"
                       f"{rs['kernel_segments']};"
                       f"fp32_ops_eliminated={rs['fp32_ops_eliminated']}")
+        elif tag == "check_fusion":
+            fsn = c["fusion_stats"]
+            io = c["interp_op_counts"]
+            detail = (f"fused_boundaries={fsn['fused_boundary_segments']};"
+                      f"int_carriers={fsn['integer_boundaries']};"
+                      f"packed={fsn['packed_boundaries']};"
+                      f"bytes_saved={fsn['boundary_bytes_saved']};"
+                      f"interp_pool={io.get('MaxPool', 0)};"
+                      f"interp_add={io.get('Add', 0)};"
+                      f"bit_exact={c['bit_exact_vs_unfused']}")
         elif tag == "check_tune":
             ws = c["warm_stats"]
             detail = (f"speedup={c['tuned_speedup']:.2f}x;"
@@ -382,6 +452,8 @@ def main(argv=None) -> int:
             payload["grouped_checks"] = grouped_checks
         if requant_checks:
             payload["integer_requant_checks"] = requant_checks
+        if fusion_checks:
+            payload["fusion_checks"] = fusion_checks
         if tune_checks:
             payload["tune_checks"] = tune_checks
         with open(args.json, "w") as f:

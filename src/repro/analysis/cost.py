@@ -55,6 +55,12 @@ class CostReport:
     """Duck-type-compatible with core.bops.ModelCost (layers + totals)."""
     graph_name: str = ""
     layers: list[LayerReport] = field(default_factory=list)
+    # cross-segment fusion telemetry (populated from plan.fusion_stats()
+    # when a compiled plan is supplied to infer_cost)
+    fused_boundary_segments: int = 0
+    integer_boundaries: int = 0
+    packed_boundaries: int = 0
+    boundary_bytes_saved: int = 0
 
     @property
     def macs(self):
@@ -147,6 +153,13 @@ class CostReport:
                 f"integer requant: {n_int}/{n_ann} kernel layers "
                 f"({frac:.0%} integer-only), fp32 epilogue ops eliminated "
                 f"per inference: {self.fp32_ops_eliminated:,}")
+        if self.integer_boundaries or self.boundary_bytes_saved:
+            lines.append(
+                f"cross-segment fusion: {self.integer_boundaries} integer "
+                f"boundaries ({self.packed_boundaries} packed int4), "
+                f"{self.fused_boundary_segments} fused boundary segments, "
+                f"{self.boundary_bytes_saved:,} boundary bytes saved per "
+                f"call vs fp32")
         return "\n".join(lines)
 
     def csv(self) -> str:
@@ -193,7 +206,10 @@ def infer_cost(graph: QonnxGraph, act_bits: float = 8.0,
     dequant->round->requant chain) and the per-inference fp32 epilogue ops
     the integer path eliminates; the report then exposes
     ``integer_segment_fraction`` / ``fp32_ops_eliminated`` and grows the
-    matching table/CSV columns.
+    matching table/CSV columns.  A plan also contributes its cross-segment
+    fusion stats (integer boundary carriers, boundary bytes saved — the
+    optimization target of lowering/fusion.py), summarized at the foot of
+    ``table()``.
     """
     ga = ga or analyze(graph)
     dtypes, qbits = infer_datatype_map(graph, ga)
@@ -207,6 +223,12 @@ def infer_cost(graph: QonnxGraph, act_bits: float = 8.0,
             for n in seg.nodes:
                 requant_by_node[n.name] = (path, elim)
     report = CostReport(graph.name)
+    if plan is not None and hasattr(plan, "fusion_stats"):
+        fs = plan.fusion_stats()
+        report.fused_boundary_segments = fs["fused_boundary_segments"]
+        report.integer_boundaries = fs["integer_boundaries"]
+        report.packed_boundaries = fs["packed_boundaries"]
+        report.boundary_bytes_saved = fs["boundary_bytes_saved"]
 
     for node in graph.nodes:
         if node.op_type not in ("MatMul", "Gemm", "Conv"):

@@ -79,6 +79,7 @@ class CompiledPlan:
     analysis: Optional[object] = None      # GraphAnalysis used for selection
     tune_mode: str = "off"                 # "off" | "cached" | "search"
     tune_stats: dict = field(default_factory=dict)   # Autotuner.stats copy
+    fusion: Optional[object] = None        # lowering.FusionPlan (carriers)
     _jitted: Callable = field(default=None, repr=False)
 
     def __post_init__(self):
@@ -216,6 +217,35 @@ class CompiledPlan:
                     "carrier_bytes_saved", 0)
         return out
 
+    def fusion_stats(self) -> dict:
+        """Cross-segment fusion telemetry (lowering/fusion.py).
+
+        ``fused_boundary_segments`` counts segments participating in a
+        fused boundary (the four fusion-rule kinds plus kernel segments
+        that produce/consume an integer carrier);
+        ``integer_boundaries`` / ``packed_boundaries`` count inter-segment
+        tensors travelling as int8 codes / int4-nibble-packed bytes;
+        ``boundary_bytes_saved`` is the per-call HBM boundary traffic
+        avoided vs the old always-fp32 boundaries; ``offers`` /
+        ``declined`` expose how negotiation went (a declined offer keeps
+        the exact fp32 boundary the plan had before this pass).
+        """
+        fp = self.fusion
+        out = {"enabled": fp is not None,
+               "fused_boundary_segments": sum(
+                   1 for s in self.segments
+                   if s.meta.get("fused_boundary")),
+               "integer_boundaries": 0, "packed_boundaries": 0,
+               "boundary_bytes_saved": 0, "offers": 0, "declined": 0}
+        if fp is not None:
+            out["integer_boundaries"] = len(fp.carriers)
+            out["packed_boundaries"] = sum(
+                1 for c in fp.carriers.values() if c.packed)
+            out["boundary_bytes_saved"] = fp.bytes_saved
+            out["offers"] = fp.offered
+            out["declined"] = fp.declined
+        return out
+
     def tuning_stats(self) -> dict:
         """Tuned-vs-default tiling telemetry aggregated over segments.
 
@@ -293,7 +323,8 @@ def compile_graph(graph: QonnxGraph, *, run_cleanup: bool = True,
                   interpret: Optional[bool] = None,
                   use_integer_requant: bool = True, tune: str = "off",
                   tune_cache_dir: Optional[str] = None,
-                  tune_repeats: int = 3) -> CompiledPlan:
+                  tune_repeats: int = 3,
+                  use_fusion: bool = True) -> CompiledPlan:
     """Partition ``graph`` into fused segments and emit one jitted plan.
 
     run_cleanup  — run the declarative "compile_prep" pipeline first
@@ -322,6 +353,11 @@ def compile_graph(graph: QonnxGraph, *, run_cleanup: bool = True,
     tune_cache_dir — tune-cache root (default ``$REPRO_TUNE_CACHE_DIR`` or
                    ``~/.cache/repro-tune``)
     tune_repeats — best-of-N repeats per candidate in "search" mode
+    use_fusion   — cross-segment fusion (lowering/fusion.py): lower
+                   residual Add/pool/concat/bipolar boundary ops into fused
+                   segments and negotiate integer (int8 / packed-int4)
+                   inter-segment carriers; False restores the pre-fusion
+                   fp32-boundary plans (the regression baseline)
 
     Every compile records wall time and plan-shape gauges (segment counts
     per fused kind, fused-node count, integer-requant coverage, tune-cache
@@ -348,7 +384,8 @@ def compile_graph(graph: QonnxGraph, *, run_cleanup: bool = True,
                           repeats=tune_repeats, interpret=interpret)
         tuner.begin_graph(graph_cache_key(g, tuner.backend))
     ctx = LoweringContext(analysis=ga, use_int4=use_int4, interpret=interpret,
-                          use_int_requant=use_integer_requant, tuner=tuner)
+                          use_int_requant=use_integer_requant, tuner=tuner,
+                          use_fusion=use_fusion)
 
     consts: dict = {k: jnp.asarray(v) for k, v in g.initializers.items()}
 
@@ -376,6 +413,16 @@ def compile_graph(graph: QonnxGraph, *, run_cleanup: bool = True,
                 anchor_match[id(node)] = (rule, m)
                 covered.update(id(n) for n in m.nodes)
                 break
+
+    # carrier negotiation — after matching (it reads every match's
+    # offers/accepts) and before emission (the emitters close over the
+    # negotiated boundary representations): one topo walk deciding which
+    # inter-segment tensors travel as integer codes instead of fp32
+    fusion_plan = None
+    if use_kernels and use_fusion:
+        from .lowering import fusion as fusion_mod
+        fusion_plan = fusion_mod.negotiate_carriers(g, anchor_match)
+        ctx.fusion = fusion_plan
 
     # pass 1.5 — compile-time folding of the *unmatched* static subgraphs
     # (e.g. weight chains of convs no rule supports): evaluate them once
@@ -450,7 +497,7 @@ def compile_graph(graph: QonnxGraph, *, run_cleanup: bool = True,
     plan = CompiledPlan(g, segments, consts, analysis=ga,
                         tune_mode=tune if tuner is not None else "off",
                         tune_stats=dict(tuner.stats) if tuner is not None
-                        else {})
+                        else {}, fusion=fusion_plan)
     _record_compile_metrics(plan, time.perf_counter() - t_compile0)
     return plan
 
@@ -478,6 +525,13 @@ def _record_compile_metrics(plan: CompiledPlan, wall_s: float) -> None:
     reg.gauge("compile_integer_requant_segments",
               help="kernel segments proven exact on the dyadic integer "
                    "epilogue", labels=model).set(rq["int32_segments"])
+    fs = plan.fusion_stats()
+    reg.gauge("compile_integer_boundaries",
+              help="inter-segment tensors carried as integer codes instead "
+                   "of fp32", labels=model).set(fs["integer_boundaries"])
+    reg.gauge("compile_boundary_bytes_saved",
+              help="per-call boundary HBM bytes avoided vs fp32 boundaries",
+              labels=model).set(fs["boundary_bytes_saved"])
     if plan.tune_mode != "off":
         ts = plan.tuning_stats()
         reg.counter("tune_cache_hits_total",

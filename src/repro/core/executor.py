@@ -354,17 +354,22 @@ def _pool(node, x, reducer, init, is_avg=False):
         padding = [(0, 0)] + pad_pairs + [(0, 0)]
     y = jax.lax.reduce_window(x, init, reducer, window, wstrides, padding)
     if is_avg:
+        # divisors are kept runtime-derived (never constants) so the
+        # division stays a true IEEE division when this op is traced into
+        # a jitted plan — a constant divisor gets reciprocal-rewritten by
+        # XLA, drifting one ulp from eager execution on non-power-of-two
+        # counts (see kernels/quant_pool.py for the full rationale)
         if any(p != 0 for pair in pad_pairs for p in pair) and \
                 not bool(node.attrs.get("count_include_pad", 0)):
             # ONNX default count_include_pad=0: padded positions do not
             # count toward the divisor, so edge windows divide by the
             # number of *real* elements they cover
-            ones = jnp.ones(x.shape, jnp.float32)
+            ones = (x == x).astype(jnp.float32)
             counts = jax.lax.reduce_window(ones, 0.0, jax.lax.add, window,
                                            wstrides, padding)
             y = y / counts.astype(y.dtype)
         else:
-            y = y / float(np.prod(k))
+            y = y / ((y == y).astype(y.dtype) * y.dtype.type(np.prod(k)))
     return y
 
 

@@ -18,8 +18,12 @@ from . import conv as _conv          # noqa: F401,E402
 from . import grouped_conv as _grouped_conv  # noqa: F401,E402
 from . import matmul as _matmul      # noqa: F401,E402
 from . import qdq as _qdq            # noqa: F401,E402
+from . import fusion as _fusion      # noqa: F401,E402
 
 from .conv import QuantConvRule, match_conv_common  # noqa: F401,E402
 from .grouped_conv import GroupedConvRule  # noqa: F401,E402
 from .matmul import QuantMatMulRule  # noqa: F401,E402
 from .qdq import ActivationQuantRule, QCDQChainRule  # noqa: F401,E402
+from .fusion import (  # noqa: F401,E402
+    BipolarActRule, Carrier, EltwiseAddRule, FusionPlan, QuantConcatRule,
+    QuantPoolRule, negotiate_carriers)

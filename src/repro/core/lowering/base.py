@@ -90,6 +90,10 @@ class LoweringContext:
                                    # (lowering/requant.py; needs analysis)
     tuner: Optional[object] = None  # tune.Autotuner — per-segment tilings
                                     # (None: kernels keep module defaults)
+    use_fusion: bool = True        # cross-segment fusion rules + integer
+                                   # boundary carriers (lowering/fusion.py)
+    fusion: Optional[object] = None  # fusion.FusionPlan once negotiated —
+                                     # emitters read boundary carriers here
 
 
 @dataclass

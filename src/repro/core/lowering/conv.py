@@ -210,12 +210,19 @@ class QuantConvRule(LoweringRule):
                        w_absum=np.abs(nb.qw.w_int.astype(np.int64))
                        .sum(axis=(1, 2, 3)),
                        relu=nb.relu, act=nb.act)
+        if getattr(ctx, "use_fusion", True):
+            from . import fusion
+            m.carrier_accepts = (m.x,)
+            if nb.act is not None:
+                m.carrier_out = fusion.carrier_from_act(nb.act)
         return m
 
     def emit(self, idx: int, m: QuantConvMatch, consts: dict,
              ctx: LoweringContext) -> Segment:
         from repro.kernels import ops as kernel_ops
+        from . import fusion
 
+        cin, cout = fusion.fusion_carriers(ctx, m.x, m.out)
         kind, use_int4, w_key, s_key, b_key, meta, blocks = \
             stage_kernel_carriers(
                 idx, m, consts, ctx, ("quant_conv", "quant_conv_int4"))
@@ -233,16 +240,26 @@ class QuantConvRule(LoweringRule):
                 idx, consts, ctx, scale=m.act.scale,
                 zero_point=m.act.zero_point, bit_width=m.act.bit_width,
                 signed=m.act.signed, narrow=m.act.narrow,
-                rounding_mode=m.act.rounding_mode)
+                rounding_mode=m.act.rounding_mode,
+                emit_codes=cout is not None)
             keys += [qs_key, qz_key]
         x_name, out_name = m.x, m.out
         # integer path: relu and the activation Quant are folded into the
         # kernel's IntRequant epilogue; only the exact x / s_x remains here
         relu = m.relu and m.requant is None
         in_scale = None if m.requant is None else m.requant.in_scale
+        # integer-boundary output off the requant path: the kernel emitted
+        # s_a*(q - z_a) with a proven power-of-two s_a = 2**-T_a, so the
+        # codes are recovered exactly as q = y*2**T_a + z_a
+        code_mul = code_zp = None
+        if cout is not None and m.requant is not None:
+            code_mul = np.float32(2.0 ** m.requant.spec.act_out_shift)
+            code_zp = np.float32(m.requant.spec.act_zp)
 
         def run(consts, env):
             x = env.get(x_name, consts.get(x_name))
+            if cin is not None:
+                x = fusion.boundary_values(x, cin)
             if in_scale is not None:
                 x = x.astype(jnp.float32) / in_scale
             y = conv(x, consts[w_key], consts[s_key],
@@ -254,9 +271,15 @@ class QuantConvRule(LoweringRule):
                 y2 = qdq(y.reshape(y.shape[0], -1),
                          consts[qs_key], consts[qz_key])
                 y = y2.reshape(y.shape)
+            if cout is not None:
+                if code_mul is not None:
+                    y = jnp.round(y * code_mul + code_zp).astype(jnp.int8)
+                y = fusion.boundary_out(y, cout)
             env[out_name] = y
 
         if m.group > 1:
             meta["group"] = m.group
+        if cin is not None or cout is not None:
+            fusion._carrier_meta(meta, cin, cout)
         return Segment(kind, m.nodes, [x_name], [out_name], run,
                        tuple(keys), meta)

@@ -132,12 +132,23 @@ class GroupedConvRule(LoweringRule):
                        w_absum=np.abs(nb.qw.w_int.astype(np.int64))
                        .sum(axis=(1, 2, 3)),
                        relu=nb.relu, act=nb.act)
+        if getattr(ctx, "use_fusion", True):
+            from . import fusion
+            m.carrier_accepts = (m.x,)
+            # the depthwise fp32 path realizes the act Quant *inside* the
+            # kernel (no emit_codes hook) — only the requant path and the
+            # blocked kernel's external epilogue can produce codes
+            if nb.act is not None and (m.requant is not None
+                                       or not depthwise):
+                m.carrier_out = fusion.carrier_from_act(nb.act)
         return m
 
     def emit(self, idx: int, m: GroupedConvMatch, consts: dict,
              ctx: LoweringContext) -> Segment:
         from repro.kernels import ops as kernel_ops
+        from . import fusion
 
+        cin, cout = fusion.fusion_carriers(ctx, m.x, m.out)
         kinds = ("quant_conv_dw",) * 2 if m.depthwise else \
             ("quant_conv_grouped", "quant_conv_grouped_int4")
         kind, use_int4, w_key, s_key, b_key, meta, blocks = \
@@ -155,7 +166,8 @@ class GroupedConvRule(LoweringRule):
             qdq, (qs_key, qz_key), _ = stage_qdq_epilogue(
                 idx, consts, ctx, scale=act.scale, zero_point=act.zero_point,
                 bit_width=act.bit_width, signed=act.signed, narrow=act.narrow,
-                rounding_mode=act.rounding_mode)
+                rounding_mode=act.rounding_mode,
+                emit_codes=cout is not None)
             keys += [qs_key, qz_key]
 
         x_name, out_name = m.x, m.out
@@ -164,6 +176,12 @@ class GroupedConvRule(LoweringRule):
         relu = m.relu and m.requant is None
         spec = None if m.requant is None else m.requant.spec
         in_scale = None if m.requant is None else m.requant.in_scale
+        # requant-path carrier output: exact code recovery off the proven
+        # power-of-two act grid (see conv.py)
+        code_mul = code_zp = None
+        if cout is not None and spec is not None:
+            code_mul = np.float32(2.0 ** spec.act_out_shift)
+            code_zp = np.float32(spec.act_zp)
         if m.depthwise:
             conv = functools.partial(
                 kernel_ops.quant_depthwise_conv2d,
@@ -179,13 +197,20 @@ class GroupedConvRule(LoweringRule):
 
             def run(consts, env):
                 x = env.get(x_name, consts.get(x_name))
+                if cin is not None:
+                    x = fusion.boundary_values(x, cin)
                 if in_scale is not None:
                     x = x.astype(jnp.float32) / in_scale
-                env[out_name] = conv(
+                y = conv(
                     x, consts[w_key], consts[s_key],
                     consts[b_key] if b_key else None,
                     consts[qs_key] if qs_key else None,
                     consts[qz_key] if qz_key else None)
+                if cout is not None:
+                    y = fusion.boundary_out(
+                        jnp.round(y * code_mul + code_zp).astype(jnp.int8),
+                        cout)
+                env[out_name] = y
         else:
             conv = functools.partial(
                 kernel_ops.quant_grouped_conv2d, groups=m.group,
@@ -196,6 +221,8 @@ class GroupedConvRule(LoweringRule):
 
             def run(consts, env):
                 x = env.get(x_name, consts.get(x_name))
+                if cin is not None:
+                    x = fusion.boundary_values(x, cin)
                 if in_scale is not None:
                     x = x.astype(jnp.float32) / in_scale
                 y = conv(x, consts[w_key], consts[s_key],
@@ -206,6 +233,10 @@ class GroupedConvRule(LoweringRule):
                     y2 = qdq(y.reshape(y.shape[0], -1),
                              consts[qs_key], consts[qz_key])
                     y = y2.reshape(y.shape)
+                if cout is not None:
+                    if code_mul is not None:
+                        y = jnp.round(y * code_mul + code_zp).astype(jnp.int8)
+                    y = fusion.boundary_out(y, cout)
                 env[out_name] = y
 
         meta["group"] = m.group
@@ -217,5 +248,7 @@ class GroupedConvRule(LoweringRule):
         meta["carrier_bytes_saved"] = int(
             own_entries * m.group * (0.5 if m.dense_int4_ok else 1.0) -
             own_entries * (0.5 if use_int4 else 1.0))
+        if cin is not None or cout is not None:
+            fusion._carrier_meta(meta, cin, cout)
         return Segment(kind, m.nodes, [x_name], [out_name], run,
                        tuple(keys), meta)

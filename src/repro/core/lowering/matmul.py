@@ -46,6 +46,9 @@ def make_matmul_segment(idx: int, m: KernelMatch, consts: dict,
     """
     from repro.kernels import ops as kernel_ops
 
+    from . import fusion
+
+    (cin,) = fusion.fusion_carriers(ctx, m.x)
     kind, use_int4, w_key, s_key, b_key, meta, blocks = stage_kernel_carriers(
         idx, m, consts, ctx, kinds)
     kernel = functools.partial(
@@ -61,6 +64,8 @@ def make_matmul_segment(idx: int, m: KernelMatch, consts: dict,
 
     def run(consts, env):
         x = env.get(x_name, consts.get(x_name))
+        if cin is not None:
+            x = fusion.boundary_values(x, cin)
         lead = x.shape[:-1]
         x2 = x.reshape((-1, x.shape[-1])).astype(jnp.float32)
         if in_scale is not None:
@@ -70,6 +75,8 @@ def make_matmul_segment(idx: int, m: KernelMatch, consts: dict,
         env[out_name] = y.reshape(lead + (y.shape[-1],))
 
     keys = (w_key, s_key, b_key) if b_key else (w_key, s_key)
+    if cin is not None:
+        fusion._carrier_meta(meta, cin, None)
     return Segment(kind, m.nodes, [x_name], [out_name], run, keys, meta)
 
 
@@ -104,6 +111,10 @@ class QuantMatMulRule(LoweringRule):
             select_requant(ctx, g, node, m,
                            w_absum=np.abs(m.w_int.astype(np.int64))
                            .sum(axis=0))
+            if getattr(ctx, "use_fusion", True):
+                # accept-only: the matmul dequantizes a carried activation
+                # on entry; it offers no codes (its epilogue stays as-is)
+                m.carrier_accepts = (m.x,)
         return m
 
     def emit(self, idx: int, match: QuantMatMulMatch, consts: dict,

@@ -58,11 +58,13 @@ class QDQMatch(Match):
     rounding_mode: str
     rows: Optional[int] = None   # flattened leading dims (tuner bucketing)
     cols: Optional[int] = None   # last dim
+    carrier_accepts: tuple = ()  # inputs acceptable as integer carriers
+    carrier_out: Optional[object] = None   # fusion.Carrier offer for out
 
 
 def stage_qdq_epilogue(idx: int, consts: dict, ctx: LoweringContext, *,
                        scale, zero_point, bit_width, signed, narrow,
-                       rounding_mode, shape=None):
+                       rounding_mode, shape=None, emit_codes=False):
     """Stage one activation-QDQ's constants and build its kernel closure.
 
     The single place a Quant node's realization on ``kernels.quant_dequant``
@@ -73,6 +75,11 @@ def stage_qdq_epilogue(idx: int, consts: dict, ctx: LoweringContext, *,
 
     ``shape`` is the kernel's flattened ``(rows, cols)`` view when known —
     with a tuner on the context it selects a per-workload block size.
+
+    ``emit_codes=True`` makes the staged kernel return the int8
+    quantization codes instead of the dequantized values — the codes the
+    kernel clips/rounds internally either way, so the integer-boundary
+    output of the fusion pass is bit-identical to the in-kernel codes.
 
     Returns ``(kernel_fn, (s_key, z_key), block_cfg_or_None)``.
     """
@@ -90,28 +97,38 @@ def stage_qdq_epilogue(idx: int, consts: dict, ctx: LoweringContext, *,
     kernel = functools.partial(
         kernel_ops.quant_dequant, bit_width=bit_width, signed=signed,
         narrow=narrow, rounding_mode=rounding_mode, interpret=ctx.interpret,
+        emit_codes=emit_codes,
         **({} if cfg is None else {"block": tuple(cfg.blocks)}))
     return kernel, (s_key, z_key), cfg
 
 
 def make_qdq_segment(idx: int, m: QDQMatch, consts: dict,
                      ctx: LoweringContext) -> Segment:
+    from . import fusion
+
+    cin, cout = fusion.fusion_carriers(ctx, m.x, m.out)
     kernel, (s_key, z_key), cfg = stage_qdq_epilogue(
         idx, consts, ctx, scale=m.scale, zero_point=m.zero_point,
         bit_width=m.bit_width, signed=m.signed, narrow=m.narrow,
-        rounding_mode=m.rounding_mode, shape=(m.rows, m.cols))
+        rounding_mode=m.rounding_mode, shape=(m.rows, m.cols),
+        emit_codes=cout is not None)
     x_name, out_name = m.x, m.out
 
     def run(consts, env):
         x = env.get(x_name, consts.get(x_name))
+        if cin is not None:
+            x = fusion.boundary_values(x, cin)
         x2 = x.reshape((1, -1)) if x.ndim < 2 else x
-        y = kernel(x2, consts[s_key], consts[z_key])
-        env[out_name] = y.reshape(x.shape)
+        y = kernel(x2, consts[s_key], consts[z_key]).reshape(x.shape)
+        if cout is not None:
+            y = fusion.boundary_out(y, cout)
+        env[out_name] = y
 
     meta = {} if cfg is None else {"blocks": list(cfg.blocks),
                                    "tuned": cfg.source}
     return Segment("quant_dequant", m.nodes, [x_name], [out_name], run,
-                   (s_key, z_key), meta)
+                   (s_key, z_key), fusion._carrier_meta(meta, cin, cout)
+                   if (cin or cout) else meta)
 
 
 @register_rule
@@ -135,11 +152,17 @@ class ActivationQuantRule(LoweringRule):
         for p in (s, z):
             if p.size != 1 and (lastdim is None or p.size != lastdim):
                 return None                       # kernel handles (), (N,) only
-        return QDQMatch(
+        m = QDQMatch(
             [node], node.inputs[0], node.outputs[0],
             np.asarray(s, np.float32).reshape(-1),
             np.asarray(z, np.float32).reshape(-1), nb, signed, narrow, rmode,
             rows=tensor_rows(g, node.inputs[0]), cols=lastdim)
+        if getattr(ctx, "use_fusion", True):
+            from . import fusion
+            m.carrier_accepts = (m.x,)
+            m.carrier_out = fusion.carrier_from_params(s, z, nb, signed,
+                                                       narrow)
+        return m
 
     def emit(self, idx: int, match: QDQMatch, consts: dict,
              ctx: LoweringContext) -> Segment:
@@ -194,11 +217,17 @@ class QCDQChainRule(LoweringRule):
         for p in (s, z):
             if p.size != 1 and (lastdim is None or p.size != lastdim):
                 return None
-        return QDQMatch(
+        m = QDQMatch(
             seq, node.inputs[0], dq.outputs[0],
             np.asarray(s, np.float32).reshape(-1),
             np.asarray(z, np.float32).reshape(-1), float(nb), signed, narrow,
             "ROUND", rows=tensor_rows(g, node.inputs[0]), cols=lastdim)
+        if getattr(ctx, "use_fusion", True):
+            from . import fusion
+            m.carrier_accepts = (m.x,)
+            m.carrier_out = fusion.carrier_from_params(
+                s, z, float(nb), signed, narrow)
+        return m
 
     def emit(self, idx: int, match: QDQMatch, consts: dict,
              ctx: LoweringContext) -> Segment:

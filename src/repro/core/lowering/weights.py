@@ -43,6 +43,9 @@ class KernelMatch(Match):
     acc_bits: Optional[int] = None    # minimal accumulator width (if proven)
     requant: Optional[object] = None  # proven RequantPlan (integer path)
     rows: Optional[int] = None        # leading M rows (autotuner bucketing)
+    carrier_accepts: tuple = ()       # inputs the emitter can take as
+                                      # integer boundary carriers
+    carrier_out: Optional[object] = None  # fusion.Carrier offer for ``out``
 
 
 def stage_kernel_carriers(idx: int, m: KernelMatch, consts: dict, ctx,

@@ -20,6 +20,9 @@ from .quant_grouped_conv import (  # noqa: F401
     pack_int4_grouped, quant_depthwise_conv2d, quant_grouped_conv2d,
     quant_grouped_matmul, unpack_int4_grouped)
 from .quant_matmul import quant_matmul, quant_matmul_int4  # noqa: F401
+from .quant_pool import (  # noqa: F401  (fused boundary pooling + packers)
+    avgpool2d, avgpool2d_codes, maxpool2d, maxpool2d_codes, pack_codes_int4,
+    unpack_codes_int4)
 from . import ref
 
 

@@ -59,28 +59,35 @@ def _round_kernel_body(x, rounding_mode):
     raise ValueError(rounding_mode)
 
 
-def _qdq_kernel(x_ref, s_ref, z_ref, o_ref, *, lo, hi, rounding_mode):
+def _qdq_kernel(x_ref, s_ref, z_ref, o_ref, *, lo, hi, rounding_mode,
+                emit_codes=False):
     x = x_ref[...].astype(jnp.float32)
     s = s_ref[...].astype(jnp.float32)
     z = z_ref[...].astype(jnp.float32)
     q = _round_kernel_body(x / s + z, rounding_mode)
     q = jnp.clip(q, lo, hi)
-    o_ref[...] = ((q - z) * s).astype(o_ref.dtype)
+    if emit_codes:
+        o_ref[...] = q.astype(o_ref.dtype)
+    else:
+        o_ref[...] = ((q - z) * s).astype(o_ref.dtype)
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("bit_width", "signed", "narrow", "rounding_mode",
-                     "block", "interpret"))
+                     "block", "interpret", "emit_codes"))
 def quant_dequant(x, scale, zero_point, *, bit_width=8, signed=True,
                   narrow=False, rounding_mode="ROUND", block=DEFAULT_BLOCK,
-                  interpret=None):
+                  interpret=None, emit_codes=False):
     """Fused QDQ over a 2D-viewable tensor.
 
     x           : (..., N) floating tensor; collapsed to (M, N) internally
     scale, zp   : scalar or (N,) channel-wise
     bit_width   : static Python float/int (fractional widths honored)
     interpret   : None = backend default; explicit bool overrides
+    emit_codes  : return the clipped int8 quantization codes instead of the
+                  dequantized values (the cross-segment fusion pass's
+                  integer boundary producer; widths must fit int8)
     """
     interpret = resolve_interpret(interpret)
     orig_shape = x.shape
@@ -117,7 +124,8 @@ def quant_dequant(x, scale, zero_point, *, bit_width=8, signed=True,
         return (0, j if s2.shape[1] > 1 else 0)
 
     out = pl.pallas_call(
-        functools.partial(_qdq_kernel, lo=lo, hi=hi, rounding_mode=rounding_mode),
+        functools.partial(_qdq_kernel, lo=lo, hi=hi,
+                          rounding_mode=rounding_mode, emit_codes=emit_codes),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
@@ -126,7 +134,8 @@ def quant_dequant(x, scale, zero_point, *, bit_width=8, signed=True,
                          lambda i, j: (0, j if z2.shape[1] > 1 else 0)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        out_shape=jax.ShapeDtypeStruct(
+            (mp, np_), jnp.int8 if emit_codes else x.dtype),
         interpret=interpret,
     )(x2, s2, z2)
     return out[:m, :n].reshape(orig_shape)

@@ -1,0 +1,192 @@
+"""Pooling on fused-segment boundaries, fp32 and integer-carrier variants.
+
+The cross-segment fusion pass (``core/lowering/fusion.py``) lowers
+``MaxPool``/``AveragePool`` nodes into fused segments so CNV-class models
+stop bouncing through the interpreter between convs.  Two families:
+
+  * fp32 variants — the *same* ``jax.lax.reduce_window`` expression the
+    interpreted oracle's ``executor._pool`` evaluates, so a fused pool on
+    an fp32 boundary is bit-identical to the oracle by construction;
+  * integer-carrier variants — the boundary tensor arrives as int8
+    quantization codes ``q`` with ``v = (q - z) * s``:
+
+      - max pooling commutes with dequantization (``s > 0`` makes it
+        strictly monotone), so ``maxpool2d_codes`` reduces the codes
+        directly with an int8 ``-128`` identity and the result dequantizes
+        to exactly the oracle's fp32 max;
+      - average pooling sums the codes in int32 and reconstructs the value
+        sum as ``s * (S_q - n_real * z)`` — padded window positions
+        contribute value 0, i.e. *code z*, not code 0, which is why the
+        code-domain sum must subtract ``n_real * z`` rather than divide the
+        raw sum (the PR-1 fp32 path never had to make that distinction).
+        The divisor mirrors ``executor._pool``'s ONNX semantics: the real
+        element count per window when pads are present and
+        ``count_include_pad=0``, else ``kH*kW``.  Exactness vs the oracle
+        needs the caller to prove the dyadic bound (fusion.py gates on
+        ``M * n * amax < 2**24``); otherwise callers dequantize on entry
+        and take the fp32 variant, which is oracle-identical for any scale.
+
+These are ``lax``/``jnp`` realizations rather than hand-written Pallas
+kernels on purpose: they run *inside* the one jitted plan, where XLA fuses
+the window reduction with the carrier unpack/dequant around it — the win
+this pass chases is the boundary staying int8/int4 in HBM, not the FLOPs
+of a 2x2 window max.
+
+``pack_codes_int4`` / ``unpack_codes_int4`` are the boundary nibble
+packers: carriers with <= 4 logical bits (codes in [-8, 7]) and a static
+even last dim travel two-per-byte, halving boundary traffic again.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["maxpool2d", "maxpool2d_codes", "avgpool2d", "avgpool2d_codes",
+           "pack_codes_int4", "unpack_codes_int4"]
+
+INT8_MIN = -128          # identity for the int8 code-domain max reduction
+
+
+def _window(kernel_shape, strides, pads):
+    """Normalize NCHW 2-D pool attrs to reduce_window arguments, mirroring
+    ``executor._pool`` (strides default to the kernel, ONNX pads order
+    [top, left, bottom, right])."""
+    k = tuple(int(v) for v in kernel_shape)
+    s = k if strides is None else tuple(int(v) for v in strides)
+    p = tuple(int(v) for v in pads)
+    pad_pairs = [(p[i], p[i + len(k)]) for i in range(len(k))]
+    window = (1, 1) + k
+    wstrides = (1, 1) + s
+    padding = [(0, 0), (0, 0)] + pad_pairs
+    return k, window, wstrides, padding, pad_pairs
+
+
+def maxpool2d(x, *, kernel_shape, strides=None, pads=(0, 0, 0, 0)):
+    """fp32 NCHW max pool — the oracle's exact reduce_window expression."""
+    _, window, wstrides, padding, _ = _window(kernel_shape, strides, pads)
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, window, wstrides,
+                                 padding)
+
+
+def maxpool2d_codes(codes, *, kernel_shape, strides=None, pads=(0, 0, 0, 0)):
+    """Max pool directly on int8 quantization codes.
+
+    Exact vs dequantize-then-pool for any positive scale (dequantization is
+    monotone), provided every window covers at least one real element —
+    the fusion rule gates carrier acceptance on ``pads < kernel`` so the
+    ``-128`` padding identity can never win a window.
+    """
+    _, window, wstrides, padding, _ = _window(kernel_shape, strides, pads)
+    return jax.lax.reduce_window(codes, np.int8(INT8_MIN), jax.lax.max,
+                                 window, wstrides, padding)
+
+
+def _window_counts(x_f32, window, wstrides, padding):
+    """Real-element count per window, derived from the *runtime* input.
+
+    The obvious ``ones = jnp.ones(x.shape)`` constant-folds under jit, and
+    XLA then rewrites the divide-by-constant into a multiply-by-reciprocal
+    — off by one ulp from the true IEEE division the eager oracle performs
+    whenever a count is not a power of two.  ``x == x`` keeps the counts a
+    runtime value (so the division stays a division) and is value-identical:
+    a NaN input already NaN-poisons every window sum it touches, so the
+    dropped count is masked by the NaN result.
+    """
+    ones = (x_f32 == x_f32).astype(jnp.float32)
+    return jax.lax.reduce_window(ones, 0.0, jax.lax.add, window, wstrides,
+                                 padding)
+
+
+def _runtime_scalar_div(y, n):
+    """``y / n`` with the scalar divisor materialized as a runtime tensor.
+
+    Same rationale as ``_window_counts``: a literal divisor is folded and
+    reciprocal-rewritten under jit, so ``y / 9.0`` inside the compiled plan
+    would differ from the eager oracle's IEEE division by one ulp.  The
+    ``y == y`` mask keeps it runtime and is NaN-transparent (NaN / n is NaN
+    for any divisor).
+    """
+    den = (y == y).astype(y.dtype) * y.dtype.type(n)
+    return y / den
+
+
+def avgpool2d(x, *, kernel_shape, strides=None, pads=(0, 0, 0, 0),
+              count_include_pad=0):
+    """fp32 NCHW average pool — the oracle's exact expression including the
+    ONNX ``count_include_pad=0`` real-element divisor on padded edges."""
+    k, window, wstrides, padding, pad_pairs = _window(
+        kernel_shape, strides, pads)
+    y = jax.lax.reduce_window(x, 0.0, jax.lax.add, window, wstrides, padding)
+    if any(p != 0 for pair in pad_pairs for p in pair) and \
+            not bool(count_include_pad):
+        counts = _window_counts(x, window, wstrides, padding)
+        y = y / counts.astype(y.dtype)
+    else:
+        y = _runtime_scalar_div(y, float(np.prod(k)))
+    return y
+
+
+def avgpool2d_codes(codes, scale, zero_point, *, kernel_shape, strides=None,
+                    pads=(0, 0, 0, 0), count_include_pad=0):
+    """Average pool consumed directly from int8 codes, int32 window sums.
+
+    With ``v = s * (q - z)`` the window value sum is
+    ``s * (S_q - n_real * z)`` where ``S_q`` sums the real codes (padding
+    adds code 0 to the reduction, which stands for value ``-s*z``, hence
+    the ``n_real * z`` correction) and ``n_real`` counts real elements per
+    window.  The divisor follows ``executor._pool``: ``n_real`` when pads
+    are present and ``count_include_pad=0``, else ``kH*kW`` — this is the
+    integer-carrier form of the ONNX divisor rule, which the fp32-only
+    PR-1 path never exercised on codes.
+
+    Bit-exact vs the oracle when the caller proves the dyadic bound
+    ``M * kH*kW * amax < 2**24`` (fusion.py's gate); returns fp32 values.
+    """
+    k, window, wstrides, padding, pad_pairs = _window(
+        kernel_shape, strides, pads)
+    s_q = jax.lax.reduce_window(codes.astype(jnp.int32), 0, jax.lax.add,
+                                window, wstrides, padding)
+    padded = any(p != 0 for pair in pad_pairs for p in pair)
+    z = int(round(float(np.asarray(zero_point).reshape(()))))
+    if padded and (z != 0 or not bool(count_include_pad)):
+        # derived from the f32 view of the codes (int == int would fold
+        # back to a constant and reintroduce the reciprocal rewrite)
+        counts = _window_counts(codes.astype(jnp.float32), window, wstrides,
+                                padding)
+    else:
+        counts = None
+    num = s_q if z == 0 else \
+        s_q - z * (counts.astype(jnp.int32) if counts is not None
+                   else int(np.prod(k)))
+    val = jnp.float32(np.float32(scale)) * num.astype(jnp.float32)
+    if padded and not bool(count_include_pad):
+        return val / counts
+    return _runtime_scalar_div(val, float(np.prod(k)))
+
+
+def pack_codes_int4(codes):
+    """Nibble-pack int8 codes in [-8, 7] two-per-byte along the last axis:
+    ``(..., N) -> (..., N//2)`` uint8.
+
+    Packing along the minor axis (the fusion negotiator gates on a static
+    even last dim) keeps every leading dim — including a varying batch —
+    fully dynamic, so a jitted plan retraces cleanly on new batch sizes.
+    """
+    c = codes.astype(jnp.int32)
+    return ((c[..., 0::2] & 0xF) |
+            ((c[..., 1::2] & 0xF) << 4)).astype(jnp.uint8)
+
+
+def unpack_codes_int4(packed):
+    """Inverse of ``pack_codes_int4``: ``(..., N//2)`` uint8 bytes ->
+    ``(..., N)`` int8 codes.
+
+    Each nibble is sign-extended from 4 bits via the ``(n ^ 8) - 8`` trick.
+    """
+    b = packed.astype(jnp.int32)
+    lo = ((b & 0xF) ^ 8) - 8
+    hi = (((b >> 4) & 0xF) ^ 8) - 8
+    out = jnp.stack([lo, hi], axis=-1)
+    return out.reshape(packed.shape[:-1] +
+                       (2 * packed.shape[-1],)).astype(jnp.int8)

@@ -26,6 +26,12 @@ assert **bit-exact** parity, no float envelope; ``near`` scales are
 dyadic·(1+2**-18), exactly representable in fp32 but with an odd
 multiplier above ``DYADIC_MAX_MULT`` — the detector must reject them and
 every kernel segment must stay on the fp32 requant path.
+
+``BOUNDARY_SEEDS`` drives a second generator (``build_boundary_graph``)
+over the cross-segment fusion pass's patterns: residual
+``Add [-> Relu] [-> Quant]`` blocks, ``MaxPool``/``AveragePool`` between
+quantized layers, and two-branch ``Concat`` — with a coverage assert that
+fused-boundary segments and integer carriers actually occur in the corpus.
 """
 import numpy as np
 import pytest
@@ -41,6 +47,7 @@ QCDQ_SEEDS = list(range(200, 210))   # QCDQ-converted variant
 DYADIC_SEEDS = list(range(300, 320))  # odd·2**-t scale family
 POW2_SEEDS = list(range(400, 412))   # 2**-k scale family
 NEAR_SEEDS = list(range(500, 510))   # near-dyadic: must NOT take int path
+BOUNDARY_SEEDS = list(range(600, 618))  # residual/pool/concat chains
 
 
 # ------------------------------------------------------------- generator
@@ -192,6 +199,83 @@ def build_fuzz_graph(seed, *, qcdq_safe=False, scale_family="float"):
     return g, x_val
 
 
+# ----------------------------------------------- boundary-chain generator
+
+def _boundary_conv(b, rng, h, cin, cout, cfg, k=None):
+    """Spatial-shape-preserving conv (1x1, or 3x3 pad 1) — the building
+    block of residual/concat branches whose outputs must stay addable."""
+    k = int(rng.choice([1, 3])) if k is None else k
+    pad = 1 if k == 3 else 0
+    w = rng.randn(cout, cin, k, k) * 0.4
+    qw = _weight_quant(b, rng, w, cfg, per_channel_shape=(cout, 1, 1, 1))
+    (h,) = b.add_node("Conv", [h, qw], 1,
+                      {"strides": [1, 1], "pads": [pad] * 4,
+                       "kernel_shape": [k, k]})
+    return h
+
+
+def build_boundary_graph(seed, *, scale_family="float"):
+    """Seeded chains of the fusion pass's boundary patterns: residual
+    ``Add [->Relu] [->Quant]`` blocks, ``MaxPool``/``AveragePool`` between
+    quantized layers, and two-branch ``Concat`` — the corpus the
+    cross-segment carrier negotiation must stay exact on (bits 1-8 via
+    ``_act_quant``, every rounding mode, bipolar included)."""
+    cfg = {"qcdq_safe": False, "scale_family": scale_family}
+    rng = np.random.RandomState(seed)
+    b = GraphBuilder(f"boundary_{seed}")
+    batch = int(rng.randint(1, 3))
+    ch = int(rng.randint(2, 6))
+    sp = int(rng.randint(8, 13))
+    shape = (batch, ch, sp, sp)
+    x = b.add_input("x", shape)
+    h, _ = _act_quant(b, rng, x, cfg)
+    for _ in range(int(rng.randint(2, 4))):
+        kind = str(rng.choice(["residual", "pool", "concat"]))
+        if kind == "pool" and sp < 4:
+            kind = "residual"
+        if kind == "residual":
+            cout = int(rng.randint(2, 6))
+            branches = []
+            for _i in range(2):
+                a = _boundary_conv(b, rng, h, ch, cout, cfg)
+                (a,) = b.add_node("Relu", [a], 1)
+                a, _ = _act_quant(b, rng, a, cfg)
+                branches.append(a)
+            (y,) = b.add_node("Add", branches, 1)
+            if rng.rand() < 0.7:
+                (y,) = b.add_node("Relu", [y], 1)
+            h, _ = _act_quant(b, rng, y, cfg)
+            ch = cout
+        elif kind == "pool":
+            op = str(rng.choice(["MaxPool", "AveragePool"]))
+            pk = int(rng.choice([2, 3]))
+            pad = int(rng.choice([0, 1]))
+            attrs = {"kernel_shape": [pk, pk], "strides": [pk, pk],
+                     "pads": [pad] * 4}
+            if op == "AveragePool":
+                attrs["count_include_pad"] = int(rng.rand() < 0.5)
+            (h,) = b.add_node(op, [h], 1, attrs)
+            sp = (sp + 2 * pad - pk) // pk + 1
+            if rng.rand() < 0.7:
+                h, _ = _act_quant(b, rng, h, cfg)
+        else:
+            cout = int(rng.randint(2, 5))
+            branches = []
+            for _i in range(2):
+                a = _boundary_conv(b, rng, h, ch, cout, cfg, k=1)
+                (a,) = b.add_node("Relu", [a], 1)
+                a, _ = _act_quant(b, rng, a, cfg)
+                branches.append(a)
+            (h,) = b.add_node("Concat", branches, 1, {"axis": 1})
+            ch = 2 * cout
+            if rng.rand() < 0.7:
+                h, _ = _act_quant(b, rng, h, cfg)
+    b.mark_output(h)
+    g = b.build()
+    x_val = (rng.randn(*shape) * rng.uniform(0.5, 2.0)).astype(np.float32)
+    return g, x_val
+
+
 # ----------------------------------------------------------- differential
 
 def check_parity(g, x, *, atol=2e-4, rtol=2e-4):
@@ -229,11 +313,12 @@ def _requant_paths(plan):
             if s.meta.get("requant_path") is not None]
 
 
-def _check_family_parity(seed, family):
+def _check_family_parity(seed, family, builder=build_fuzz_graph):
     """Dyadic-family differential: bit-exact when the whole plan is on the
-    integer path (provable exactness — no tie-flip envelope), float
+    integer path (provable exactness — no tie-flip envelope; the fused
+    boundary segments are bit-same by construction for every family), float
     envelope when some segment kept the fp32 chain.  Returns the plan."""
-    g, x = build_fuzz_graph(seed, scale_family=family)
+    g, x = builder(seed, scale_family=family)
     gc = transforms.cleanup(g)
     ref = np.asarray(execute(gc, {"x": x})[gc.output_names[0]])
     plan = compile_graph(g)
@@ -276,6 +361,75 @@ def test_fuzz_dyadic_corpus_exercises_integer_path():
             full += bool(paths) and all(p == "int32" for p in paths)
     assert kernel >= 10, (full, kernel)
     assert full >= 5, (full, kernel)
+
+
+@pytest.mark.parametrize("seed", BOUNDARY_SEEDS)
+def test_fuzz_boundary_chains(seed):
+    """Residual Add / pooling / Concat chains between quantized layers —
+    the cross-segment fusion corpus.  Three assertions, strongest first:
+
+    * fusion must be a **bitwise no-op** on the compiled tier: the plan
+      with carriers/fused boundaries equals the ``use_fusion=False`` plan
+      exactly, for every seed and scale family — every codec and fused
+      realization is bit-same by construction;
+    * plans fully on the int32 requant path are **bit-exact vs the
+      oracle** (the dyadic exactness proof, now across fused boundaries);
+    * fp32-path plans get the float envelope vs the oracle, tolerating
+      the (pre-existing, fusion-independent) one-code-step flips that
+      directional rounding modes admit when a value lands on a rounding
+      cliff — e.g. a Relu-zero under ``DOWN`` — and the two conv
+      implementations accumulate in different orders.
+    """
+    family = ("float", "pow2", "dyadic")[seed % 3]
+    g, x = build_boundary_graph(seed, scale_family=family)
+    gc = transforms.cleanup(g)
+    ref = np.asarray(execute(gc, {"x": x})[gc.output_names[0]])
+    plan = compile_graph(g)
+    out = np.asarray(plan({"x": x})[plan.graph.output_names[0]])
+    off = compile_graph(g, use_fusion=False)
+    out_off = np.asarray(off({"x": x})[off.graph.output_names[0]])
+    np.testing.assert_array_equal(
+        out, out_off,
+        err_msg=f"fusion changed the compiled tier's values on {g.name}\n"
+                f"{plan.describe()}")
+    paths = _requant_paths(plan)
+    if paths and all(p == "int32" for p in paths):
+        np.testing.assert_array_equal(
+            ref, out,
+            err_msg=f"all-integer-path plan must be bit-exact on {g.name}\n"
+                    f"{plan.describe()}")
+    else:
+        close = np.isclose(ref, out, atol=2e-4, rtol=2e-4)
+        frac = 1.0 - close.mean()
+        assert frac <= 0.05, \
+            (f"{frac:.1%} of outputs beyond the float envelope on "
+             f"{g.name}\n{plan.describe()}")
+
+
+def test_fuzz_boundary_corpus_exercises_fused_boundaries():
+    """Coverage sanity for the boundary corpus: every fused boundary kind
+    (residual add, pool, concat) must occur, some boundaries must actually
+    carry integer codes, and several plans must reach the bit-exact branch
+    of ``_check_family_parity`` — otherwise the fusion differential would
+    pass vacuously."""
+    kinds: dict[str, int] = {}
+    int_boundaries = 0
+    exact_plans = 0
+    for seed in BOUNDARY_SEEDS:
+        family = ("float", "pow2", "dyadic")[seed % 3]
+        g, _ = build_boundary_graph(seed, scale_family=family)
+        plan = compile_graph(g)
+        int_boundaries += plan.fusion_stats()["integer_boundaries"]
+        for s in plan.segments:
+            if s.meta.get("fused_boundary"):
+                kinds[s.kind] = kinds.get(s.kind, 0) + 1
+        paths = _requant_paths(plan)
+        exact_plans += bool(paths) and all(p == "int32" for p in paths)
+    assert kinds.get("eltwise_add", 0) > 0, kinds
+    assert kinds.get("quant_pool", 0) > 0, kinds
+    assert kinds.get("quant_concat", 0) > 0, kinds
+    assert int_boundaries > 0, (kinds, int_boundaries)
+    assert exact_plans >= 3, (kinds, exact_plans)
 
 
 @pytest.mark.parametrize("seed", NEAR_SEEDS)

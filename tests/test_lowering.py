@@ -48,7 +48,10 @@ def test_rules_for_filters_by_anchor_op():
         ["quant_grouped_conv", "quant_conv"]
     assert "quant_matmul" in [r.name for r in rules_for("MatMul")]
     assert "quant_matmul" in [r.name for r in rules_for("Gemm")]
-    assert rules_for("MaxPool") == []
+    # the fusion pass gave pooling its own lowering rule
+    assert [r.name for r in rules_for("MaxPool")] == ["quant_pool"]
+    assert [r.name for r in rules_for("AveragePool")] == ["quant_pool"]
+    assert rules_for("Sigmoid") == []
 
 
 def test_duplicate_registration_raises():
