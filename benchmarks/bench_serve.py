@@ -158,6 +158,87 @@ def bench_scheduler(name: str, n_requests: int = 64, max_batch: int = 8,
     }
 
 
+def bench_dist(name: str = "TFC-w1a1", n_requests: int = 64) -> dict:
+    """Distributed-serving census + gate (``--check-dist``).
+
+    Builds one single-device engine per local device behind a
+    ``SplitMergeFront`` and checks, on a real request wave:
+
+      * every device's worker receives dispatches (the wave actually
+        shards across all N devices);
+      * the merge is deterministic and submission-ordered: two runs are
+        bit-identical to each other and to a single-engine oracle
+        (TFC-w1a1's requant pipeline is fully integer, so ``==`` holds);
+      * one injected mid-shard worker fault loses zero requests — the
+        dead worker's shard is re-dispatched and the wave still matches
+        the oracle bit-for-bit;
+      * a mesh-sharded ``CompiledPlan`` (``mesh="auto"``) spans all
+        devices and stays bit-identical to the single-device plan.
+    """
+    import jax
+
+    from repro import obs
+    from repro.core.compile import compile_graph
+    from repro.serve import CompiledGraphEngine, SplitMergeFront, \
+        device_workers
+
+    n_devices = jax.device_count()
+    reg = obs.MetricsRegistry()
+    workers = device_workers(zoo.ZOO[name], metrics_registry=reg,
+                             report_cost=False, max_batch=8)
+    oracle_eng = CompiledGraphEngine(zoo.ZOO[name](), report_cost=False,
+                                     max_batch=8)
+    rng = np.random.RandomState(0)
+    xs = [rng.randn(*oracle_eng.sample_shape).astype(np.float32)
+          for _ in range(n_requests)]
+    oracle = oracle_eng(np.stack(xs))
+
+    with SplitMergeFront(workers, metrics_registry=reg) as front:
+        t0 = time.perf_counter()
+        out1 = front(xs)
+        dt = time.perf_counter() - t0
+        out2 = front(xs)                         # re-run: determinism
+        disp = {s["labels"]["worker"]: s["value"]
+                for s in reg.snapshot()
+                ["splitmerge_dispatch_total"]["series"]}
+        all_devices_used = (len(disp) == n_devices and
+                            all(v >= 1 for v in disp.values()))
+        deterministic = (np.array_equal(out1, out2) and
+                         np.array_equal(out1, oracle))
+        workers[-1].inject_fault()               # chaos: one worker dies
+        out3 = front(xs)
+        stats = front.stats()
+    fault_ok = (np.array_equal(out3, oracle) and
+                stats["redispatched_shards"] >= 1 and
+                len(stats["failed"]) == 1)
+
+    mesh_plan = compile_graph(zoo.ZOO[name](), mesh="auto")
+    base = oracle_eng.plan
+    x = {mesh_plan.graph.input_names[0]:
+         rng.randn(n_requests,
+                   *oracle_eng.sample_shape).astype(np.float32)}
+    mesh_identical = all(
+        np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(base(dict(x)).values(), mesh_plan(x).values()))
+    return {
+        "model": name, "n_requests": n_requests, "devices": n_devices,
+        "workers": len(workers),
+        "throughput_rps": round(n_requests / dt, 1),
+        "dispatch_per_worker": {k: int(v) for k, v in sorted(disp.items())},
+        "all_devices_used": all_devices_used,
+        "merge_deterministic": deterministic,
+        "fault_injected_workers": 1,
+        "fault_lost_requests": int(np.sum(
+            ~np.all(out3 == oracle, axis=-1))),
+        "fault_redispatched_shards": stats["redispatched_shards"],
+        "fault_zero_loss": fault_ok,
+        "mesh_plan_devices": mesh_plan.n_devices,
+        "mesh_bit_identical": mesh_identical,
+        "ok": (all_devices_used and deterministic and fault_ok and
+               mesh_identical and mesh_plan.n_devices == n_devices),
+    }
+
+
 def run_detailed(cases=None, *, repeats: int = 15, sched_requests: int = 64
                  ) -> tuple[list[str], dict]:
     rows, records = [], {}
@@ -204,6 +285,7 @@ def main(argv=None) -> int:
     """
     import argparse
     import json
+    import os
 
     ap = argparse.ArgumentParser(description=main.__doc__)
     ap.add_argument("--quick", action="store_true",
@@ -211,6 +293,18 @@ def main(argv=None) -> int:
     ap.add_argument("--check", action="store_true",
                     help="fail unless pipelined throughput >= the sync "
                          "baseline (5%% headroom for runner noise)")
+    ap.add_argument("--devices", type=int, default=None, metavar="N",
+                    help="force N virtual host devices (sets XLA_FLAGS "
+                         "before the backend initialises; CPU testing)")
+    ap.add_argument("--check-dist", action="store_true",
+                    help="distributed gate: the request wave must shard "
+                         "across every device, merge deterministically, "
+                         "and lose zero requests under one injected "
+                         "worker fault")
+    ap.add_argument("--dist-only", action="store_true",
+                    help="run only the distributed census (implies "
+                         "--check-dist); with --json, merges the census "
+                         "into an existing records file")
     ap.add_argument("--json", metavar="PATH",
                     help="write machine-readable records to PATH")
     ap.add_argument("--metrics-snapshot", metavar="PATH",
@@ -218,8 +312,26 @@ def main(argv=None) -> int:
                          "snapshot (JSON) to PATH")
     args = ap.parse_args(argv)
 
-    rows, records = run_detailed(repeats=10 if args.quick else 15,
-                                 sched_requests=32 if args.quick else 64)
+    if args.devices:
+        # must land in XLA_FLAGS before the first backend query (imports
+        # above only load modules; the backend initialises lazily)
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "--xla_force_host_platform_device_count" not in flags:
+            os.environ["XLA_FLAGS"] = (
+                f"{flags} --xla_force_host_platform_device_count="
+                f"{args.devices}").strip()
+        import jax
+        if jax.device_count() < args.devices:
+            print(f"check_dist,0,requested --devices {args.devices} but "
+                  f"only {jax.device_count()} present (backend already "
+                  f"initialised?);FAIL")
+            return 1
+
+    if args.dist_only:
+        rows, records = [], {}
+    else:
+        rows, records = run_detailed(repeats=10 if args.quick else 15,
+                                     sched_requests=32 if args.quick else 64)
     for row in rows:
         print(row)
 
@@ -240,9 +352,32 @@ def main(argv=None) -> int:
                   f"(gate: <=3%);{verdict}")
             ok = ok and o["ok"]
 
+    census = None
+    if args.check_dist or args.dist_only:
+        census = bench_dist(n_requests=32 if args.quick else 64)
+        print(f"serve/dist_splitmerge_{census['model']},"
+              f"{census['throughput_rps']},"
+              f"devices={census['devices']};"
+              f"dispatch={census['dispatch_per_worker']}")
+        verdict = "OK" if census["ok"] else "FAIL"
+        print(f"check_dist/{census['model']},{census['devices']},"
+              f"all_devices={census['all_devices_used']};"
+              f"deterministic={census['merge_deterministic']};"
+              f"lost_under_fault={census['fault_lost_requests']};"
+              f"mesh_identical={census['mesh_bit_identical']} "
+              f"(gate: all devices used, deterministic merge, zero lost "
+              f"requests, bit-identical mesh plan);{verdict}")
+        ok = ok and census["ok"]
+
     if args.json:
+        payload = {"models": records}
+        if args.dist_only and os.path.exists(args.json):
+            with open(args.json) as f:       # merge census into prior run
+                payload = json.load(f)
+        if census is not None:
+            payload["dist"] = census
         with open(args.json, "w") as f:
-            json.dump({"models": records}, f, indent=2, sort_keys=True)
+            json.dump(payload, f, indent=2, sort_keys=True)
         print(f"# wrote {args.json}")
     if args.metrics_snapshot:
         from repro.obs import default_registry

@@ -72,7 +72,23 @@ _STATIC_OPERANDS = {"Reshape": (1,), "Pad": (1, 2), "Squeeze": (1,),
 
 @dataclass
 class CompiledPlan:
-    """A partitioned, jit-compiled QonnxGraph execution plan."""
+    """A partitioned, jit-compiled QonnxGraph execution plan.
+
+    **Device placement** (both optional, mutually exclusive):
+
+    * ``mesh`` — a JAX mesh: the plan becomes an SPMD program via
+      ``shard_map`` over the mesh's data axes.  Weights (the consts pytree)
+      are replicated across the mesh once at build; each call shards the
+      slot batch's leading dim data-parallel (``dist.sharding.batch_pspecs``
+      / ``to_shardings``), zero-padding non-divisible batches and slicing
+      the pad back off the outputs.  Per-sample compute is untouched, so a
+      sharded plan is bit-identical to the single-device plan.  A mesh
+      whose data degree is 1 (e.g. ``dist.fault.elastic_mesh()`` on a
+      1-device host) degenerates to the plain single-device jit path.
+    * ``device`` — a single ``jax.Device``: consts and every call's inputs
+      are pinned there (the per-device-worker mode ``serve.splitmerge``
+      uses to spread engines over local devices).
+    """
     graph: QonnxGraph
     segments: list[Segment]
     consts: dict
@@ -80,6 +96,8 @@ class CompiledPlan:
     tune_mode: str = "off"                 # "off" | "cached" | "search"
     tune_stats: dict = field(default_factory=dict)   # Autotuner.stats copy
     fusion: Optional[object] = None        # lowering.FusionPlan (carriers)
+    mesh: Optional[object] = None          # jax Mesh — SPMD data parallelism
+    device: Optional[object] = None        # jax Device — single-device pin
     _jitted: Callable = field(default=None, repr=False)
 
     def __post_init__(self):
@@ -107,6 +125,87 @@ class CompiledPlan:
         self._plan = plan
         self._jitted = jax.jit(plan)
         self._jitted_donated = None        # built lazily on first donate call
+        self._init_placement(plan, output_names)
+
+    def _init_placement(self, plan, output_names) -> None:
+        """Stage the mesh-SPMD / pinned-device execution paths (if any)."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        if self.mesh is not None and self.device is not None:
+            raise ValueError("pass at most one of mesh= / device=")
+        self._jitted_spmd = None
+        self._data_size = 1
+        if self.mesh is None:
+            if self.device is not None:
+                self.consts = jax.device_put(self.consts, self.device)
+            return
+        from repro.dist import sharding as dsh
+        axes = dsh._data_axes(self.mesh)
+        self._data_size = dsh.data_axis_size(self.mesh)
+        # weights replicated across the whole mesh once at build — per-call
+        # dispatch never re-transfers them (per-group weight sharding for
+        # grouped conv is a later extension; see ROADMAP)
+        self.consts = jax.device_put(
+            self.consts, NamedSharding(self.mesh, P()))
+        if self._data_size <= 1:
+            return                      # degenerate 1-device mesh: plain jit
+        const_outputs = [n for n in output_names if n in self.consts]
+        if const_outputs:
+            # a fully-folded (constant) graph output is replicated inside
+            # the body; sharding it along the batch dim would be wrong
+            import logging
+            logging.getLogger("repro.compile").warning(
+                "plan %s has constant graph outputs %s; mesh sharding "
+                "disabled, running single-device", self.graph.name,
+                const_outputs)
+            return
+        from jax.experimental.shard_map import shard_map
+        self._batch_spec = P(axes if len(axes) > 1 else axes[0])
+        # shard_map (not GSPMD auto-partitioning): each device traces the
+        # plan body on its *local* batch shard with concrete local shapes,
+        # so the Pallas kernel calls inside segments stay single-device
+        # programs — no reliance on the SPMD partitioner understanding a
+        # custom call.  Data-parallel with replicated weights needs no
+        # cross-device collectives in the body (check_rep is off because
+        # the body closes over per-segment kernel partials).
+        spmd = shard_map(plan, mesh=self.mesh,
+                         in_specs=(P(), self._batch_spec),
+                         out_specs=self._batch_spec, check_rep=False)
+        self._jitted_spmd = jax.jit(spmd)
+
+    @property
+    def n_devices(self) -> int:
+        """Devices a plan call actually spans (1 unless mesh-sharded)."""
+        return self._data_size if self._jitted_spmd is not None else 1
+
+    def placement(self) -> dict:
+        """Telemetry: how the plan is placed on the host's devices."""
+        if self._jitted_spmd is not None:
+            return {"kind": "mesh", "devices": self._data_size,
+                    "mesh": dict(self.mesh.shape)}
+        if self.device is not None:
+            return {"kind": "device", "devices": 1,
+                    "device": str(self.device)}
+        return {"kind": "host", "devices": 1}
+
+    def _call_sharded(self, inputs: dict) -> dict:
+        """Mesh path: pad the batch to a shardable multiple, place shards
+        via the dist-tier sharding rules, run SPMD, slice the pad off."""
+        from repro.dist import sharding as dsh
+        batch = int(inputs[self.graph.input_names[0]].shape[0])
+        pad = (-batch) % self._data_size
+        if pad:
+            inputs = {k: jnp.concatenate(
+                [v, jnp.zeros((pad,) + v.shape[1:], v.dtype)])
+                for k, v in inputs.items()}
+        inputs = jax.device_put(
+            inputs, dsh.to_shardings(dsh.batch_pspecs(inputs, self.mesh),
+                                     self.mesh))
+        out = self._jitted_spmd(self.consts, inputs)
+        if pad:
+            out = {k: v[:batch]
+                   if getattr(v, "ndim", 0) and v.shape[0] == batch + pad
+                   else v for k, v in out.items()}
+        return out
 
     @property
     def trace_count(self) -> int:
@@ -130,7 +229,9 @@ class CompiledPlan:
         ``donate=True`` hands the ``inputs`` buffers to XLA for reuse
         (consts are never donated).  Only honored on accelerator backends —
         CPU has no donation support, so the flag is ignored there — and the
-        caller must not touch the donated buffers afterwards.
+        caller must not touch the donated buffers afterwards.  A
+        mesh-sharded plan ignores donation too: the padded/resharded batch
+        is a fresh buffer already.
         """
         inputs = {k: jnp.asarray(v) for k, v in inputs.items()}
         for t in self.graph.inputs:
@@ -138,6 +239,10 @@ class CompiledPlan:
                 raise ValueError(f"missing graph input {t.name!r}")
         if not jit:
             return self._plan(self.consts, inputs)
+        if self._jitted_spmd is not None:
+            return self._call_sharded(inputs)
+        if self.device is not None:
+            inputs = jax.device_put(inputs, self.device)
         if donate and jax.default_backend() in ("gpu", "tpu"):
             if self._jitted_donated is None:
                 self._jitted_donated = jax.jit(self._plan, donate_argnums=(1,))
@@ -324,7 +429,8 @@ def compile_graph(graph: QonnxGraph, *, run_cleanup: bool = True,
                   use_integer_requant: bool = True, tune: str = "off",
                   tune_cache_dir: Optional[str] = None,
                   tune_repeats: int = 3,
-                  use_fusion: bool = True) -> CompiledPlan:
+                  use_fusion: bool = True,
+                  mesh=None, device=None) -> CompiledPlan:
     """Partition ``graph`` into fused segments and emit one jitted plan.
 
     run_cleanup  — run the declarative "compile_prep" pipeline first
@@ -358,6 +464,14 @@ def compile_graph(graph: QonnxGraph, *, run_cleanup: bool = True,
                    segments and negotiate integer (int8 / packed-int4)
                    inter-segment carriers; False restores the pre-fusion
                    fp32-boundary plans (the regression baseline)
+    mesh         — device placement: a JAX mesh (the plan runs SPMD
+                   data-parallel over the mesh's data axes, weights
+                   replicated — see ``CompiledPlan``), or ``"auto"`` for
+                   ``dist.fault.elastic_mesh(prefer_model=1)`` (all local
+                   devices data-parallel; degenerates to the single-device
+                   path on a 1-device host)
+    device       — pin the whole plan (consts + inputs) to one jax.Device
+                   (per-device-worker serving); exclusive with ``mesh``
 
     Every compile records wall time and plan-shape gauges (segment counts
     per fused kind, fused-node count, integer-requant coverage, tune-cache
@@ -367,6 +481,11 @@ def compile_graph(graph: QonnxGraph, *, run_cleanup: bool = True,
     t_compile0 = time.perf_counter()
     from repro.kernels._blocks import resolve_interpret
     interpret = resolve_interpret(interpret)
+    if isinstance(mesh, str):
+        if mesh != "auto":
+            raise ValueError(f"mesh must be a Mesh, 'auto' or None: {mesh!r}")
+        from repro.dist.fault import elastic_mesh
+        mesh = elastic_mesh(prefer_model=1)   # pure data-parallel serving
     if run_cleanup:
         from . import passes
         graph = passes.run_pipeline(graph, "compile_prep")
@@ -497,7 +616,7 @@ def compile_graph(graph: QonnxGraph, *, run_cleanup: bool = True,
     plan = CompiledPlan(g, segments, consts, analysis=ga,
                         tune_mode=tune if tuner is not None else "off",
                         tune_stats=dict(tuner.stats) if tuner is not None
-                        else {}, fusion=fusion_plan)
+                        else {}, fusion=fusion_plan, mesh=mesh, device=device)
     _record_compile_metrics(plan, time.perf_counter() - t_compile0)
     return plan
 
@@ -518,6 +637,9 @@ def _record_compile_metrics(plan: CompiledPlan, wall_s: float) -> None:
     reg.gauge("compile_fused_nodes",
               help="graph nodes absorbed into kernel segments",
               labels=model).set(plan.n_fused_nodes)
+    reg.gauge("compile_plan_devices",
+              help="devices a plan call spans (data-parallel degree; 1 "
+                   "unless mesh-sharded)", labels=model).set(plan.n_devices)
     rq = plan.requant_stats()
     reg.gauge("compile_integer_requant_coverage",
               help="fraction of kernel segments on the integer-epilogue "

@@ -8,6 +8,7 @@ from . import collectives, fault, sharding  # noqa: F401
 from .sharding import (  # noqa: F401
     batch_pspecs,
     cache_pspecs,
+    data_axis_size,
     param_pspecs,
     to_shardings,
 )

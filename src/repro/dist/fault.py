@@ -6,7 +6,9 @@ under a cluster process launcher after ``jax.distributed.initialize()``.
 """
 from __future__ import annotations
 
+import contextlib
 import logging
+import random
 import statistics
 import time
 from collections import deque
@@ -23,6 +25,13 @@ class Watchdog:
     ``floor_s`` guards the cold regime: until steps take at least that long,
     nothing is flagged (sub-millisecond smoke steps jitter by integer
     factors without being stragglers).
+
+    ``step_end`` without a matching ``step_start`` is a no-op returning
+    False (never a crash, never a bogus sample), and ``cancel()`` discards
+    an in-flight measurement — call it when a step dies mid-flight so the
+    exception-handling time can't pollute the rolling median.  The
+    ``step(i)`` context manager wires both up: it cancels on exception and
+    records on clean exit.
     """
 
     def __init__(self, threshold: float = 1.5, window: int = 16,
@@ -37,8 +46,28 @@ class Watchdog:
     def step_start(self) -> None:
         self._t0 = time.monotonic()
 
+    def cancel(self) -> None:
+        """Discard the in-flight measurement (step died mid-flight)."""
+        self._t0 = None
+
+    @contextlib.contextmanager
+    def step(self, step: int):
+        """``with wd.step(i): ...`` — start/end with exception-safe cancel."""
+        self.step_start()
+        try:
+            yield self
+        except BaseException:
+            self.cancel()
+            raise
+        self.step_end(step)
+
     def step_end(self, step: int) -> bool:
-        """Record the step duration; True if the step was a straggler."""
+        """Record the step duration; True if the step was a straggler.
+
+        A missed ``step_start`` (e.g. an exception tore down the previous
+        step and the caller's recovery path skipped straight to
+        ``step_end``) is tolerated: nothing is recorded, False returned.
+        """
         if self._t0 is None:
             return False
         dt = time.monotonic() - self._t0
@@ -57,11 +86,30 @@ class Watchdog:
 
 @dataclass
 class RestartPolicy:
+    """Bounded-restart policy with capped exponential backoff.
+
+    The delay before attempt *k* is ``min(backoff_s * backoff_mult**(k-1),
+    max_backoff_s)``, optionally stretched by up to ``jitter`` (a fraction:
+    0.25 means "up to 25% longer") so a fleet of restarting workers doesn't
+    thunder back in lock-step.  Without the cap the old behaviour grew the
+    delay unboundedly (``backoff *= mult`` forever) — a worker on its 30th
+    restart would sleep for days.
+    """
     max_restarts: int = 3
     backoff_s: float = 1.0
     backoff_mult: float = 2.0
+    max_backoff_s: float = 60.0
+    jitter: float = 0.0            # fraction of the delay added uniformly
     restartable: tuple = (RuntimeError, OSError)
     history: list[str] = field(default_factory=list)
+
+    def delay_s(self, attempt: int) -> float:
+        """Sleep before retrying after failed ``attempt`` (0-based)."""
+        d = min(self.backoff_s * self.backoff_mult ** attempt,
+                self.max_backoff_s)
+        if self.jitter > 0:
+            d *= 1.0 + random.uniform(0.0, self.jitter)
+        return max(0.0, d)
 
 
 def run_with_restarts(make_state, run, policy: RestartPolicy):
@@ -71,7 +119,6 @@ def run_with_restarts(make_state, run, policy: RestartPolicy):
     ``make_state``) on every attempt — the crash-only design: no attempt to
     patch up a half-dead attempt's state.
     """
-    backoff = policy.backoff_s
     for attempt in range(policy.max_restarts + 1):
         try:
             return run(make_state())
@@ -81,11 +128,11 @@ def run_with_restarts(make_state, run, policy: RestartPolicy):
                 log.error("restart budget exhausted after %d attempts",
                           attempt + 1)
                 raise
+            delay = policy.delay_s(attempt)
             log.warning("attempt %d failed (%r); restarting in %.1fs",
-                        attempt, e, backoff)
-            if backoff > 0:
-                time.sleep(backoff)
-            backoff *= policy.backoff_mult
+                        attempt, e, delay)
+            if delay > 0:
+                time.sleep(delay)
 
 
 def elastic_mesh(prefer_model: int = 16):

@@ -2,7 +2,8 @@
 
 The rules are *total*: every leaf of every architecture's pytree gets a
 full-rank PartitionSpec (``None`` entries for replicated dims).  Placement is
-decided from the leaf's *name* (the last key on its tree path) plus its rank:
+decided from the leaf's *name* (the nearest named key on its tree path —
+positional list/tuple indices defer to their named ancestor) plus its rank:
 
   * ``embed``                      — vocab-parallel (dim 0 over "model")
   * ``lm_head``                    — col-parallel on the vocab dim
@@ -34,12 +35,26 @@ _FSDP_MIN_SIZE = 1 << 16
 
 
 def _leaf_name(path) -> str:
-    """Last dict key / attr name on a tree path ('' for positional keys)."""
+    """Nearest *named* key on a tree path, walking leaf-ward entries first.
+
+    Positional entries — ``SequenceKey`` (list/tuple index, only ``.idx``)
+    and integer-keyed entries like ``FlattenedIndexKey`` — carry no name,
+    so they fall through to the nearest named ancestor: a leaf at
+    ``params["w_stack"][3]`` is named ``"w_stack"`` and still matches the
+    weight-matrix rules.  Previously such leaves resolved to ``''`` (or a
+    bare index string), silently replicating list-of-layers params the
+    rules should have sharded.  Returns ``''`` only when no entry on the
+    whole path is named.
+    """
     for entry in reversed(path):
-        if hasattr(entry, "key"):
-            return str(entry.key)
-        if hasattr(entry, "name"):
-            return str(entry.name)
+        key = getattr(entry, "key", None)
+        if key is not None and not isinstance(key, int):
+            return str(key)
+        name = getattr(entry, "name", None)
+        if name is not None:
+            return str(name)
+        # SequenceKey / int-keyed FlattenedIndexKey: positional — keep
+        # walking toward the root for a named ancestor
     return ""
 
 
@@ -163,6 +178,18 @@ def cache_pspecs(cache, mesh, *, tp_last_dim: bool = False):
         return P(*spec)
 
     return jax.tree.map(rule, cache)
+
+
+def data_axis_size(mesh) -> int:
+    """Total data-parallel degree: product of the non-"model" axis sizes.
+
+    This is how many ways ``batch_pspecs`` splits the leading batch dim —
+    the compiled tier uses it to pad slot batches to a shardable multiple
+    and to report how many devices a plan spans."""
+    size = 1
+    for a in _data_axes(mesh):
+        size *= _axis_size(mesh, a)
+    return size
 
 
 def to_shardings(pspecs, mesh):

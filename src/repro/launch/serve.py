@@ -10,6 +10,18 @@ future lifecycle over the pipelined engine, p50/p99 report at the end):
   python -m repro.launch.serve --graph TFC-w2a2 --requests 64
   python -m repro.launch.serve --graph TFC-w2a2 --requests 64 --no-pipeline
 
+Distributed serving (compiled-graph path):
+
+  --devices N           force N virtual host devices (XLA_FLAGS; must be
+                        set before the backend initialises — the flag does
+                        this for you)
+  --mesh                compile the served plan data-parallel over an
+                        elastic_mesh() of all local devices
+  --splitmerge          shard each request wave across one single-device
+                        engine per local device (SplitMergeFront):
+                        deterministic merge order, failed workers
+                        re-dispatched
+
 Observability (compiled-graph path):
 
   --metrics-port 9100   serve the process-wide metrics registry over HTTP
@@ -22,6 +34,7 @@ from __future__ import annotations
 
 import argparse
 import logging
+import os
 import time
 
 import jax
@@ -50,14 +63,46 @@ def serve_graph(args) -> None:
         tracer = obs.Tracer(sink)
         log.info("tracing spans to %s", args.trace_jsonl)
 
+    if args.splitmerge:
+        from repro.serve import SplitMergeFront, device_workers
+        workers = device_workers(zoo.ZOO[args.graph],
+                                 metrics_registry=obs.default_registry(),
+                                 max_batch=args.max_batch,
+                                 pipeline=not args.no_pipeline,
+                                 report_cost=False, tune=args.tune,
+                                 tune_cache_dir=args.tune_cache_dir)
+        front = SplitMergeFront(workers,
+                                metrics_registry=obs.default_registry())
+        rng = np.random.default_rng(0)
+        eng0 = workers[0].engine
+        xs = [rng.standard_normal(eng0.sample_shape, dtype=np.float32)
+              for _ in range(args.requests)]
+        front(xs[:len(workers)])               # warm every worker's plan
+        t0 = time.monotonic()
+        wave = front.submit_wave(xs, deadline_ms=args.deadline_ms)
+        wave.wait(timeout=300)
+        dt = time.monotonic() - t0
+        log.info("splitmerge %s: %d requests over %d workers in %.2fs "
+                 "(%.1f req/s), %s",
+                 args.graph, len(xs), len(workers), dt, len(xs) / dt,
+                 front.stats())
+        front.close()
+        if sink is not None:
+            sink.close()
+        return
+
     # engines share the process-wide registry (distinct model labels), so
     # the HTTP endpoint exports the whole fleet from one snapshot
     registry = EngineRegistry(max_batch=args.max_batch,
                               pipeline=not args.no_pipeline,
                               metrics_registry=obs.default_registry(),
                               tracer=tracer, tune=args.tune,
-                              tune_cache_dir=args.tune_cache_dir)
+                              tune_cache_dir=args.tune_cache_dir,
+                              mesh="auto" if args.mesh else None)
     eng = registry.register(args.graph, zoo.ZOO[args.graph]())
+    if args.mesh:
+        log.info("mesh-sharded plan spans %d device(s)",
+                 eng.plan.n_devices)
     rng = np.random.default_rng(0)
     xs = [rng.standard_normal(eng.sample_shape, dtype=np.float32)
           for _ in range(args.requests)]
@@ -66,12 +111,12 @@ def serve_graph(args) -> None:
     with ServeScheduler(eng, window_ms=args.window_ms,
                         max_queue=max(args.max_batch * 4,
                                       args.requests)) as sched:
-        t0 = time.time()
+        t0 = time.monotonic()       # interval math never uses wall clock
         reqs = [sched.submit(x, deadline_ms=args.deadline_ms)
                 for x in xs]
         for r in reqs:
             r.wait(timeout=300)
-        dt = time.time() - t0
+        dt = time.monotonic() - t0
     stats = sched.stats()
     log.info(
         "graph %s (%s): %d requests in %.2fs (%.1f req/s), "
@@ -109,13 +154,13 @@ def serve_lm(args) -> None:
         params = api.init_params(jax.random.PRNGKey(0), cfg)
         eng = GenerationEngine(params, cfg, max_batch=4)
         rng = np.random.default_rng(0)
-        t0 = time.time()
+        t0 = time.monotonic()
         reqs = [eng.submit(rng.integers(1, cfg.vocab,
                                         size=rng.integers(4, 12)),
                            args.max_new_tokens)
                 for _ in range(args.requests)]
         eng.run_pending()
-        dt = time.time() - t0
+        dt = time.monotonic() - t0
         n_tok = sum(r.result.shape[0] for r in reqs)
         log.info("%d requests, %d tokens in %.2fs (%.1f tok/s)",
                  len(reqs), n_tok, dt, n_tok / dt)
@@ -140,6 +185,16 @@ def main():
                     help="per-request deadline passed to submit()")
     ap.add_argument("--no-pipeline", action="store_true",
                     help="per-chunk-sync dispatch (the benchmark baseline)")
+    # distributed serving
+    ap.add_argument("--devices", type=int, default=None, metavar="N",
+                    help="force N virtual host devices (CPU testing; sets "
+                         "XLA_FLAGS before the backend initialises)")
+    ap.add_argument("--mesh", action="store_true",
+                    help="compile the served plan data-parallel over an "
+                         "elastic mesh of all local devices")
+    ap.add_argument("--splitmerge", action="store_true",
+                    help="shard request waves across one engine per local "
+                         "device (SplitMergeFront)")
     ap.add_argument("--tune", choices=("off", "cached", "search"),
                     default="cached",
                     help="per-segment kernel tilings: 'cached' reads the "
@@ -161,6 +216,19 @@ def main():
                          "the run until Ctrl-C (for scraping)")
     args = ap.parse_args()
     logging.basicConfig(level=logging.INFO)
+
+    if args.devices:
+        # must land in XLA_FLAGS before the first backend query; jax was
+        # only *imported* so far, which does not initialise the backend
+        flags = os.environ.get("XLA_FLAGS", "")
+        os.environ["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count="
+            f"{args.devices}").strip()
+        if jax.device_count() < args.devices:
+            raise SystemExit(
+                f"requested --devices {args.devices} but only "
+                f"{jax.device_count()} present (backend already "
+                f"initialised?)")
 
     if args.graph:
         serve_graph(args)

@@ -94,10 +94,10 @@ def main():
         with mesh:
             start = int(state["step"])
             for i in range(start, args.steps):
-                wd.step_start()
-                batch = jax.tree.map(jnp.asarray, stream.next())
-                state, m = step_fn(state, batch)
-                wd.step_end(i)
+                # exception-safe: a crashed step is cancelled, not recorded
+                with wd.step(i):
+                    batch = jax.tree.map(jnp.asarray, stream.next())
+                    state, m = step_fn(state, batch)
                 if (i + 1) % 10 == 0:
                     log.info("step %d loss=%.4f gnorm=%.2f", i + 1,
                              float(m["loss"]), float(m["grad_norm"]))

@@ -96,8 +96,9 @@ class Tracer:
     ``tracer.enabled`` (or hold ``tracer=None``) before touching the span
     API, which is what keeps disabled tracing allocation-free.
     ``clock`` defaults to ``time.monotonic``; the serving engine emits
-    retro spans with explicit wall-clock timestamps instead (all of a
-    request's spans then share one clock).
+    retro spans with explicit ``time.monotonic()`` timestamps (all of a
+    request's spans then share the live-span clock, and a wall-clock step
+    can never produce a negative span duration).
     """
 
     def __init__(self, sink: Optional[Callable[[dict], None]] = None,

@@ -8,6 +8,9 @@
                     queue backpressure and deadline-aware flush windows
 * ``registry``    — ``EngineRegistry``: multi-model routing + atomic
                     hot-swap reloads
+* ``splitmerge``  — ``SplitMergeFront``: shard request waves across
+                    per-device workers, deterministic submission-order
+                    merge, failed shards re-dispatched (zero lost requests)
 """
 from .engine import CompiledGraphEngine, GraphRequest  # noqa: F401
 from .generation import (  # noqa: F401
@@ -17,6 +20,13 @@ from .generation import (  # noqa: F401
 )
 from .registry import EngineRegistry  # noqa: F401
 from .scheduler import QueueFull, ServeScheduler  # noqa: F401
+from .splitmerge import (  # noqa: F401
+    SplitMergeFront,
+    Wave,
+    Worker,
+    WorkerFailed,
+    device_workers,
+)
 
 __all__ = [
     "CompiledGraphEngine",
@@ -26,5 +36,10 @@ __all__ = [
     "QueueFull",
     "Request",
     "ServeScheduler",
+    "SplitMergeFront",
+    "Wave",
+    "Worker",
+    "WorkerFailed",
+    "device_workers",
     "greedy_generate",
 ]

@@ -63,10 +63,17 @@ class GraphRequest:
     fires the completion event.  ``wait()`` blocks for the result
     (re-raising a flush-side error); ``latency_ms`` / ``queued_ms`` are the
     per-request telemetry the engine aggregates into p50/p99 at flush.
+
+    **Clocks:** every interval/deadline timestamp (``submitted``,
+    ``started``, ``completed``, ``deadline``) is ``time.monotonic()`` — an
+    NTP step must never fire every deadline at once or make a latency
+    negative.  ``submitted_at`` is the one wall-clock stamp, kept purely
+    for human-readable logs/exports; no arithmetic ever touches it.
     """
     x: jnp.ndarray                       # one sample, graph input minus batch
-    submitted: float = field(default_factory=time.time)
-    deadline: Optional[float] = None     # absolute time the result is due
+    submitted: float = field(default_factory=time.monotonic)
+    submitted_at: float = field(default_factory=time.time)  # wall, logs only
+    deadline: Optional[float] = None     # absolute monotonic time it's due
     started: Optional[float] = None      # when the slot was dispatched
     completed: Optional[float] = None
     result: Optional[np.ndarray] = None
@@ -105,7 +112,7 @@ class GraphRequest:
         return (self.started - self.submitted) * 1e3
 
     def _finish(self, result=None, error: Optional[BaseException] = None):
-        self.completed = time.time()
+        self.completed = time.monotonic()
         self.result = result
         self.error = error
         self.x = None          # drop the input: a held future must not pin
@@ -130,7 +137,8 @@ class CompiledGraphEngine:
                  metrics_registry: Optional[MetricsRegistry] = None,
                  metrics_labels: Optional[dict] = None,
                  tracer=None, observability: bool = True,
-                 tune: str = "off", tune_cache_dir: Optional[str] = None):
+                 tune: str = "off", tune_cache_dir: Optional[str] = None,
+                 mesh=None, device=None):
         self.max_batch = max_batch
         self.queue: list[GraphRequest] = []
         self._lock = threading.RLock()
@@ -138,12 +146,15 @@ class CompiledGraphEngine:
         # buffer donation only pays (and is only implemented) off-CPU — the
         # backend gate applies to explicit True as well, so donate=True on
         # CPU doesn't buy a useless defensive copy per full slot; when on,
-        # the engine always hands XLA a fresh slot buffer, never a caller's
-        self._donate = (jax.default_backend() in ("gpu", "tpu") and
+        # the engine always hands XLA a fresh slot buffer, never a caller's.
+        # A mesh-sharded plan reshards the slot itself and ignores donation.
+        self._donate = (mesh is None and
+                        jax.default_backend() in ("gpu", "tpu") and
                         (donate == "auto" or bool(donate)))
         self._compile_kw = dict(use_kernels=use_kernels, use_int4=use_int4,
                                 interpret=interpret, tune=tune,
-                                tune_cache_dir=tune_cache_dir)
+                                tune_cache_dir=tune_cache_dir,
+                                mesh=mesh, device=device)
         self._report_cost = report_cost
         self.n_completed = 0
         self.n_flushes = 0
@@ -241,6 +252,10 @@ class CompiledGraphEngine:
                     ts["kernel_segments"], ts.get("hits", 0),
                     ts.get("misses", 0), ts.get("searched", 0),
                     "hit" if ts.get("graph_hit") else "miss")
+            self.metrics.gauge(
+                "serve_plan_devices",
+                help="devices the served plan spans (1 = single-device)",
+                labels=self._metric_labels).set(new_plan.n_devices)
             if len(g.inputs) != 1:
                 raise ValueError(
                     "CompiledGraphEngine serves single-input graphs")
@@ -414,12 +429,12 @@ class CompiledGraphEngine:
         plan, in_name, out_name, sample_shape = state
         tr = self._tracer
         tracing = tr is not None and tr.enabled
-        t_flush0 = time.time()
+        t_flush0 = time.monotonic()
         dispatched = []
         try:
             for i in range(0, len(reqs), self.max_batch):
                 batch = reqs[i:i + self.max_batch]
-                t_dispatch = time.time()
+                t_dispatch = time.monotonic()
                 for r in batch:
                     r.started = t_dispatch
                 x = self._pad_to_slot(jnp.stack([r.x for r in batch]),
@@ -430,12 +445,12 @@ class CompiledGraphEngine:
                     self._m_occupancy.observe(len(batch) / self.max_batch)
                 if not self.pipeline:          # per-slot host sync: baseline
                     jax.block_until_ready(out)
-            t_sync0 = time.time()
+            t_sync0 = time.monotonic()
             if self.pipeline:                  # single trailing sync
                 jax.block_until_ready([o for _, o in dispatched])
             if tracing:
                 self._emit_flush_spans(tr, reqs, len(dispatched),
-                                       t_flush0, t_sync0, time.time())
+                                       t_flush0, t_sync0, time.monotonic())
         except Exception as e:
             # scope the failure: every dispatched slot whose compute
             # actually succeeded still completes (the scatter forces it) and
@@ -470,8 +485,9 @@ class CompiledGraphEngine:
     def _emit_flush_spans(self, tr, reqs: list, n_slots: int,
                           t_flush0: float, t_sync0: float,
                           t_end: float) -> None:
-        """One flush trace: flush -> dispatch + sync children (wall-clock
-        timestamps, shared with the per-request spans in ``_record``)."""
+        """One flush trace: flush -> dispatch + sync children (monotonic
+        timestamps, shared with the per-request spans in ``_record`` and
+        with the tracer's own live-span clock)."""
         trace_id = tr.new_trace_id()
         occupancy = len(reqs) / max(1, n_slots * self.max_batch)
         flush_id = tr.emit(

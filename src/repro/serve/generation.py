@@ -53,7 +53,7 @@ def greedy_generate(params, cfg: ModelConfig, batch, n_steps: int,
 class Request:
     prompt: jnp.ndarray                  # (S,)
     max_new_tokens: int
-    submitted: float = field(default_factory=time.time)
+    submitted: float = field(default_factory=time.monotonic)
     result: Optional[jnp.ndarray] = None
 
 

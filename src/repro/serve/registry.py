@@ -28,6 +28,7 @@ class EngineRegistry:
         self._engines: dict[str, CompiledGraphEngine] = {}
         self._reserved: set[str] = set()       # names compiling right now
         self._default_kw = default_engine_kw
+        self._router = None                    # see set_router / route
 
     # ----------------------------------------------------------- mutation
 
@@ -102,6 +103,40 @@ class EngineRegistry:
 
     def submit(self, name: str, x, **kw):
         return self.get(name).submit(x, **kw)
+
+    def set_router(self, fn) -> None:
+        """Install a routing policy for ``route()``: ``fn(engines, x) ->
+        name`` picks which registered model serves an un-named request
+        (``engines`` is a name -> engine snapshot).  ``None`` restores the
+        default least-pending policy."""
+        with self._lock:
+            self._router = fn
+
+    def route(self, x, **kw):
+        """Submit ``x`` without naming a model: the installed router (or
+        the default least-pending policy — fewest queued requests, ties
+        broken by name for determinism) picks the engine.  Counts per-model
+        routed traffic as ``serve_routed_total{model=...}`` in the chosen
+        engine's registry.  Returns the ``GraphRequest`` future."""
+        with self._lock:
+            if not self._engines:
+                raise KeyError("no models registered; nothing to route to")
+            engines = dict(self._engines)
+            router = self._router
+        if router is not None:
+            name = router(engines, x)
+            if name not in engines:
+                raise KeyError(
+                    f"router chose unknown model {name!r}; registered: "
+                    f"{sorted(engines)}")
+        else:
+            name = min(engines, key=lambda n: (engines[n].pending(), n))
+        eng = engines[name]
+        eng.metrics.counter(
+            "serve_routed_total",
+            help="requests sent to this model by registry routing",
+            labels=eng._metric_labels).inc()
+        return eng.submit(x, **kw)
 
     def __call__(self, name: str, x):
         return self.get(name)(x)

@@ -75,6 +75,16 @@ class ServeScheduler:
             "serve_admission_wait_ms", unit="ms",
             help="time spent blocked on the bounded queue before admission",
             window=512, labels=lbl)
+        # post-flush hooks: fn(n_flushed) after every non-empty flush.  The
+        # splitmerge front and routing layers use these to observe drain
+        # progress without polling; hook errors are logged, never raised
+        # into the flush loop.
+        self._flush_hooks: list = []
+
+    def add_flush_hook(self, fn) -> None:
+        """Register ``fn(n_flushed)`` to run after each non-empty flush."""
+        with self._cv:
+            self._flush_hooks.append(fn)
 
     # ---------------------------------------------------------- lifecycle
 
@@ -134,7 +144,9 @@ class ServeScheduler:
         Blocks while the bounded queue is full (``timeout`` caps the wait);
         with ``block=False`` a full queue raises ``QueueFull`` immediately.
         """
-        t_enter = time.time()
+        # monotonic throughout: a wall-clock (NTP) step must never expire
+        # every admission timeout at once or record a negative wait
+        t_enter = time.monotonic()
         give_up = None if timeout is None else t_enter + timeout
         waited = False
         try:
@@ -149,7 +161,7 @@ class ServeScheduler:
                         raise QueueFull(
                             f"serve queue at capacity ({self.max_queue})")
                     remaining = (None if give_up is None
-                                 else give_up - time.time())
+                                 else give_up - time.monotonic())
                     if remaining is not None and remaining <= 0:
                         self.n_rejected += 1
                         raise QueueFull(
@@ -172,7 +184,7 @@ class ServeScheduler:
         if self._obs_on:
             self._m_submitted.inc()
             if waited:                 # only admission *waits* are observed
-                self._m_wait.observe((time.time() - t_enter) * 1e3)
+                self._m_wait.observe((time.monotonic() - t_enter) * 1e3)
         return r
 
     # --------------------------------------------------------- flush loop
@@ -190,7 +202,8 @@ class ServeScheduler:
         pending, oldest, deadline = eng.flush_signals()
         if not pending:
             return False, None, False
-        now = time.time()
+        # same monotonic clock the engine stamps submitted/deadline with
+        now = time.monotonic()
         t_next = oldest + self.window_ms / 1e3
         if deadline is not None:
             t_next = min(t_next, deadline - self.flush_margin_ms / 1e3)
@@ -206,6 +219,12 @@ class ServeScheduler:
         if n:
             with self._cv:
                 self._cv.notify_all()      # queue space freed: wake waiters
+                hooks = list(self._flush_hooks)
+            for fn in hooks:
+                try:
+                    fn(n)
+                except Exception:
+                    log.exception("flush hook failed")
         return n
 
     def _loop(self) -> None:

@@ -346,3 +346,215 @@ def test_registry_unregister_flushes_pending():
         eng.submit(np.zeros(16, np.float32))   # racing submit errors loudly
     with pytest.raises(RuntimeError, match="closed"):
         eng.reload(_mlp(seed=1))               # racing reload too
+
+
+# ------------------------------------------------- clocks (monotonic-only)
+
+def test_interval_math_survives_backwards_wall_clock_jump(monkeypatch):
+    """An NTP step (wall clock jumping backwards) must not corrupt latency
+    telemetry or fire/clear deadlines: all interval math is monotonic."""
+    eng = _engine()
+    x = np.zeros(16, np.float32)
+    r = eng.submit(x, deadline_ms=60_000.0)
+    # wall clock jumps a year into the past between submit and flush
+    monkeypatch.setattr(time, "time", lambda: 1.0)
+    eng.run_pending()
+    r.wait(timeout=1)
+    assert r.latency_ms is not None and r.latency_ms >= 0
+    assert r.queued_ms is not None and r.queued_ms >= 0
+    assert eng.latency_stats()["deadline_misses"] == 0
+    # the one wall-clock field is for logs only and untouched by intervals
+    assert r.submitted_at != r.submitted
+
+
+def test_scheduler_deadline_unmoved_by_wall_clock_jump(monkeypatch):
+    """A forward wall-clock jump must not make the scheduler treat every
+    queued deadline as already due (the old time.time() _poll bug)."""
+    eng = _engine()
+    sched = ServeScheduler(eng, window_ms=10_000.0)   # never flush by window
+    eng.submit(np.zeros(16, np.float32), deadline_ms=30_000.0)
+    monkeypatch.setattr(time, "time", lambda: time.monotonic() + 3600.0)
+    should, delay, _full = sched._poll()
+    assert not should                 # an hour's wall jump changes nothing
+    assert delay is not None and delay > 1.0
+
+
+def test_no_wall_clock_in_serve_interval_arithmetic():
+    """Grep-style guard: time.time() may appear in the serve tier only as
+    a logged timestamp (the GraphRequest.submitted_at factory)."""
+    import pathlib
+
+    import repro.serve as serve_pkg
+    root = pathlib.Path(serve_pkg.__file__).parent
+    offenders = []
+    for py in root.glob("*.py"):
+        for i, line in enumerate(py.read_text().splitlines(), 1):
+            if "time.time" in line and "wall, logs only" not in line:
+                offenders.append(f"{py.name}:{i}: {line.strip()}")
+    assert not offenders, offenders
+
+
+# -------------------------------------------------- scheduler flush hooks
+
+def test_scheduler_flush_hook_fires_after_flush():
+    eng = _engine()
+    seen = []
+    with ServeScheduler(eng, window_ms=1.0) as sched:
+        sched.add_flush_hook(seen.append)
+        r = sched.submit(np.zeros(16, np.float32))
+        r.wait(timeout=5)
+    assert sum(seen) == 1             # hook saw exactly the flushed request
+
+
+def test_scheduler_flush_hook_error_does_not_break_loop():
+    eng = _engine()
+
+    def bad_hook(n):
+        raise RuntimeError("hook boom")
+
+    with ServeScheduler(eng, window_ms=1.0) as sched:
+        sched.add_flush_hook(bad_hook)
+        r1 = sched.submit(np.zeros(16, np.float32))
+        r1.wait(timeout=5)
+        r2 = sched.submit(np.ones(16, np.float32))
+        r2.wait(timeout=5)            # loop survived the failing hook
+
+
+# ----------------------------------------------------- registry routing
+
+def test_registry_route_least_pending_default():
+    reg = EngineRegistry(report_cost=False, max_batch=4)
+    reg.register("a", _mlp(seed=0))
+    reg.register("b", _mlp(seed=1))
+    x = np.zeros(16, np.float32)
+    reg.route(x)                      # tie -> "a" (name order, determinism)
+    reg.route(x)                      # "a" busier -> "b"
+    assert reg.get("a").pending() == 1 and reg.get("b").pending() == 1
+    reg.run_pending()
+    routed = {s["labels"]["model"]: s["value"]
+              for s in reg.metrics_snapshot()
+              ["serve_routed_total"]["series"]}
+    assert routed == {"a": 1.0, "b": 1.0}
+
+
+def test_registry_route_custom_router_and_errors():
+    reg = EngineRegistry(report_cost=False, max_batch=4)
+    with pytest.raises(KeyError, match="no models"):
+        reg.route(np.zeros(16, np.float32))
+    reg.register("a", _mlp(seed=0))
+    reg.register("b", _mlp(seed=1))
+    reg.set_router(lambda engines, x: "b")
+    r = reg.route(np.zeros(16, np.float32))
+    assert reg.get("b").pending() == 1
+    reg.set_router(lambda engines, x: "nope")
+    with pytest.raises(KeyError, match="router chose unknown"):
+        reg.route(np.zeros(16, np.float32))
+    reg.set_router(None)              # restore default policy
+    reg.route(np.zeros(16, np.float32))
+    reg.run_pending()
+    r.wait(timeout=5)
+
+
+# ------------------------------------------------------- split-merge front
+
+def _front(n_workers=3, seed=0, **front_kw):
+    from repro.serve import SplitMergeFront, Worker
+    g = _mlp(seed=seed)
+    workers = [Worker(name=f"w{i}", engine=_engine(_mlp(seed=seed)))
+               for i in range(n_workers)]
+    return g, workers, SplitMergeFront(workers, **front_kw)
+
+
+def test_splitmerge_merges_in_submission_order():
+    g, _workers, front = _front()
+    rng = np.random.RandomState(3)
+    xs = [rng.randn(16).astype(np.float32) for _ in range(10)]
+    with front:
+        out = front(xs)               # 10 requests over 3 workers: 4+3+3
+    oracle = _oracle(g, np.stack(xs))
+    np.testing.assert_allclose(out, oracle, atol=1e-4)   # order preserved
+
+
+def test_splitmerge_remainder_and_fewer_requests_than_workers():
+    g, _workers, front = _front(n_workers=4)
+    rng = np.random.RandomState(4)
+    with front:
+        for n in (1, 3, 7):           # < workers, non-divisible, remainder
+            xs = [rng.randn(16).astype(np.float32) for _ in range(n)]
+            out = front(xs)
+            assert out.shape[0] == n
+            np.testing.assert_allclose(out, _oracle(g, np.stack(xs)),
+                                       atol=1e-4)
+
+
+def test_splitmerge_injected_fault_loses_zero_requests():
+    g, workers, front = _front()
+    rng = np.random.RandomState(5)
+    xs = [rng.randn(16).astype(np.float32) for _ in range(9)]
+    workers[1].inject_fault()         # dies mid-shard, after submission
+    with front:
+        out = front(xs)
+    np.testing.assert_allclose(out, _oracle(g, np.stack(xs)), atol=1e-4)
+    s = front.stats()
+    assert s["failed"] == ["w1"] and s["redispatched_shards"] == 1
+    assert s["healthy"] == 2
+    redisp = {ser["labels"]["worker"]: ser["value"]
+              for ser in front.metrics.snapshot()
+              ["splitmerge_redispatch_total"]["series"]
+              if ser["value"]}
+    assert sum(redisp.values()) == 1 and "w1" not in redisp
+
+
+def test_splitmerge_failed_worker_skipped_on_next_wave():
+    g, workers, front = _front()
+    rng = np.random.RandomState(6)
+    xs = [rng.randn(16).astype(np.float32) for _ in range(6)]
+    workers[0].inject_fault()
+    with front:
+        front(xs)
+        assert front.stats()["failed"] == ["w0"]
+        out = front(xs)               # second wave: only healthy workers
+    np.testing.assert_allclose(out, _oracle(g, np.stack(xs)), atol=1e-4)
+    disp = {ser["labels"]["worker"]: ser["value"]
+            for ser in front.metrics.snapshot()
+            ["splitmerge_dispatch_total"]["series"]}
+    assert disp["w0"] == 1            # never re-dispatched to the dead one
+
+
+def test_splitmerge_all_workers_dead_raises():
+    from repro.serve import SplitMergeFront, Worker
+    w = Worker(name="only", engine=_engine())
+    front = SplitMergeFront([w])
+    w.inject_fault()
+    with front:
+        wave = front.submit_wave([np.zeros(16, np.float32)])
+        with pytest.raises((RuntimeError, Exception)):
+            wave.wait(timeout=10)
+
+
+def test_splitmerge_scheduler_backed_workers():
+    from repro.serve import SplitMergeFront, Worker
+    g = _mlp(seed=7)
+    engines = [_engine(_mlp(seed=7)) for _ in range(2)]
+    scheds = [ServeScheduler(e, window_ms=1.0).start() for e in engines]
+    workers = [Worker(name=f"s{i}", engine=e, scheduler=s)
+               for i, (e, s) in enumerate(zip(engines, scheds))]
+    rng = np.random.RandomState(8)
+    xs = [rng.randn(16).astype(np.float32) for _ in range(6)]
+    try:
+        with SplitMergeFront(workers) as front:
+            out = front(xs)
+        np.testing.assert_allclose(out, _oracle(g, np.stack(xs)), atol=1e-4)
+    finally:
+        for s in scheds:
+            s.stop()
+
+
+def test_splitmerge_validates_workers():
+    from repro.serve import SplitMergeFront, Worker
+    with pytest.raises(ValueError, match="at least one"):
+        SplitMergeFront([])
+    e = _engine()
+    with pytest.raises(ValueError, match="duplicate"):
+        SplitMergeFront([Worker(name="x", engine=e),
+                         Worker(name="x", engine=e)])

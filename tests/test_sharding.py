@@ -103,3 +103,33 @@ def test_batch_and_cache_pspecs():
     # stacked cache (L, B, C, KV, hd): batch dim 1 sharded over DP
     assert jax.tree.leaves(cp, is_leaf=lambda x: isinstance(x, P))[0][1] == \
         ("pod", "data")
+
+
+def test_list_pytree_leaves_inherit_named_ancestor():
+    """Positional pytree keys (list/tuple indices) must not erase the leaf
+    name: params stored as {"w_stack": [arr, arr, ...]} shard exactly like
+    their named ancestor says, instead of silently replicating."""
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 1, "model": 4}
+    rng = np.random.RandomState(0)
+    params = {
+        "w_stack": [rng.randn(8, 16).astype(np.float32) for _ in range(3)],
+        "wo": [rng.randn(16, 8).astype(np.float32)],
+        "norms": [rng.randn(16).astype(np.float32)],
+    }
+    pspecs = sharding.param_pspecs(params, FakeMesh(), fsdp=False)
+    # every w_stack element col-parallel, every wo element row-parallel
+    assert all(ps == P(None, "model") for ps in pspecs["w_stack"])
+    assert pspecs["wo"][0] == P("model", None)
+    assert pspecs["norms"][0] == P(None)          # vectors stay replicated
+
+
+def test_leaf_name_walks_past_positional_keys():
+    params = {"blocks": [{"w_in": np.zeros((4, 4), np.float32)}],
+              "flat": (np.zeros(3, np.float32),)}
+    names = [sharding._leaf_name(path) for path, _ in
+             jax.tree_util.tree_flatten_with_path(params)[0]]
+    # dict key survives through the list index; a bare tuple leaf falls
+    # back to its nearest named ancestor instead of ''
+    assert names == ["w_in", "flat"]

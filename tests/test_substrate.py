@@ -292,3 +292,51 @@ def test_elastic_mesh_derives_from_device_count():
     m = fault.elastic_mesh(prefer_model=16)
     assert m.devices.size == jax.device_count()
     assert m.axis_names == ("data", "model")
+
+
+def test_restart_policy_backoff_capped():
+    pol = fault.RestartPolicy(backoff_s=1.0, backoff_mult=10.0,
+                              max_backoff_s=5.0)
+    assert pol.delay_s(0) == 1.0
+    assert pol.delay_s(1) == 5.0      # 10.0 uncapped
+    assert pol.delay_s(30) == 5.0     # never grows past the cap
+
+
+def test_restart_policy_jitter_bounded_and_nonnegative():
+    pol = fault.RestartPolicy(backoff_s=2.0, backoff_mult=1.0,
+                              max_backoff_s=60.0, jitter=0.5)
+    for attempt in range(20):
+        d = pol.delay_s(attempt)
+        assert 2.0 <= d <= 3.0        # base .. base * (1 + jitter)
+    assert fault.RestartPolicy(backoff_s=0.0, jitter=0.5).delay_s(0) == 0.0
+
+
+def test_watchdog_step_end_without_start_is_noop():
+    wd = fault.Watchdog()
+    assert wd.step_end(0) is False    # missed start: no crash, no sample
+    assert not wd.durations
+
+
+def test_watchdog_cancel_discards_inflight_measurement():
+    wd = fault.Watchdog()
+    wd.step_start()
+    wd._t0 -= 100.0                   # a would-be 100s "step"
+    wd.cancel()
+    assert wd.step_end(0) is False and not wd.durations
+
+
+def test_watchdog_step_context_cancels_on_exception():
+    wd = fault.Watchdog(floor_s=0.0)
+    for i in range(4):
+        with wd.step(i):
+            pass
+    n = len(wd.durations)
+    with pytest.raises(ValueError):
+        with wd.step(99):
+            wd._t0 -= 100.0           # crash mid-"100s" step
+            raise ValueError("boom")
+    # the crashed step polluted neither the window nor the stragglers
+    assert len(wd.durations) == n and 99 not in wd.stragglers
+    with wd.step(100):
+        pass                          # and the next clean step records
+    assert len(wd.durations) == n + 1
